@@ -1,0 +1,48 @@
+"""Paper §3.1/§6.2: gradient-checkpoint memory/time trade-off vs nb.
+
+MEASURED memory: XLA's compiled memory_analysis (temp bytes) of the real
+train step at each nb — the ground truth the paper tunes by hand; plus the
+analytic two-component model (intra-block vs checkpoint data)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import record, time_fn
+from repro.core import checkpoint as ckpt_exec
+from repro.core import models
+from repro.data.dyngnn import DTDGPipeline, synthetic_dataset
+
+
+def run(model: str = "tmgcn", n: int = 512, t: int = 32) -> None:
+    ds = synthetic_dataset(n, t, density=3.0, churn=0.1,
+                           smoothing_mode="none", seed=0)
+    pipe = DTDGPipeline(ds, nb=1)
+    labels = jnp.asarray(ds.labels)
+    num_edges = int(np.mean([s.shape[0] for s in ds.snapshots]))
+    for nb in (1, 2, 4, 8):
+        cfg = models.DynGNNConfig(model=model, num_nodes=n, num_steps=t,
+                                  window=3, checkpoint_blocks=nb)
+        params = models.init_params(jax.random.PRNGKey(0), cfg)
+
+        def loss(p):
+            return ckpt_exec.blocked_node_loss(cfg, p, pipe.batch, labels,
+                                               nb=nb)
+
+        grad_fn = jax.jit(jax.grad(loss))
+        compiled = grad_fn.lower(params).compile()
+        mem = compiled.memory_analysis()
+        temp = getattr(mem, "temp_size_in_bytes", 0)
+        est = ckpt_exec.activation_memory_estimate(cfg, num_edges, nb)
+        us = time_fn(grad_fn, params, warmup=1, iters=3)
+        record(f"checkpoint/{model}/nb{nb}", us,
+               f"xla_temp_bytes={temp} model_intra={est['intra_block']} "
+               f"model_ckpt={est['checkpoint']}")
+
+
+if __name__ == "__main__":
+    from benchmarks.common import header
+    header()
+    run()

@@ -1,0 +1,58 @@
+"""Kernel-level microbenchmarks: the XLA-native paths that the Pallas
+kernels replace on TPU, timed on CPU for regression tracking, plus roofline
+byte/flop accounting per kernel call."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import record, time_fn
+from repro.core import temporal
+from repro.graph import segment
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    # SpMM (GCN aggregate)
+    for (n, e, f) in ((10_000, 100_000, 64), (50_000, 500_000, 128)):
+        edges = jnp.asarray(rng.integers(0, n, (e, 2)), jnp.int32)
+        w = jnp.asarray(rng.normal(size=(e,)).astype(np.float32))
+        x = jnp.asarray(rng.normal(size=(n, f)).astype(np.float32))
+        fn = jax.jit(lambda x_, e_, w_: segment.spmm(x_, e_, w_, n))
+        us = time_fn(fn, x, edges, w)
+        flops = 2 * e * f
+        record(f"spmm/n{n}_e{e}_f{f}", us,
+               f"gflops={flops / us / 1e3:.2f} bytes={e * f * 8 + n * f * 4}")
+    # M-product
+    for (t, n, f, w_) in ((64, 4096, 16, 5), (256, 1024, 16, 9)):
+        x = jnp.asarray(rng.normal(size=(t, n, f)).astype(np.float32))
+        fn = jax.jit(lambda x_: temporal.m_product(x_, w_))
+        us = time_fn(fn, x)
+        record(f"mproduct/t{t}_n{n}_f{f}_w{w_}", us, "")
+    # LSTM over timeline
+    for (t, n, f, h) in ((64, 4096, 16, 16),):
+        p = temporal.init_lstm_params(jax.random.PRNGKey(0), f, h)
+        x = jnp.asarray(rng.normal(size=(t, n, f)).astype(np.float32))
+        fn = jax.jit(lambda x_: temporal.lstm_scan(p, x_)[0])
+        us = time_fn(fn, x)
+        flops = t * 2 * n * (f + h) * 4 * h
+        record(f"lstm/t{t}_n{n}", us, f"gflops={flops / us / 1e3:.2f}")
+    # decode attention (jnp path used by serve cells)
+    from repro.kernels.flash_decode import ops as fd
+    b, hq, kvh, d, s = 4, 16, 4, 64, 8192
+    q = jnp.asarray(rng.normal(size=(b, hq, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, s, kvh, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, s, kvh, d)).astype(np.float32))
+    clen = jnp.full((b,), s, jnp.int32)
+    fn = jax.jit(lambda *a: fd.flash_decode_ref(*a))
+    us = time_fn(fn, q, k, v, clen)
+    bytes_kv = 2 * b * s * kvh * d * 4
+    record(f"decode_attn/s{s}", us, f"kv_bytes={bytes_kv}")
+
+
+if __name__ == "__main__":
+    from benchmarks.common import header
+    header()
+    run()

@@ -1,0 +1,88 @@
+"""Paper Table 2: snapshot vs vertex(hypergraph) partitioning — comm volume
+(analytic, with BFS-locality standing in for PaToH) and measured step time
+of both executable implementations on host devices."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import record, time_fn
+from repro.core import dtdg, models, partition
+from repro.dist import comm_volume as cv
+from repro.graph import generate
+from repro.launch.mesh import make_host_mesh
+
+
+def volume_table(model: str = "tmgcn") -> None:
+    """Comm volume (units = floats) for snapshot vs hypergraph-style vertex
+    partitioning at P = 4/16/64 on an AMLSim-like synthetic graph."""
+    n, t, feat, layers = 4096, 64, 6, 2
+    density = 8.0 if model != "cdgcn" else 3.0   # smoothing densifies
+    snaps = generate.evolving_dynamic_graph(n, t, density, churn=0.15,
+                                            seed=0)
+    owner_edges = np.concatenate(snaps)
+    for p in (4, 16, 64):
+        v_snap = cv.snapshot_partition_volume(t, n, feat, layers, p, model)
+        owner = cv.bfs_partition(owner_edges, n, p)
+        v_hyper = cv.vertex_partition_volume(snaps, n, feat, layers, p,
+                                             owner)
+        record(f"partition_volume/{model}/P{p}", 0.0,
+               f"snapshot={v_snap:.3e} hypergraph={v_hyper:.3e} "
+               f"ratio={v_hyper / max(v_snap, 1):.2f}")
+
+
+def measured_times(model: str = "tmgcn") -> None:
+    n_dev = len(jax.devices())
+    p = min(4, n_dev)
+    mesh = make_host_mesh(data=p, model=1)
+    n, t = 256, 16
+    snaps = generate.evolving_dynamic_graph(n, t, density=3.0, churn=0.1,
+                                            seed=0)
+    frames = np.stack([generate.degree_features(s, n) for s in snaps])
+    batch = dtdg.build_batch(snaps, frames, n)
+    cfg = models.DynGNNConfig(model=model, num_nodes=n, num_steps=t,
+                              window=3, checkpoint_blocks=2)
+    params = models.init_params(jax.random.PRNGKey(0), cfg)
+
+    fwd_sp = jax.jit(partition.snapshot_partition_forward(cfg, mesh))
+    fr, ed, ew = partition.blockify_batch(batch, 2)
+    us_sp = time_fn(fwd_sp, params, fr, ed, ew, warmup=2, iters=3)
+    record(f"partition_time/{model}/snapshot/P{p}", us_sp, "")
+
+    import dataclasses
+    cfg_vp = dataclasses.replace(cfg, checkpoint_blocks=1)
+    fwd_vp = jax.jit(partition.vertex_partition_forward(cfg_vp, mesh))
+    edges_p, w_p = partition.partition_edges_by_dst(
+        batch.edges, batch.edge_mask, n, p,
+        max_local_edges=batch.edges.shape[1])
+    w_full = np.asarray(batch.edge_weights)
+    ew_p = np.zeros_like(w_p)
+    for ti in range(t):
+        e = np.asarray(batch.edges[ti])
+        m = np.asarray(batch.edge_mask[ti]) > 0
+        ew_t = w_full[ti][m]
+        own = e[m][:, 1] // (n // p)
+        for pi in range(p):
+            sel = ew_t[own == pi]
+            ew_p[ti, pi, :sel.shape[0]] = sel
+    e_stack = jnp.asarray(edges_p).reshape(t, p * edges_p.shape[2], 2)
+    w_stack = jnp.asarray(ew_p).reshape(t, p * ew_p.shape[2])
+    us_vp = time_fn(fwd_vp, params, batch.frames, e_stack, w_stack,
+                    warmup=2, iters=3)
+    record(f"partition_time/{model}/vertex/P{p}", us_vp,
+           f"snapshot_speedup={us_vp / us_sp:.2f}")
+
+
+def run() -> None:
+    for m in ("tmgcn", "cdgcn", "evolvegcn"):
+        volume_table(m)
+    measured_times("tmgcn")
+    measured_times("cdgcn")
+
+
+if __name__ == "__main__":
+    from benchmarks.common import header
+    header()
+    run()

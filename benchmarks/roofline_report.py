@@ -1,0 +1,81 @@
+"""Aggregate results/dryrun JSONs into the EXPERIMENTS.md roofline table."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+HBM_PER_CHIP = 16 * 2 ** 30
+
+
+def model_flops(rec: dict) -> float | None:
+    """6*N*D (dense) / 6*N_active*D (MoE) for LM train; 2*N*D for serve."""
+    from repro.configs import registry
+    try:
+        arch = registry.get_arch(rec["arch"])
+    except KeyError:
+        return None
+    if arch.family != "lm":
+        return None
+    cfg = arch.make_config()
+    toks = rec.get("meta", {}).get("tokens", 0)
+    n_par = cfg.active_param_count()
+    if rec["shape"].startswith("train"):
+        return 6.0 * n_par * toks
+    return 2.0 * n_par * toks
+
+
+def rows(mesh_dir: Path) -> list[dict]:
+    out = []
+    chips = 512 if "2x16" in mesh_dir.name else 256
+    for f in sorted(mesh_dir.glob("*.json")):
+        r = json.loads(f.read_text())
+        row = {"arch": r["arch"], "shape": r["shape"], "mesh": mesh_dir.name,
+               "status": r["status"]}
+        if r["status"] == "ok":
+            rl = r["roofline"]
+            row.update({
+                "compute_s": rl["compute_s"], "memory_s": rl["memory_s"],
+                "collective_s": rl["collective_s"],
+                "dominant": rl["dominant"],
+                "temp_gb": (r["memory"].get("temp_size_in_bytes") or 0)
+                / 2 ** 30,
+                "fits_hbm": ((r["memory"].get("temp_size_in_bytes") or 0)
+                             + (r["memory"].get("argument_size_in_bytes")
+                                or 0)) < HBM_PER_CHIP,
+            })
+            mf = model_flops(r)
+            if mf:
+                row["model_flops_global"] = mf
+                hlo_global = rl["hlo_flops_per_device"] * chips
+                row["useful_flops_frac"] = mf / max(hlo_global, 1)
+        else:
+            row["error"] = r.get("error", "")[:120]
+        out.append(row)
+    return out
+
+
+def main() -> None:
+    for mesh_dir in sorted(RESULTS.glob("pod*")):
+        print(f"\n=== {mesh_dir.name} ===")
+        print(f"{'arch':26s}{'shape':16s}{'dom':13s}{'comp_s':>9s}"
+              f"{'mem_s':>9s}{'coll_s':>9s}{'temp_GB':>9s}{'fit':>5s}"
+              f"{'useful':>8s}")
+        for row in rows(mesh_dir):
+            if row["status"] != "ok":
+                print(f"{row['arch']:26s}{row['shape']:16s}ERROR "
+                      f"{row.get('error', '')}")
+                continue
+            uf = row.get("useful_flops_frac")
+            print(f"{row['arch']:26s}{row['shape']:16s}"
+                  f"{row['dominant'].replace('_s', ''):13s}"
+                  f"{row['compute_s']:9.3f}{row['memory_s']:9.3f}"
+                  f"{row['collective_s']:9.3f}{row['temp_gb']:9.1f}"
+                  f"{str(row['fits_hbm'])[:1]:>5s}"
+                  f"{uf if uf is None else round(uf, 2)!s:>8s}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Benchmark driver — one section per paper table/figure.
+
+Emits ``name,us_per_call,derived`` CSV rows:
+  * graphdiff_bench      — Fig. 4 (graph-difference transfer)
+  * scaling_bench        — Fig. 5 strong scaling + Fig. 7 weak scaling
+  * partition_compare    — Table 2 (snapshot vs hypergraph vertex part.)
+  * checkpoint_bench     — §3.1/§6.2 (memory/time vs nb)
+  * kernel_bench         — hot-spot op microbenchmarks
+  * overlap_bench        — §6.5 compute/comm overlap (beyond-paper)
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks.common import header
+
+
+def main() -> None:
+    header()
+    from benchmarks import (checkpoint_bench, graphdiff_bench, kernel_bench,
+                            overlap_bench, partition_compare, scaling_bench)
+    sections = [
+        ("graphdiff", graphdiff_bench.run),
+        ("scaling", scaling_bench.run),
+        ("partition_compare", partition_compare.run),
+        ("checkpoint", checkpoint_bench.run),
+        ("kernels", kernel_bench.run),
+        ("overlap", overlap_bench.run),
+    ]
+    failures = 0
+    for name, fn in sections:
+        print(f"# --- {name} ---", flush=True)
+        try:
+            fn()
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"# SECTION FAILED: {name}", flush=True)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

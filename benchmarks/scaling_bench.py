@@ -1,0 +1,119 @@
+"""Paper Fig. 5 (strong scaling) + Fig. 7 (weak scaling).
+
+Two layers of evidence, since no pod is attached:
+  * MEASURED: the actual shard_map train step on 1/2/4/8 host devices
+    (same code path as the pod run) — wall-clock speedup + identical loss.
+  * MODELED: the paper's 128-GPU setting via the analytic communication
+    model (volume from repro.dist.comm_volume, bandwidth = intra-node vs
+    inter-node split exactly as §6.3 describes: intra volume 1/K, inter
+    (K-1)/K for K = P/8 nodes).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import record, time_fn
+from repro.core import models
+from repro.data.dyngnn import DTDGPipeline, synthetic_dataset
+from repro.dist import comm_volume as cv
+from repro.launch.mesh import make_host_mesh
+from repro.optim import adamw
+from repro.train import trainer
+
+GPU_FLOPS = 14e12           # V100 fp32
+PCIE_BW = 12e9              # CPU->GPU
+INTRA_BW = 150e9            # NVLink-class aggregate per node
+INTER_BW = 12.5e9           # 100 Gb EDR IB per node
+
+
+def modeled_strong_scaling(model: str = "tmgcn", n: int = 1_000_000,
+                           t: int = 256, epn: float = 4.2e6,
+                           feat: int = 6, layers: int = 2) -> None:
+    """Per-epoch time model on the paper's 16-node x 8-GPU system."""
+    base_t = None
+    for p in (1, 2, 4, 8, 16, 32, 64, 128):
+        flops = 4.0 * t * (2 * epn * feat + 2 * n * feat * feat) * layers
+        t_comp = flops / (p * GPU_FLOPS)
+        t_xfer = (t / p) * epn * 12.0 / PCIE_BW * 2    # fwd + rerun
+        vol_units = cv.snapshot_partition_volume(t, n, feat, layers, p,
+                                                 model)
+        vol_bytes = vol_units * 4.0
+        k = max(p // 8, 1)
+        if p <= 8:
+            t_comm = vol_bytes / INTRA_BW
+        else:
+            inter = vol_bytes * (k - 1) / k
+            t_comm = inter / (k * INTER_BW)
+        total = t_comp + t_xfer + t_comm
+        if base_t is None:
+            base_t = total
+        record(f"strong_scaling_model/{model}/P{p}", total * 1e6,
+               f"speedup={base_t / total:.1f} comp={t_comp:.3f} "
+               f"xfer={t_xfer:.3f} comm={t_comm:.3f}")
+
+
+def measured_strong_scaling(model: str = "tmgcn") -> None:
+    n_dev = len(jax.devices())
+    n, t = 256, 16
+    smooth = {"tmgcn": "mproduct", "cdgcn": "none",
+              "evolvegcn": "edgelife"}[model]
+    ds = synthetic_dataset(n, t, density=3.0, churn=0.1,
+                           smoothing_mode=smooth, seed=0)
+    pipe = DTDGPipeline(ds, nb=2)
+    cfg = models.DynGNNConfig(model=model, num_nodes=n, num_steps=t,
+                              window=3, checkpoint_blocks=2)
+    opt_cfg = adamw.AdamWConfig(lr=1e-2, total_steps=100)
+    frames, edges, ew, labels = pipe.blocked_arrays()
+    params = models.init_params(jax.random.PRNGKey(0), cfg)
+    opt_state = adamw.init_state(params)
+    base = None
+    p = 1
+    while p <= n_dev:
+        mesh = make_host_mesh(data=p, model=1)
+        step = trainer.make_dyngnn_train_step(cfg, mesh, opt_cfg)
+        us = time_fn(step, params, opt_state, frames, edges, ew, labels,
+                     warmup=2, iters=3)
+        if base is None:
+            base = us
+        record(f"strong_scaling_measured/{model}/P{p}", us,
+               f"speedup={base / us:.2f}")
+        p *= 2
+
+
+def modeled_weak_scaling(model: str = "tmgcn") -> None:
+    """Fig. 7 setting: T=256, f=3, N doubling from 2^14 with P."""
+    t, f_den, feat, layers = 256, 3.0, 6, 2
+    base_thr = None
+    for i, p in enumerate((1, 2, 4, 8, 16, 32, 64, 128)):
+        n = 2 ** 14 * p
+        epn = n * f_den * (5 if model != "cdgcn" else 1)   # smoothing x5
+        flops = 4.0 * t * (2 * epn * feat + 2 * n * feat * feat) * layers
+        t_comp = flops / (p * GPU_FLOPS)
+        t_xfer = (t / p) * epn * 12.0 / PCIE_BW * 2
+        vol_bytes = cv.snapshot_partition_volume(t, n, feat, layers, p,
+                                                 model) * 4
+        k = max(p // 8, 1)
+        t_comm = (vol_bytes / INTRA_BW if p <= 8
+                  else vol_bytes * (k - 1) / k / (k * INTER_BW))
+        total = t_comp + t_xfer + t_comm
+        thr = t * epn / total
+        if base_thr is None:
+            base_thr = thr
+        record(f"weak_scaling_model/{model}/P{p}", total * 1e6,
+               f"edges_per_s={thr:.2e} scaled_speedup={thr / base_thr:.1f}")
+
+
+def run() -> None:
+    for m in ("tmgcn", "cdgcn", "evolvegcn"):
+        modeled_strong_scaling(m)
+    measured_strong_scaling("tmgcn")
+    for m in ("tmgcn", "evolvegcn"):
+        modeled_weak_scaling(m)
+
+
+if __name__ == "__main__":
+    from benchmarks.common import header
+    header()
+    run()

@@ -1,0 +1,67 @@
+"""Reproduce the paper's §6.4 comparison in miniature: train the same model
+under snapshot partitioning and vertex partitioning, show identical loss
+curves (Fig. 6) and the comm-volume law (Table 2).
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      python examples/partition_compare.py
+"""
+
+import os
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import checkpoint as ckpt_exec
+from repro.core import dtdg, models, partition
+from repro.dist import comm_volume as cv
+from repro.graph import generate
+from repro.launch.mesh import make_host_mesh
+
+
+def main() -> None:
+    p = min(4, len(jax.devices()))
+    mesh = make_host_mesh(data=p, model=1)
+    n, t = 128, 16
+    snaps = generate.evolving_dynamic_graph(n, t, density=3.0, churn=0.1,
+                                            seed=0)
+    frames = np.stack([generate.degree_features(s, n) for s in snaps])
+    batch = dtdg.build_batch(snaps, frames, n)
+    labels = jnp.asarray((frames[:, :, 0] >
+                          np.median(frames[:, :, 0])).astype(np.int32))
+    cfg = models.DynGNNConfig(model="tmgcn", num_nodes=n, num_steps=t,
+                              window=3, checkpoint_blocks=2)
+    params = models.init_params(jax.random.PRNGKey(0), cfg)
+
+    # identical losses under both schemes (paper Fig. 6)
+    loss_sp = partition.snapshot_partition_loss(cfg, mesh)
+    fr, ed, ew = partition.blockify_batch(batch, 2)
+    lab_b = labels.reshape(2, t // 2, n)
+    l_sp = jax.jit(lambda p_: loss_sp(p_, fr, ed, ew, lab_b))(params)
+    l_ref = ckpt_exec.blocked_node_loss(cfg, params, batch, labels, nb=2)
+    print(f"loss  snapshot-partitioned: {float(l_sp):.6f}")
+    print(f"loss  single-device ref  : {float(l_ref):.6f}")
+    print(f"identical: {np.allclose(float(l_sp), float(l_ref), atol=1e-6)}")
+
+    # comm volume law (Table 2)
+    print("\ncomm volume (float units), T=64 N=4096 F=6 L=2:")
+    print(f"{'P':>4s} {'snapshot':>12s} {'hypergraph':>12s} "
+          f"{'allgather':>12s}")
+    snaps_big = generate.evolving_dynamic_graph(4096, 16, 4.0, 0.15, 0)
+    owner_edges = np.concatenate(snaps_big)
+    for pp in (4, 16, 64):
+        v_s = cv.snapshot_partition_volume(64, 4096, 6, 2, pp)
+        owner = cv.bfs_partition(owner_edges, 4096, pp)
+        v_h = cv.vertex_partition_volume(snaps_big, 4096, 6, 2, pp, owner) \
+            * 4  # scale 16 -> 64 steps
+        v_a = cv.allgather_vertex_volume(64, 4096, 6, 2, pp)
+        print(f"{pp:4d} {v_s:12.3e} {v_h:12.3e} {v_a:12.3e}")
+    print("\nsnapshot volume is ~constant in P; vertex volume grows with P "
+          "(the paper's central claim).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""Timeline-blocked gradient checkpointing (paper §3.1).
+
+The timeline [1..T] is split into ``nb`` blocks of ``bsize = T/nb`` steps.
+During the forward pass only the *carries* pi_b (RNN state at the block
+boundary + last w-1 windowed activations) are stored; during backprop each
+block's forward is re-run.  In JAX this is precisely ``lax.scan`` over blocks
+with ``jax.checkpoint`` (remat) on the block body: XLA stores the scan carries
+(= pi_b) and rematerializes block-internal activations, giving the paper's
+memory profile (intra-block activations for ONE block + nb carries) with the
+identical recompute schedule.
+
+Gradients are bit-identical to the non-blocked forward (tested in
+``tests/test_checkpoint.py``) because the computation graph is the same, only
+the storage schedule changes.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import models as mdl
+from repro.core.dtdg import DTDGBatch
+
+Array = jax.Array
+
+
+def _blockify(arr: Array, nb: int) -> Array:
+    t = arr.shape[0]
+    if t % nb != 0:
+        raise ValueError(f"T={t} not divisible by nb={nb}")
+    return arr.reshape((nb, t // nb) + arr.shape[1:])
+
+
+def blocked_forward(cfg: mdl.DynGNNConfig, params: dict, batch: DTDGBatch,
+                    nb: int | None = None) -> Array:
+    """Embeddings (T, N, out_dim) with blocked checkpointing."""
+    nb = nb if nb is not None else cfg.checkpoint_blocks
+    t_steps = batch.num_steps
+    bsize = t_steps // nb
+    x = _blockify(batch.frames, nb)
+    edges = _blockify(batch.edges, nb)
+    ew = _blockify(batch.edge_weights, nb)
+    t0s = jnp.arange(nb, dtype=jnp.int32) * bsize
+    carries = mdl.init_carries(cfg, params, dtype=batch.frames.dtype)
+
+    def block_step(carries, blk):
+        x_b, e_b, w_b, t0 = blk
+        z, new_carries = mdl.forward_slice(cfg, params, x_b, e_b, w_b,
+                                           carries, t0)
+        return new_carries, z
+
+    # prevent_cse is required for remat-in-scan to actually drop residuals.
+    body = jax.checkpoint(block_step, prevent_cse=True)
+    _, zs = jax.lax.scan(body, carries, (x, edges, ew, t0s))
+    return zs.reshape((t_steps,) + zs.shape[2:])
+
+
+def blocked_node_loss(cfg: mdl.DynGNNConfig, params: dict, batch: DTDGBatch,
+                      labels: Array, nb: int | None = None) -> Array:
+    z = blocked_forward(cfg, params, batch, nb)
+    logits = mdl.classify(params, z)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def activation_memory_estimate(cfg: mdl.DynGNNConfig, num_edges: int,
+                               nb: int, bytes_per_el: int = 4) -> dict:
+    """Analytic per-device activation memory model (paper §3.1 balance).
+
+    intra-block  ~ bsize * (E * (2 idx + w) + N * sum(layer widths))
+    checkpoints  ~ nb * |pi|  (RNN state + (w-1)-frame prefix per layer)
+    Used by benchmarks/checkpoint_bench.py to reproduce the nb trade-off.
+    """
+    t, n = cfg.num_steps, cfg.num_nodes
+    bsize = t // nb
+    widths = [d for (_, _, d) in cfg.layer_dims()]
+    act_width = sum(widths) + cfg.feat_in
+    intra = bsize * (num_edges * (2 * 4 + bytes_per_el)
+                     + n * act_width * bytes_per_el)
+    pi_width = 0
+    for (_, _, d) in cfg.layer_dims():
+        if cfg.model == "cdgcn":
+            pi_width += 2 * d                      # (h, c)
+        elif cfg.model == "tmgcn":
+            pi_width += (cfg.window - 1) * d       # frame prefix
+        else:                                      # evolvegcn: tiny
+            pi_width += 0
+    ckpt = nb * n * pi_width * bytes_per_el
+    return {"intra_block": intra, "checkpoint": ckpt,
+            "total": intra + ckpt, "bsize": bsize}

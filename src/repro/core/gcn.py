@@ -1,0 +1,55 @@
+"""GCN spatial module (Kipf-Welling, Eq. 2) over padded snapshots.
+
+The sparse-dense aggregate ``A_tilde @ X`` is the compute hot spot; it is
+served either by the XLA-native segment-sum path or by the Pallas TPU kernel
+(``repro.kernels.segment_spmm``), selected with ``use_pallas``.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph import segment
+
+Array = jax.Array
+
+
+def init_gcn_params(key: Array, f_in: int, f_out: int,
+                    dtype=jnp.float32) -> dict:
+    scale = 1.0 / jnp.sqrt(f_in)
+    return {
+        "w": (jax.random.uniform(key, (f_in, f_out), dtype=jnp.float32,
+                                 minval=-scale, maxval=scale)).astype(dtype),
+        "b": jnp.zeros((f_out,), dtype=dtype),
+    }
+
+
+def spatial_aggregate(x: Array, edges: Array, edge_weights: Array,
+                      num_nodes: int, use_pallas: bool = False) -> Array:
+    """``A_tilde @ X`` for one snapshot. x: (N, F) -> (N, F)."""
+    if use_pallas:
+        from repro.kernels.segment_spmm import ops as spmm_ops
+        return spmm_ops.segment_spmm(x, edges, edge_weights, num_nodes)
+    return segment.spmm(x, edges, edge_weights, num_nodes)
+
+
+def gcn_apply(params: dict, x: Array, edges: Array, edge_weights: Array,
+              num_nodes: int, *, activation: Callable = jax.nn.relu,
+              concat_skip: bool = False, use_pallas: bool = False,
+              pre_aggregated: bool = False) -> Array:
+    """One GCN op on one snapshot.
+
+    concat_skip implements CD-GCN's skip connection (§5.1):
+        Y0 = A_tilde X;  Y1 = Y0 W;  Y = act(concat(Y0, Y1))  (F + F' wide)
+    pre_aggregated: x already equals A_tilde @ X (the paper's first-layer
+    pre-computation, §5.5) — skip the sparse product.
+    """
+    y0 = x if pre_aggregated else spatial_aggregate(
+        x, edges, edge_weights, num_nodes, use_pallas)
+    y1 = y0 @ params["w"] + params["b"]
+    if concat_skip:
+        return activation(jnp.concatenate([y0, y1], axis=-1))
+    return activation(y1)

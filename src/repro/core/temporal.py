@@ -1,0 +1,172 @@
+"""Temporal (RNN) modules of the dynamic-GNN framework (paper §2.2, §5).
+
+Three variants, one per representative model:
+
+* ``lstm_scan``      — LSTM over the timeline per vertex (CD-GCN).
+* ``m_product``      — parameter-free banded temporal averaging (TM-GCN);
+                       optionally served by the Pallas banded-TTM kernel.
+* ``weight_lstm``    — LSTM over the GCN *weight matrices* (EvolveGCN / EGCN-O).
+
+All operate on (T, N, F) feature tensors; vertex independence is what the
+snapshot-partitioning scheme exploits (the all-to-all re-shards T-major to
+N-major before these run).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------- LSTM ------
+
+def init_lstm_params(key: Array, f_in: int, hidden: int,
+                     dtype=jnp.float32) -> dict:
+    k1, k2 = jax.random.split(key)
+    scale = 1.0 / jnp.sqrt(hidden)
+    wx = jax.random.uniform(k1, (f_in, 4 * hidden), minval=-scale,
+                            maxval=scale, dtype=jnp.float32)
+    wh = jax.random.uniform(k2, (hidden, 4 * hidden), minval=-scale,
+                            maxval=scale, dtype=jnp.float32)
+    return {"wx": wx.astype(dtype), "wh": wh.astype(dtype),
+            "b": jnp.zeros((4 * hidden,), dtype=dtype)}
+
+
+def lstm_cell(params: dict, state: tuple[Array, Array],
+              x: Array) -> tuple[tuple[Array, Array], Array]:
+    """Standard LSTM cell; x: (..., F), state (h, c): (..., H)."""
+    h, c = state
+    gates = x @ params["wx"] + h @ params["wh"] + params["b"]
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    i, f, o = jax.nn.sigmoid(i), jax.nn.sigmoid(f), jax.nn.sigmoid(o)
+    g = jnp.tanh(g)
+    c_new = f * c + i * g
+    h_new = o * jnp.tanh(c_new)
+    return (h_new, c_new), h_new
+
+
+def lstm_zero_state(batch_shape: tuple[int, ...], hidden: int,
+                    dtype=jnp.float32) -> tuple[Array, Array]:
+    z = jnp.zeros(batch_shape + (hidden,), dtype=dtype)
+    return (z, z)
+
+
+def lstm_scan(params: dict, x: Array,
+              init_state: tuple[Array, Array] | None = None
+              ) -> tuple[Array, tuple[Array, Array]]:
+    """LSTM along axis 0 of x: (T, N, F) -> (T, N, H); returns final state.
+
+    The returned final state is the per-block boundary data pi_b of the
+    gradient-checkpoint scheme (§3.1).
+    """
+    hidden = params["wh"].shape[0]
+    if init_state is None:
+        init_state = lstm_zero_state(x.shape[1:-1], hidden, x.dtype)
+
+    def step(state, xt):
+        new_state, y = lstm_cell(params, state, xt)
+        return new_state, y
+
+    final_state, ys = jax.lax.scan(step, init_state, x)
+    return ys, final_state
+
+
+# ----------------------------------------------------------- M-product ------
+
+def m_product(x: Array, window: int, t_offset: Array | int = 0,
+              use_pallas: bool = False) -> Array:
+    """TM-GCN temporal op: Y = M x_1 X with the banded averaging M (§5.3).
+
+    Y_t = (1 / min(w, t)) * sum_{k=max(1, t-w+1)}^{t} X_k   (1-indexed t).
+
+    ``t_offset``: global index of x[0] — under blocked checkpointing /
+    snapshot partitioning this op runs on a timeline slice, and the
+    normalization 1/min(w, t) depends on the *global* timestep.
+    The window prefix (last w-1 frames before the slice) must be prepended by
+    the caller; here we only need the offset for correct weighting.
+    """
+    if use_pallas:
+        from repro.kernels.mproduct import ops as mp_ops
+        return mp_ops.m_product(x, window, t_offset)
+    t = x.shape[0]
+    # cumulative sums along time with a zero row in front: cs[t] = sum_{<t} x
+    cs = jnp.concatenate([jnp.zeros_like(x[:1]), jnp.cumsum(x, axis=0)],
+                         axis=0)
+    idx = jnp.arange(t)
+    glob = idx + t_offset + 1  # 1-indexed global timestep
+    lo = jnp.maximum(glob - window, t_offset * jnp.ones_like(glob)) - t_offset
+    hi = idx + 1
+    total = jnp.take(cs, hi, axis=0) - jnp.take(cs, lo, axis=0)
+    denom = jnp.minimum(window, glob).astype(x.dtype)
+    return total / denom.reshape((t,) + (1,) * (x.ndim - 1))
+
+
+def m_product_with_prefix(x: Array, prefix: Array, window: int,
+                          t_offset: Array | int,
+                          use_pallas: bool = False) -> Array:
+    """M-product over a timeline slice given the (w-1)-frame prefix carry.
+
+    prefix: (w-1, N, F) — the last w-1 frames before x[0] (zeros at t=0).
+    Returns Y for the slice only: (T_slice, N, F).
+    """
+    w1 = prefix.shape[0]
+    full = jnp.concatenate([prefix, x], axis=0)
+    y = m_product(full, window, t_offset=jnp.asarray(t_offset) - w1,
+                  use_pallas=use_pallas)
+    return y[w1:]
+
+
+# -------------------------------------------------------- EvolveGCN ---------
+
+def init_weight_lstm_params(key: Array, f_in: int, f_out: int,
+                            dtype=jnp.float32) -> dict:
+    """EGCN-O: the GCN weight W_t (f_in x f_out) is evolved by an LSTM whose
+    'batch' is the f_out columns and feature size is f_in."""
+    p = init_lstm_params(key, f_in, f_in, dtype)
+    k2 = jax.random.fold_in(key, 17)
+    scale = 1.0 / jnp.sqrt(f_in)
+    w0 = jax.random.uniform(k2, (f_in, f_out), minval=-scale, maxval=scale,
+                            dtype=jnp.float32).astype(dtype)
+    return {"lstm": p, "w0": w0}
+
+
+def evolve_weights(params: dict, num_steps: int) -> Array:
+    """Produce (T, f_in, f_out) evolved GCN weights: W_t = LSTM(W_{t-1}).
+
+    Replicated on every processor (weights are tiny — §5.5), which keeps the
+    EvolveGCN feature path fully communication-free under snapshot
+    partitioning.
+    """
+    f_in, f_out = params["w0"].shape
+    lstm = params["lstm"]
+
+    def step(carry, _):
+        w_prev, state = carry
+        # columns of W are the batch: (f_out, f_in) input to the cell
+        new_state, h = lstm_cell(lstm, state, w_prev.T)
+        w_new = h.T  # (f_in, f_out)
+        return (w_new, new_state), w_new
+
+    init = (params["w0"],
+            lstm_zero_state((f_out,), f_in, params["w0"].dtype))
+    _, ws = jax.lax.scan(step, init, None, length=num_steps)
+    return ws
+
+
+def evolve_weights_from(params: dict, w_prev: Array,
+                        state: tuple[Array, Array], num_steps: int
+                        ) -> tuple[Array, Array, tuple[Array, Array]]:
+    """Blocked variant: continue evolving from carried (w, state) — pi_b."""
+    lstm = params["lstm"]
+
+    def step(carry, _):
+        w_c, st = carry
+        new_state, h = lstm_cell(lstm, st, w_c.T)
+        w_new = h.T
+        return (w_new, new_state), w_new
+
+    (w_last, st_last), ws = jax.lax.scan(step, (w_prev, state), None,
+                                         length=num_steps)
+    return ws, w_last, st_last

@@ -1,0 +1,89 @@
+"""Elastic scaling + preemption handling.
+
+At 1000+ nodes, pod loss and re-provisioning are routine.  The framework's
+answer (exercised in tests with host devices):
+
+  * **Checkpoint-mediated re-mesh.**  Checkpoints are mesh-agnostic
+    (host-gathered leaves, repro.ckpt).  ``remesh_plan`` picks the new
+    (data, model) factorization for a changed chip count; restore places
+    leaves with the new shardings.  Model code never changes — all sharding
+    is expressed against logical axis names (repro.dist.sharding).
+  * **Snapshot-axis elasticity (paper-specific).**  Snapshot partitioning
+    needs bsize % P == 0; ``dyngnn_elastic_blocks`` re-blocks the timeline
+    (adjusts nb) for a new P, preserving the gradient-checkpoint semantics —
+    the communication volume stays O(T*N) at any P, which is exactly the
+    paper's argument for why elasticity is cheap under this scheme.
+  * **Preemption.**  ``PreemptionGuard`` converts SIGTERM into a flag the
+    train loop polls; on preemption it saves a final checkpoint and exits
+    cleanly (restart resumes from the data cursor in ckpt extra).
+"""
+
+from __future__ import annotations
+
+import signal
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class MeshPlan:
+    data: int
+    model: int
+
+    @property
+    def chips(self) -> int:
+        return self.data * self.model
+
+
+def remesh_plan(num_chips: int, model_parallel: int = 16,
+                min_model: int = 1) -> MeshPlan:
+    """Choose (data, model) for a new chip count.
+
+    Keeps model-parallel degree if it divides the chip count; otherwise
+    falls back to the largest power-of-two divisor <= requested (TP degree
+    must divide head/ff dims, which are powers of two in all our configs).
+    """
+    m = min(model_parallel, num_chips)
+    while m > min_model and num_chips % m != 0:
+        m //= 2
+    return MeshPlan(data=num_chips // m, model=m)
+
+
+def dyngnn_elastic_blocks(num_steps: int, num_procs: int,
+                          target_bsize: int) -> tuple[int, int]:
+    """(nb, bsize) for a new processor count: bsize must be a multiple of P
+    and divide T; prefer the largest bsize <= target (fewer blocks = less
+    recompute + better GD benefit ratio (bsize-P)/bsize, §6.2)."""
+    best = None
+    for nb in range(1, num_steps + 1):
+        if num_steps % nb:
+            continue
+        bsize = num_steps // nb
+        if bsize % num_procs:
+            continue
+        if bsize <= target_bsize:
+            best = (nb, bsize)
+            break
+    if best is None:
+        # fall back to bsize == P (minimum legal block)
+        nb = num_steps // num_procs
+        return nb, num_procs
+    return best
+
+
+class PreemptionGuard:
+    """SIGTERM -> graceful checkpoint-and-exit flag."""
+
+    def __init__(self):
+        self.preempted = False
+        self._orig = None
+
+    def __enter__(self):
+        def handler(signum, frame):
+            self.preempted = True
+
+        self._orig = signal.signal(signal.SIGTERM, handler)
+        return self
+
+    def __exit__(self, *exc):
+        signal.signal(signal.SIGTERM, self._orig)
+        return False

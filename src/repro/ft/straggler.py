@@ -1,0 +1,81 @@
+"""Straggler mitigation.
+
+Synchronous SPMD training runs at the speed of the slowest chip.  Two
+mechanisms, both host-side (they orchestrate, not compute):
+
+  * ``StepTimer`` — EWMA step-time watchdog; flags a step as straggling when
+    it exceeds mean + k*std.  At scale the launcher uses consecutive flags to
+    trigger (a) input-pipeline rebalancing or (b) checkpoint + exclusion of
+    the slow host via elastic re-mesh (repro.ft.elastic).
+  * ``BackupShardSchedule`` — speculative backup execution plan for the
+    paper's snapshot partitioning: because the snapshot axis is perfectly
+    regular, a backup worker can mirror the k slowest workers' shards cheaply
+    (shard reassignment is a cursor change, not a data-layout change).  This
+    regularity is exactly the §4.2 advantage; hypergraph partitions would
+    need a full re-partition.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+
+class StepTimer:
+    def __init__(self, window: int = 50, threshold_std: float = 3.0):
+        self.window = window
+        self.threshold_std = threshold_std
+        self.times: deque[float] = deque(maxlen=window)
+        self._t0: float | None = None
+        self.flagged_steps: list[int] = []
+        self.step_idx = 0
+
+    def __enter__(self):
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        dt = time.perf_counter() - self._t0
+        self.observe(dt)
+        return False
+
+    def observe(self, dt: float) -> bool:
+        """Returns True if this step is a straggler outlier."""
+        self.step_idx += 1
+        flag = False
+        if len(self.times) >= 10:
+            mean = sum(self.times) / len(self.times)
+            var = sum((t - mean) ** 2 for t in self.times) / len(self.times)
+            std = max(var ** 0.5, 1e-9)
+            if dt > mean + self.threshold_std * std:
+                flag = True
+                self.flagged_steps.append(self.step_idx)
+        self.times.append(dt)
+        return flag
+
+    @property
+    def straggler_rate(self) -> float:
+        return len(self.flagged_steps) / max(self.step_idx, 1)
+
+
+@dataclass
+class BackupShardSchedule:
+    """Assign backup workers to the slowest primaries (snapshot shards)."""
+    num_workers: int
+    num_backups: int
+    assignments: dict = field(default_factory=dict)
+
+    def plan(self, step_times: list[float]) -> dict[int, int]:
+        """worker -> backup mapping for the k slowest workers."""
+        order = sorted(range(self.num_workers),
+                       key=lambda w: -step_times[w])
+        slowest = order[:self.num_backups]
+        self.assignments = {w: self.num_workers + i
+                            for i, w in enumerate(slowest)}
+        return self.assignments
+
+    def shard_for(self, worker: int, bsize_local: int) -> tuple[int, int]:
+        """Snapshot-shard cursor (start, len) — identical for the backup,
+        which is the point: re-assignment is O(1) metadata."""
+        return worker * bsize_local, bsize_local

@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: single-token GQA decode attention over a long KV cache.
+
+Serving the LM cells (``decode_32k`` / ``long_500k``) is one new token
+attending to S cached entries: entirely memory-bound (read 2*S*D per kv head).
+Flash-style blocked streaming keeps the working set in VMEM:
+
+grid (B, KVH, S / S_BLK) with the KV axis innermost (sequential on TPU —
+grid steps run in order on the core, so VMEM scratch persists across them):
+running max m, denominator l and weighted accumulator acc are carried across
+KV blocks; the final block writes acc / l.
+
+The G = Hq / KVH query heads that share one KV head ride together as the
+MXU's left operand: scores (G x S_BLK) = q_g @ k_blk^T.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_KV_BLOCK = 512
+_NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, len_ref, o_ref, acc_ref, m_ref, l_ref,
+            *, kv_block: int, num_kv_blocks: int, scale: float):
+    s_idx = pl.program_id(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0]                        # (G, D)
+    k = k_ref[0, :, 0, :]                  # (S_BLK, D)
+    v = v_ref[0, :, 0, :]                  # (S_BLK, D)
+    valid_len = len_ref[0, 0]              # scalar: #valid cache entries
+
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale       # (G, S_BLK)
+    pos = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1) \
+        + s_idx * kv_block
+    scores = jnp.where(pos < valid_len, scores, _NEG_INF)
+
+    m_prev = m_ref[...]                    # (G, 1)
+    m_cur = jnp.max(scores, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    correction = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new)            # (G, S_BLK)
+    l_new = l_ref[...] * correction + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * correction + jax.lax.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(s_idx == num_kv_blocks - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("kv_block", "interpret"))
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
+                 cache_len: jax.Array, kv_block: int = DEFAULT_KV_BLOCK,
+                 interpret: bool = False) -> jax.Array:
+    """q: (B, Hq, D); k, v: (B, S, KVH, D); cache_len: (B,) int32 -> (B, Hq, D).
+
+    Hq must be a multiple of KVH (GQA); S a multiple of kv_block.
+    """
+    b, hq, d = q.shape
+    _, s, kvh, _ = k.shape
+    if hq % kvh != 0:
+        raise ValueError(f"Hq={hq} not a multiple of KVH={kvh}")
+    g = hq // kvh
+    if s % kv_block != 0:
+        raise ValueError(f"S={s} not a multiple of kv_block={kv_block}")
+    num_kv_blocks = s // kv_block
+    scale = 1.0 / (d ** 0.5)
+    qg = q.reshape(b, kvh, g, d)
+    lens = jnp.broadcast_to(cache_len.astype(jnp.int32).reshape(b, 1),
+                            (b, kvh))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, kv_block=kv_block,
+                          num_kv_blocks=num_kv_blocks, scale=scale),
+        grid=(b, kvh, num_kv_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda b_, h_, s_: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, kv_block, 1, d),
+                         lambda b_, h_, s_: (b_, s_, h_, 0)),
+            pl.BlockSpec((1, kv_block, 1, d),
+                         lambda b_, h_, s_: (b_, s_, h_, 0)),
+            pl.BlockSpec((1, 1), lambda b_, h_, s_: (b_, h_)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda b_, h_, s_: (b_, h_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),   # acc
+            pltpu.VMEM((g, 1), jnp.float32),   # running max m
+            pltpu.VMEM((g, 1), jnp.float32),   # running denom l
+        ],
+        interpret=interpret,
+    )(qg, k, v, lens)
+    return out.reshape(b, hq, d)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for flash decode: masked GQA attention for one token."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                     cache_len: jax.Array) -> jax.Array:
+    """q: (B, Hq, D); k, v: (B, S, KVH, D); cache_len: (B,) -> (B, Hq, D)."""
+    b, hq, d = q.shape
+    _, s, kvh, _ = k.shape
+    g = hq // kvh
+    qg = q.reshape(b, kvh, g, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qg, kf) / (d ** 0.5)
+    mask = jnp.arange(s)[None, None, None, :] < \
+        cache_len.astype(jnp.int32)[:, None, None, None]
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, vf)
+    return out.reshape(b, hq, d).astype(q.dtype)

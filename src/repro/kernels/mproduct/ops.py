@@ -1,0 +1,24 @@
+"""Jit'd public wrapper for the banded-TTM Pallas kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mproduct import ref as _ref
+from repro.kernels.mproduct.mproduct import banded_ttm
+
+banded_ttm_ref = _ref.banded_ttm_ref
+m_matrix = _ref.m_matrix
+
+
+def m_product(x: jax.Array, window: int, t_offset: jax.Array | int = 0,
+              interpret: bool = True) -> jax.Array:
+    """TM-GCN temporal op on a (T, N, F) tensor via the Pallas kernel.
+
+    Drop-in for ``repro.core.temporal.m_product`` (use_pallas path).
+    """
+    t = x.shape[0]
+    flat = x.reshape(t, -1)
+    y = banded_ttm(flat, window, t_offset, interpret=interpret)
+    return y.reshape(x.shape)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the banded-TTM M-product kernel: the dense TTM."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def m_matrix(num_steps: int, window: int, t_offset: int = 0) -> np.ndarray:
+    """Dense M restricted to a slice starting at global index t_offset.
+
+    Entries whose source column falls before the slice are dropped (callers
+    of the sliced form discard those rows — prefix pattern).
+    """
+    m = np.zeros((num_steps, num_steps), dtype=np.float32)
+    for t in range(num_steps):
+        g = t + t_offset + 1
+        lo_g = max(1, g - window + 1)
+        for kg in range(lo_g, g + 1):
+            k = kg - t_offset - 1
+            if 0 <= k < num_steps:
+                m[t, k] = 1.0 / min(window, g)
+    return m
+
+
+def banded_ttm_ref(x: jax.Array, window: int, t_offset: int = 0) -> jax.Array:
+    """Dense-matmul oracle: Y = M @ X over the flattened trailing dims."""
+    t = x.shape[0]
+    m = jnp.asarray(m_matrix(t, window, t_offset), dtype=x.dtype)
+    flat = x.reshape(t, -1)
+    return (m @ flat).reshape(x.shape)

@@ -1,0 +1,634 @@
+"""Step builders + abstract input specs for every (arch x shape) cell.
+
+``build_cell(arch_id, shape_name, mesh)`` returns a ``Cell`` with everything
+the dry-run / trainer needs:
+
+  * ``step``          — the python callable to jit (train_step or serve_step)
+  * ``in_shardings`` / ``out_shardings``
+  * ``abstract_inputs`` — ShapeDtypeStructs (weak-type-correct, shardable, no
+    allocation) for ``jax.jit(...).lower(...)``
+  * ``donate``        — argnums donated (params / opt state / caches)
+
+Conventions: train cells lower a FULL training step (loss + grads + AdamW
+update, optimizer state included so memory analysis reflects reality);
+decode/recsys-serve cells lower a serve_step.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import registry
+from repro.dist import sharding as shd
+from repro.models import din as din_mod
+from repro.models import lm as lm_mod
+from repro.optim import adamw
+
+Array = jax.Array
+
+
+@dataclass
+class Cell:
+    arch_id: str
+    shape_name: str
+    step: Callable
+    abstract_inputs: tuple
+    in_shardings: tuple
+    out_shardings: Any
+    donate: tuple = ()
+    meta: dict | None = None
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _abstract_tree(fn, *args, **kw):
+    return jax.eval_shape(fn, *args, **kw)
+
+
+def _round_up(v: int, m: int) -> int:
+    return ((v + m - 1) // m) * m
+
+
+def _dp_size(mesh: Mesh) -> int:
+    out = 1
+    for a in shd.dp_axes(mesh):
+        out *= mesh.shape[a]
+    return out
+
+
+# ============================================================ LM cells ======
+
+def _lm_head_specs(cfg, mesh: Mesh, mode: str = "gqa_tp"):
+    """TP specs for attention weights.
+
+    'gqa_tp' (default, §Perf iteration 1): shard the QUERY heads over
+    'model' and replicate KV heads when they don't divide the axis (GQA has
+    few of them and they're small) — attention then computes entirely
+    locally per head group, with one output psum per layer.
+
+    'naive_tp' (the recorded baseline): falls back to sharding the head_dim
+    (contraction) axis when head counts don't divide — which makes QK^T emit
+    FULL-head partial scores plus an all-reduce per layer (the pathology
+    measured in EXPERIMENTS.md §Perf, kept reproducible here).
+    """
+    m = mesh.shape["model"]
+    heads_ok = cfg.num_heads % m == 0
+    kv_ok = cfg.num_kv_heads % m == 0
+    if mode == "naive_tp":
+        if heads_ok and kv_ok:
+            return {"wq": P(None, None, "model", None),
+                    "wk": P(None, None, "model", None),
+                    "wv": P(None, None, "model", None),
+                    "wo": P(None, "model", None, None)}
+        assert cfg.head_dim % m == 0
+        return {"wq": P(None, None, None, "model"),
+                "wk": P(None, None, None, "model"),
+                "wv": P(None, None, None, "model"),
+                "wo": P(None, None, "model", None)}
+    if heads_ok:
+        kv = "model" if kv_ok else None
+        return {"wq": P(None, None, "model", None),
+                "wk": P(None, None, kv, None),
+                "wv": P(None, None, kv, None),
+                "wo": P(None, "model", None, None)}
+    # heads don't divide (minicpm's 36): replicate attention weights; the
+    # attention itself is sequence-sharded (§Perf iteration 2).
+    return {"wq": P(None, None, None, None),
+            "wk": P(None, None, None, None),
+            "wv": P(None, None, None, None),
+            "wo": P(None, None, None, None)}
+
+
+def lm_param_specs(cfg, mesh: Mesh, mode: str = "gqa_tp") -> dict:
+    specs = shd.lm_param_specs(cfg, mesh, mode="tp")
+    specs["layers"]["attn"] = _lm_head_specs(cfg, mesh, mode)
+    return specs
+
+
+def _fsdp_opt_specs(a_params, p_specs, mesh: Mesh) -> dict:
+    """ZeRO-style optimizer-state sharding (§Perf iteration 5): m/v/master
+    additionally shard their largest unsharded dim over the data axes, so
+    fp32 optimizer memory scales 1/(dp*tp).  XLA turns the gradient
+    all-reduce into reduce-scatter + post-update param all-gather."""
+    dp = shd.dp_axes(mesh)
+    dp_n = _dp_size(mesh)
+
+    def leaf_spec(a, spec: P) -> P:
+        parts = list(spec) + [None] * (len(a.shape) - len(spec))
+        best, best_dim = None, -1
+        for i, (s, p_) in enumerate(zip(a.shape, parts)):
+            if p_ is None and s % dp_n == 0 and s > best_dim:
+                best, best_dim = i, s
+        if best is None:
+            return spec
+        parts[best] = dp
+        return P(*parts)
+
+    flat_a = jax.tree.leaves(a_params)
+    flat_s = jax.tree.leaves(p_specs, is_leaf=lambda x: isinstance(x, P))
+    flat_2d = [leaf_spec(a, s) for a, s in zip(flat_a, flat_s)]
+    treedef = jax.tree.structure(p_specs,
+                                 is_leaf=lambda x: isinstance(x, P))
+    shard2d = jax.tree.unflatten(treedef, flat_2d)
+    return {"m": shard2d, "v": shard2d, "master": shard2d, "step": P()}
+
+
+def _chunk_constrainer(cfg, mesh: Mesh):
+    """Sequence-parallel attention hook for archs whose head count does
+    not divide the model axis (SSPerf iteration 2, minicpm): shard each
+    query chunk's rows over 'model' (inward), un-shard its output."""
+    if cfg.num_heads % mesh.shape["model"] == 0:
+        return None
+    dp = shd.dp_axes(mesh)
+    inward = NamedSharding(mesh, P(dp, "model", None, None))
+    outward = NamedSharding(mesh, P(dp, None, None, None))
+
+    def constrain(x, to_sharded):
+        return jax.lax.with_sharding_constraint(
+            x, inward if to_sharded else outward)
+
+    return constrain
+
+
+def _lm_train_cell(arch, shape, mesh: Mesh, cfg) -> Cell:
+    opt_cfg = adamw.AdamWConfig(schedule=cfg.lr_schedule)
+    constrain = shd.lm_activation_constrainer(mesh)
+    chunk_con = _chunk_constrainer(cfg, mesh)
+    p_specs = lm_param_specs(cfg, mesh)
+    b_spec = shd.lm_batch_specs(mesh)
+
+    def train_step(params, opt_state, tokens, targets):
+        loss, grads = jax.value_and_grad(
+            lambda p: lm_mod.lm_loss(cfg, p, tokens, targets, constrain,
+                                     chunk_constrain=chunk_con)
+        )(params)
+        params, opt_state = adamw.apply_updates(opt_cfg, params, grads,
+                                                opt_state)
+        return params, opt_state, loss
+
+    a_params = _abstract_tree(
+        lambda: lm_mod.init_lm_params(jax.random.PRNGKey(0), cfg))
+    a_opt = _abstract_tree(adamw.init_state, a_params)
+    o_specs = _fsdp_opt_specs(a_params, p_specs, mesh)
+    b, s = shape.dims["global_batch"], shape.dims["seq_len"]
+    a_tok = _sds((b, s), jnp.int32)
+    return Cell(
+        arch_id=arch.arch_id, shape_name=shape.name, step=train_step,
+        abstract_inputs=(a_params, a_opt, a_tok, a_tok),
+        in_shardings=(shd.named(mesh, p_specs), shd.named(mesh, o_specs),
+                      NamedSharding(mesh, b_spec),
+                      NamedSharding(mesh, b_spec)),
+        out_shardings=(shd.named(mesh, p_specs), shd.named(mesh, o_specs),
+                       NamedSharding(mesh, P())),
+        donate=(0, 1),
+        meta={"tokens": b * s})
+
+
+def _lm_kv_specs(cfg, mesh: Mesh, batch: int, seq_shard: bool):
+    m = mesh.shape["model"]
+    dp = shd.dp_axes(mesh)
+    if seq_shard:
+        # context parallelism: KV sequence over every axis (batch = 1)
+        axes = (*dp, "model") if cfg.num_kv_heads % m else (*dp, "model")
+        return {"k": P(None, None, axes, None, None),
+                "v": P(None, None, axes, None, None), "len": P()}
+    if cfg.num_kv_heads % m == 0:
+        return {"k": P(None, dp, None, "model", None),
+                "v": P(None, dp, None, "model", None), "len": P(dp)}
+    # few KV heads (yi): split the cache sequence over 'model' instead
+    return {"k": P(None, dp, "model", None, None),
+            "v": P(None, dp, "model", None, None), "len": P(dp)}
+
+
+def _lm_decode_cell(arch, shape, mesh: Mesh, cfg) -> Cell:
+    b = shape.dims["global_batch"]
+    s = shape.dims["seq_len"]
+    seq_shard = bool(shape.dims.get("kv_seq_shard", False))
+    p_specs = lm_param_specs(cfg, mesh)
+    kv_specs = _lm_kv_specs(cfg, mesh, b, seq_shard)
+    constrain = shd.lm_activation_constrainer(mesh)
+
+    def serve_step(params, cache, token):
+        return lm_mod.decode_step(cfg, params, cache, token, constrain)
+
+    a_params = _abstract_tree(
+        lambda: lm_mod.init_lm_params(jax.random.PRNGKey(0), cfg))
+    a_cache = _abstract_tree(
+        lambda: lm_mod.init_kv_cache(cfg, b, s))
+    tok_spec = P(shd.dp_axes(mesh)) if b >= _dp_size(mesh) else P()
+    a_tok = _sds((b,), jnp.int32)
+    logits_spec = P(shd.dp_axes(mesh), "model") if b >= _dp_size(mesh) \
+        else P(None, "model")
+    return Cell(
+        arch_id=arch.arch_id, shape_name=shape.name, step=serve_step,
+        abstract_inputs=(a_params, a_cache, a_tok),
+        in_shardings=(shd.named(mesh, p_specs), shd.named(mesh, kv_specs),
+                      NamedSharding(mesh, tok_spec)),
+        out_shardings=(NamedSharding(mesh, logits_spec),
+                       shd.named(mesh, kv_specs)),
+        donate=(1,),
+        meta={"tokens": b, "kv_len": s})
+
+
+def _lm_prefill_cell(arch, shape, mesh: Mesh, cfg) -> Cell:
+    b = shape.dims["global_batch"]
+    s = shape.dims["seq_len"]
+    p_specs = lm_param_specs(cfg, mesh)
+    kv_specs = _lm_kv_specs(cfg, mesh, b, seq_shard=False)
+    constrain = shd.lm_activation_constrainer(mesh)
+
+    chunk_con = _chunk_constrainer(cfg, mesh)
+
+    def serve_step(params, tokens):
+        return lm_mod.prefill(cfg, params, tokens, max_len=s,
+                              constrain=constrain,
+                              chunk_constrain=chunk_con)
+
+    a_params = _abstract_tree(
+        lambda: lm_mod.init_lm_params(jax.random.PRNGKey(0), cfg))
+    a_tok = _sds((b, s), jnp.int32)
+    logits_spec = P(shd.dp_axes(mesh), "model")
+    return Cell(
+        arch_id=arch.arch_id, shape_name=shape.name, step=serve_step,
+        abstract_inputs=(a_params, a_tok),
+        in_shardings=(shd.named(mesh, p_specs),
+                      NamedSharding(mesh, shd.lm_batch_specs(mesh))),
+        out_shardings=(NamedSharding(mesh, logits_spec),
+                       shd.named(mesh, kv_specs)),
+        meta={"tokens": b * s})
+
+
+# =========================================================== GNN cells ======
+
+def _gnn_forward_fn(arch_id: str, cfg):
+    from repro.models.gnn import equiformer_v2, gatedgcn, pna, schnet
+    if arch_id == "gatedgcn":
+        return lambda p, b: gatedgcn.logits(p, b)
+    if arch_id == "pna":
+        return lambda p, b: pna.logits(p, b)
+    if arch_id == "schnet":
+        return lambda p, b: schnet.logits(p, b, cfg.cutoff)
+    if arch_id == "equiformer-v2":
+        return lambda p, b: equiformer_v2.logits(
+            p, b, l_max=cfg.l_max, m_max=cfg.m_max, n_heads=cfg.n_heads,
+            n_rbf=cfg.n_rbf, cutoff=cfg.cutoff)
+    raise KeyError(arch_id)
+
+
+def _gnn_init_fn(arch_id: str, cfg, d_in: int, num_classes: int):
+    from repro.models.gnn import equiformer_v2, gatedgcn, pna, schnet
+    key = jax.random.PRNGKey(0)
+    if arch_id == "gatedgcn":
+        return lambda: gatedgcn.init_params(key, d_in, cfg.d_hidden,
+                                            cfg.n_layers, num_classes)
+    if arch_id == "pna":
+        return lambda: pna.init_params(key, d_in, cfg.d_hidden,
+                                       cfg.n_layers, num_classes)
+    if arch_id == "schnet":
+        return lambda: schnet.init_params(key, d_in, cfg.d_hidden,
+                                          cfg.n_interactions, cfg.n_rbf,
+                                          num_classes)
+    if arch_id == "equiformer-v2":
+        return lambda: equiformer_v2.init_params(
+            key, d_in, cfg.d_hidden, cfg.n_layers, cfg.l_max, cfg.m_max,
+            cfg.n_heads, cfg.n_rbf, num_classes)
+    raise KeyError(arch_id)
+
+
+def _needs_positions(arch_id: str) -> bool:
+    return arch_id in ("schnet", "equiformer-v2")
+
+
+def _gnn_full_graph_cell(arch, shape, mesh: Mesh, cfg) -> Cell:
+    from repro.models.gnn.common import GraphBatch, node_ce_loss
+    d = shape.dims
+    dp = shd.dp_axes(mesh)
+    dp_n = _dp_size(mesh)
+    n = _round_up(d["n_nodes"], dp_n)
+    e = _round_up(d["n_edges"], dp_n * 128)
+    d_in, n_cls = d["d_feat"], d["num_classes"]
+    fwd = _gnn_forward_fn(arch.arch_id, cfg)
+    init = _gnn_init_fn(arch.arch_id, cfg, d_in, n_cls)
+    opt_cfg = adamw.AdamWConfig()
+    with_pos = _needs_positions(arch.arch_id)
+    # the big irreps arch keeps node tensors row-sharded; others replicate
+    node_spec = P(dp) if arch.arch_id == "equiformer-v2" else P()
+
+    def train_step(params, opt_state, edges, emask, feats, pos, labels,
+                   nmask):
+        batch = GraphBatch(edges=edges, edge_mask=emask, node_feat=feats,
+                           node_mask=nmask, positions=pos, graph_id=None,
+                           num_graphs=1, labels=labels)
+
+        def loss_fn(p):
+            return node_ce_loss(fwd(p, batch), labels, nmask)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state = adamw.apply_updates(opt_cfg, params, grads,
+                                                opt_state)
+        return params, opt_state, loss
+
+    a_params = _abstract_tree(init)
+    a_opt = _abstract_tree(adamw.init_state, a_params)
+    dt = jnp.float32
+    abstract = (a_params, a_opt, _sds((e, 2), jnp.int32), _sds((e,), dt),
+                _sds((n, d_in), dt), _sds((n, 3), dt),
+                _sds((n,), jnp.int32), _sds((n,), dt))
+    p_specs = shd.replicate_specs(a_params)
+    o_specs = shd.replicate_specs(a_opt)
+    in_sh = (shd.named(mesh, p_specs), shd.named(mesh, o_specs),
+             NamedSharding(mesh, P(dp, None)), NamedSharding(mesh, P(dp)),
+             NamedSharding(mesh, node_spec), NamedSharding(mesh, node_spec),
+             NamedSharding(mesh, node_spec), NamedSharding(mesh, node_spec))
+    return Cell(
+        arch_id=arch.arch_id, shape_name=shape.name, step=train_step,
+        abstract_inputs=abstract, in_shardings=in_sh,
+        out_shardings=(shd.named(mesh, p_specs), shd.named(mesh, o_specs),
+                       NamedSharding(mesh, P())),
+        donate=(0, 1),
+        meta={"edges": e, "nodes": n})
+
+
+def _gnn_replica_cell(arch, shape, mesh: Mesh, cfg, *, minibatch: bool
+                      ) -> Cell:
+    """minibatch_lg / molecule: one independent subgraph per DP replica,
+    vmapped over the leading replica axis."""
+    from repro.models.gnn.common import GraphBatch, node_ce_loss
+    d = shape.dims
+    dp = shd.dp_axes(mesh)
+    r = _dp_size(mesh)
+    if minibatch:
+        seeds = max(d["batch_nodes"] // r, 1)
+        e_sub = 0
+        cap = seeds
+        for f in d["fanouts"]:
+            cap *= f
+            e_sub += cap
+        n_sub = seeds + e_sub
+        d_in, n_cls = d["d_feat"], d["num_classes"]
+        graph_level = False
+    else:
+        graphs_per = max(d["batch"] // r, 1)
+        n_sub = graphs_per * d["n_nodes"]
+        e_sub = graphs_per * d["n_edges"]
+        d_in, n_cls = d["d_feat"], d["num_classes"]
+        graph_level = True
+        seeds = graphs_per
+
+    fwd = _gnn_forward_fn(arch.arch_id, cfg)
+    init = _gnn_init_fn(arch.arch_id, cfg, d_in, n_cls)
+    opt_cfg = adamw.AdamWConfig()
+
+    def per_replica_loss(params, edges, emask, feats, pos, labels, nmask,
+                         gid):
+        batch = GraphBatch(edges=edges, edge_mask=emask, node_feat=feats,
+                           node_mask=nmask, positions=pos,
+                           graph_id=gid if graph_level else None,
+                           num_graphs=seeds if graph_level else 1,
+                           labels=labels)
+        logits = fwd(params, batch)
+        if graph_level:
+            mask = jnp.ones((seeds,), jnp.float32)
+            return node_ce_loss(logits, labels, mask)
+        # minibatch: loss on seed nodes only (first `seeds` rows)
+        return node_ce_loss(logits[:seeds], labels[:seeds], nmask[:seeds])
+
+    def train_step(params, opt_state, edges, emask, feats, pos, labels,
+                   nmask, gid):
+        def loss_fn(p):
+            losses = jax.vmap(per_replica_loss,
+                              in_axes=(None, 0, 0, 0, 0, 0, 0, 0))(
+                p, edges, emask, feats, pos, labels, nmask, gid)
+            return jnp.mean(losses)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state = adamw.apply_updates(opt_cfg, params, grads,
+                                                opt_state)
+        return params, opt_state, loss
+
+    a_params = _abstract_tree(init)
+    a_opt = _abstract_tree(adamw.init_state, a_params)
+    dt = jnp.float32
+    lab_n = seeds if graph_level else n_sub
+    abstract = (a_params, a_opt,
+                _sds((r, e_sub, 2), jnp.int32), _sds((r, e_sub), dt),
+                _sds((r, n_sub, d_in), dt), _sds((r, n_sub, 3), dt),
+                _sds((r, lab_n), jnp.int32), _sds((r, n_sub), dt),
+                _sds((r, n_sub), jnp.int32))
+    p_specs = shd.replicate_specs(a_params)
+    o_specs = shd.replicate_specs(a_opt)
+    rspec = lambda *rest: NamedSharding(mesh, P(dp, *rest))
+    in_sh = (shd.named(mesh, p_specs), shd.named(mesh, o_specs),
+             rspec(None, None), rspec(None), rspec(None, None),
+             rspec(None, None), rspec(None), rspec(None), rspec(None))
+    return Cell(
+        arch_id=arch.arch_id, shape_name=shape.name, step=train_step,
+        abstract_inputs=abstract, in_shardings=in_sh,
+        out_shardings=(shd.named(mesh, p_specs), shd.named(mesh, o_specs),
+                       NamedSharding(mesh, P())),
+        donate=(0, 1),
+        meta={"replicas": r, "edges_per_replica": e_sub,
+              "nodes_per_replica": n_sub})
+
+
+# ======================================================== recsys cells ======
+
+def _din_batch_abstract(cfg, batch: int):
+    return {
+        "user_id": _sds((batch,), jnp.int32),
+        "hist_items": _sds((batch, cfg.seq_len), jnp.int32),
+        "hist_cates": _sds((batch, cfg.seq_len), jnp.int32),
+        "hist_mask": _sds((batch, cfg.seq_len), jnp.float32),
+        "target_item": _sds((batch,), jnp.int32),
+        "target_cate": _sds((batch,), jnp.int32),
+    }
+
+
+def _din_batch_specs(mesh: Mesh, sharded: bool):
+    dp = shd.dp_axes(mesh)
+    s1 = P(dp) if sharded else P()
+    s2 = P(dp, None) if sharded else P(None, None)
+    return {"user_id": s1, "hist_items": s2, "hist_cates": s2,
+            "hist_mask": s2, "target_item": s1, "target_cate": s1}
+
+
+def _din_cell(arch, shape, mesh: Mesh, cfg) -> Cell:
+    batch = shape.dims.get("batch", 1)
+    kind = shape.kind
+    p_specs = shd.din_param_specs(mesh)
+    a_params = _abstract_tree(
+        lambda: din_mod.init_params(jax.random.PRNGKey(0), cfg))
+    dp = shd.dp_axes(mesh)
+    sharded = batch >= _dp_size(mesh)
+
+    if kind == "recsys_train":
+        opt_cfg = adamw.AdamWConfig()
+
+        def train_step(params, opt_state, batch_in, labels):
+            loss, grads = jax.value_and_grad(
+                lambda p: din_mod.ctr_loss(p, batch_in, labels))(params)
+            params, opt_state = adamw.apply_updates(opt_cfg, params, grads,
+                                                    opt_state)
+            return params, opt_state, loss
+
+        a_opt = _abstract_tree(adamw.init_state, a_params)
+        o_specs = shd.opt_state_specs(p_specs)
+        abstract = (a_params, a_opt, _din_batch_abstract(cfg, batch),
+                    _sds((batch,), jnp.int32))
+        in_sh = (shd.named(mesh, p_specs), shd.named(mesh, o_specs),
+                 shd.named(mesh, _din_batch_specs(mesh, sharded)),
+                 NamedSharding(mesh, P(dp)))
+        return Cell(arch_id=arch.arch_id, shape_name=shape.name,
+                    step=train_step, abstract_inputs=abstract,
+                    in_shardings=in_sh,
+                    out_shardings=(shd.named(mesh, p_specs),
+                                   shd.named(mesh, o_specs),
+                                   NamedSharding(mesh, P())),
+                    donate=(0, 1), meta={"batch": batch})
+
+    if kind == "recsys_serve":
+        def serve_step(params, batch_in):
+            return din_mod.forward(params, batch_in)
+
+        abstract = (a_params, _din_batch_abstract(cfg, batch))
+        out_spec = P(dp, None) if sharded else P(None, None)
+        return Cell(arch_id=arch.arch_id, shape_name=shape.name,
+                    step=serve_step, abstract_inputs=abstract,
+                    in_shardings=(shd.named(mesh, p_specs),
+                                  shd.named(mesh,
+                                            _din_batch_specs(mesh, sharded))),
+                    out_shardings=NamedSharding(mesh, out_spec),
+                    meta={"batch": batch})
+
+    # retrieval: one user, n_candidates scored, candidates DP-sharded
+    n_cand = shape.dims["n_candidates"]
+
+    def retrieval_step(params, batch_in, cand_items, cand_cates):
+        return din_mod.score_candidates(params, batch_in, cand_items,
+                                        cand_cates)
+
+    abstract = (a_params, _din_batch_abstract(cfg, 1),
+                _sds((n_cand,), jnp.int32), _sds((n_cand,), jnp.int32))
+    return Cell(arch_id=arch.arch_id, shape_name=shape.name,
+                step=retrieval_step, abstract_inputs=abstract,
+                in_shardings=(shd.named(mesh, p_specs),
+                              shd.named(mesh, _din_batch_specs(mesh, False)),
+                              NamedSharding(mesh, P(dp)),
+                              NamedSharding(mesh, P(dp))),
+                out_shardings=NamedSharding(mesh, P(dp)),
+                meta={"candidates": n_cand})
+
+
+# ===================================================== dynamic-GNN cells ====
+
+def _dyngnn_cell(arch, shape, mesh: Mesh, cfg) -> Cell:
+    """The paper's workload: snapshot-partitioned, checkpointed train step."""
+    import dataclasses
+
+    from repro.core import partition
+
+    d = shape.dims
+    n = d["n_nodes"]
+    t = d["n_steps"]
+    e_pad = _round_up(d["edges_per_snap"] + n, 1024)
+    dp = shd.dp_axes(mesh)
+    dp_n = _dp_size(mesh)
+    cfg = dataclasses.replace(cfg, num_nodes=n, num_steps=t)
+    nb = cfg.checkpoint_blocks
+    bsize = t // nb
+    assert bsize % dp_n == 0 and n % dp_n == 0
+
+    from repro.core import models as dyn_models
+    opt_cfg = adamw.AdamWConfig()
+    # optimized execution (SSPerf iteration on the paper's workload):
+    # bf16 redistribution payloads + final-layer loss fused in the
+    # vertex-sharded domain (one all-to-all elided per block)
+    loss_sharded = partition.snapshot_partition_loss(
+        cfg, mesh, axis=dp, comm_dtype=jnp.bfloat16, fuse_final=True)
+
+    def train_step(params, opt_state, frames, edges, ew, labels):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_sharded(p, frames, edges, ew, labels))(params)
+        params, opt_state = adamw.apply_updates(opt_cfg, params, grads,
+                                                opt_state)
+        return params, opt_state, loss
+
+    a_params = _abstract_tree(
+        lambda: dyn_models.init_params(jax.random.PRNGKey(0), cfg))
+    a_opt = _abstract_tree(adamw.init_state, a_params)
+    f32 = jnp.float32
+    abstract = (a_params, a_opt,
+                _sds((nb, bsize, n, cfg.feat_in), f32),
+                _sds((nb, bsize, e_pad, 2), jnp.int32),
+                _sds((nb, bsize, e_pad), f32),
+                _sds((nb, bsize, n), jnp.int32))
+    p_specs = shd.replicate_specs(a_params)
+    o_specs = shd.replicate_specs(a_opt)
+    blk = NamedSharding(mesh, P(None, dp))
+    # fused-loss layout: labels vertex-sharded (except evolvegcn)
+    lab_sh = NamedSharding(mesh, P(None, None, dp)) \
+        if cfg.model != "evolvegcn" else blk
+    return Cell(
+        arch_id=arch.arch_id, shape_name=shape.name, step=train_step,
+        abstract_inputs=abstract,
+        in_shardings=(shd.named(mesh, p_specs), shd.named(mesh, o_specs),
+                      blk, blk, blk, lab_sh),
+        out_shardings=(shd.named(mesh, p_specs), shd.named(mesh, o_specs),
+                       NamedSharding(mesh, P())),
+        donate=(0, 1),
+        meta={"edges_per_snap": e_pad, "nodes": n, "steps": t})
+
+
+# ============================================================= dispatch =====
+
+def build_cell(arch_id: str, shape_name: str, mesh: Mesh,
+               smoke: bool = False,
+               shape_override: dict | None = None,
+               config_override: dict | None = None) -> Cell:
+    arch = registry.get_arch(arch_id)
+    shape = arch.shapes[shape_name]
+    if shape_override:
+        shape = registry.ShapeSpec(shape.name, shape.kind,
+                                   {**shape.dims, **shape_override})
+    cfg = arch.make_smoke_config() if smoke else arch.make_config()
+    if config_override:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **config_override)
+    if arch.family == "lm":
+        if shape.kind == "train":
+            return _lm_train_cell(arch, shape, mesh, cfg)
+        if shape.kind == "prefill":
+            return _lm_prefill_cell(arch, shape, mesh, cfg)
+        if shape.kind == "decode":
+            return _lm_decode_cell(arch, shape, mesh, cfg)
+    if arch.family == "gnn":
+        if shape.kind == "full_graph":
+            return _gnn_full_graph_cell(arch, shape, mesh, cfg)
+        if shape.kind == "minibatch":
+            return _gnn_replica_cell(arch, shape, mesh, cfg, minibatch=True)
+        if shape.kind == "molecule":
+            return _gnn_replica_cell(arch, shape, mesh, cfg, minibatch=False)
+    if arch.family == "recsys":
+        return _din_cell(arch, shape, mesh, cfg)
+    if arch.family == "dyngnn":
+        return _dyngnn_cell(arch, shape, mesh, cfg)
+    raise KeyError((arch_id, shape_name))
+
+
+def all_cells() -> list[tuple[str, str]]:
+    """The 40 assigned (arch x shape) pairs + the paper's own cells."""
+    out = []
+    for arch_id, arch in registry.all_archs().items():
+        for shape_name in arch.shapes:
+            out.append((arch_id, shape_name))
+    return out

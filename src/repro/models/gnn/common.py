@@ -1,0 +1,92 @@
+"""Shared static-graph batch container + heads for the assigned GNN archs.
+
+These archs plug into the dynamic-GNN framework as spatial modules (the
+DESIGN.md arch-applicability mapping); standalone static-graph training uses
+this container: one padded edge list + node features (+ 3D positions for the
+molecular archs) + an optional graph-id vector for batched small graphs
+(disjoint union, the `molecule` shape).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclass
+class GraphBatch:
+    edges: Any              # (E, 2) int32
+    edge_mask: Any          # (E,) f32
+    node_feat: Any          # (N, F) f32
+    node_mask: Any          # (N,) f32
+    positions: Any = None   # (N, 3) f32 or None
+    graph_id: Any = None    # (N,) int32 for batched graphs, else None
+    num_graphs: int = 1
+    labels: Any = None      # (N,) or (num_graphs,) int32
+
+    def tree_flatten(self):
+        return ((self.edges, self.edge_mask, self.node_feat, self.node_mask,
+                 self.positions, self.graph_id, self.labels),
+                self.num_graphs)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        e, em, nf, nm, pos, gid, lab = children
+        return cls(edges=e, edge_mask=em, node_feat=nf, node_mask=nm,
+                   positions=pos, graph_id=gid, num_graphs=aux, labels=lab)
+
+
+jax.tree_util.register_pytree_node(
+    GraphBatch, GraphBatch.tree_flatten, GraphBatch.tree_unflatten)
+
+
+def batch_molecules(n_graphs: int, nodes_per: int, edges_per: int,
+                    feat_dim: int, seed: int = 0,
+                    with_positions: bool = True) -> GraphBatch:
+    """Disjoint union of random small graphs (the `molecule` shape)."""
+    rng = np.random.default_rng(seed)
+    n_total = n_graphs * nodes_per
+    e_total = n_graphs * edges_per
+    edges = np.zeros((e_total, 2), dtype=np.int32)
+    for g in range(n_graphs):
+        base = g * nodes_per
+        src = rng.integers(0, nodes_per, size=(edges_per,))
+        # no self-loops: zero-length edge vectors have no edge frame
+        # (breaks the eSCN rotation); radius graphs never contain them.
+        off = rng.integers(1, nodes_per, size=(edges_per,))
+        dst = (src + off) % nodes_per
+        edges[g * edges_per:(g + 1) * edges_per] = \
+            np.stack([src, dst], axis=1) + base
+    feat = rng.normal(size=(n_total, feat_dim)).astype(np.float32)
+    pos = rng.uniform(0, 5, size=(n_total, 3)).astype(np.float32) \
+        if with_positions else None
+    gid = np.repeat(np.arange(n_graphs, dtype=np.int32), nodes_per)
+    labels = rng.integers(0, 2, size=(n_graphs,)).astype(np.int32)
+    return GraphBatch(edges=jnp.asarray(edges),
+                      edge_mask=jnp.ones((e_total,), jnp.float32),
+                      node_feat=jnp.asarray(feat),
+                      node_mask=jnp.ones((n_total,), jnp.float32),
+                      positions=jnp.asarray(pos) if pos is not None else None,
+                      graph_id=jnp.asarray(gid), num_graphs=n_graphs,
+                      labels=jnp.asarray(labels))
+
+
+def graph_readout(x: Array, graph_id: Array, num_graphs: int,
+                  node_mask: Array) -> Array:
+    """Masked mean pooling per graph: (N, F) -> (G, F)."""
+    xm = x * node_mask[:, None].astype(x.dtype)
+    sums = jax.ops.segment_sum(xm, graph_id, num_segments=num_graphs)
+    cnt = jax.ops.segment_sum(node_mask, graph_id, num_segments=num_graphs)
+    return sums / jnp.maximum(cnt, 1.0)[:, None].astype(x.dtype)
+
+
+def node_ce_loss(logits: Array, labels: Array, mask: Array) -> Array:
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll * mask) / jnp.maximum(mask.sum(), 1.0)

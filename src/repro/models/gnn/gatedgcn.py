@@ -1,0 +1,98 @@
+"""GatedGCN (Bresson & Laurent, arXiv:1711.07553; benchmarking-gnns config:
+16 layers, d_hidden=70, gated aggregation, residual, LayerNorm).
+
+    e_ij' = A h_i + B h_j + C e_ij
+    eta_ij = sigma(e_ij') / (sum_{j'} sigma(e_ij') + eps)
+    h_i'  = h_i + ReLU(LN(U h_i + sum_j eta_ij * (V h_j)))
+    e_ij  = e_ij + ReLU(LN(e_ij'))
+
+(LayerNorm replaces the original BatchNorm: BN's cross-device batch statistics
+are exactly the irregular communication this framework avoids; noted in
+DESIGN.md.)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph import segment
+from repro.models.gnn.common import GraphBatch, graph_readout
+from repro.nn.layers import init_dense
+
+Array = jax.Array
+
+
+def layer_norm(x: Array, w: Array, b: Array, eps: float = 1e-5) -> Array:
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * w + b
+
+
+def init_params(key: Array, d_in: int, d_hidden: int, n_layers: int,
+                num_classes: int, dtype=jnp.float32) -> dict:
+    key, k_in, k_e, k_out = jax.random.split(key, 4)
+    layers = []
+    for _ in range(n_layers):
+        key, *ks = jax.random.split(key, 6)
+        layers.append({
+            "A": init_dense(ks[0], d_hidden, d_hidden, dtype),
+            "B": init_dense(ks[1], d_hidden, d_hidden, dtype),
+            "C": init_dense(ks[2], d_hidden, d_hidden, dtype),
+            "U": init_dense(ks[3], d_hidden, d_hidden, dtype),
+            "V": init_dense(ks[4], d_hidden, d_hidden, dtype),
+            "ln_h_w": jnp.ones((d_hidden,), dtype),
+            "ln_h_b": jnp.zeros((d_hidden,), dtype),
+            "ln_e_w": jnp.ones((d_hidden,), dtype),
+            "ln_e_b": jnp.zeros((d_hidden,), dtype),
+        })
+    return {
+        "embed_h": init_dense(k_in, d_in, d_hidden, dtype),
+        "embed_e": jnp.zeros((1, d_hidden), dtype),  # no input edge feats
+        "layers": layers,
+        "out": init_dense(k_out, d_hidden, num_classes, dtype),
+    }
+
+
+def forward(params: dict, batch: GraphBatch, remat: bool = True) -> Array:
+    """Node embeddings (N, d_hidden) -> logits via params['out'] by caller.
+
+    ``remat``: per-layer activation checkpointing — the (E, d) edge
+    intermediates dominate memory on dense graphs (ogb_products), so only
+    one layer's worth stays live.
+    """
+    edges, emask = batch.edges, batch.edge_mask
+    n = batch.node_feat.shape[0]
+    src, dst = edges[:, 0], edges[:, 1]
+    h = batch.node_feat @ params["embed_h"]
+    e = jnp.broadcast_to(params["embed_e"], (edges.shape[0],
+                                             params["embed_e"].shape[1]))
+
+    def layer(lp, h, e):
+        h_src = jnp.take(h, src, axis=0)
+        h_dst = jnp.take(h, dst, axis=0)
+        e_hat = h_dst @ lp["A"] + h_src @ lp["B"] + e @ lp["C"]
+        gate = jax.nn.sigmoid(e_hat) * emask[:, None]
+        denom = jax.ops.segment_sum(gate, dst, num_segments=n)
+        denom_e = jnp.take(denom, dst, axis=0) + 1e-6
+        eta = gate / denom_e
+        msgs = eta * (h_src @ lp["V"])
+        agg = jax.ops.segment_sum(msgs, dst, num_segments=n)
+        h = h + jax.nn.relu(layer_norm(h @ lp["U"] + agg,
+                                       lp["ln_h_w"], lp["ln_h_b"]))
+        e = e + jax.nn.relu(layer_norm(e_hat, lp["ln_e_w"], lp["ln_e_b"]))
+        return h, e
+
+    if remat:
+        layer = jax.checkpoint(layer, prevent_cse=True)
+    for lp in params["layers"]:
+        h, e = layer(lp, h, e)
+    return h
+
+
+def logits(params: dict, batch: GraphBatch) -> Array:
+    h = forward(params, batch)
+    if batch.graph_id is not None:
+        h = graph_readout(h, batch.graph_id, batch.num_graphs,
+                          batch.node_mask)
+    return h @ params["out"]

@@ -1,0 +1,87 @@
+"""PNA — Principal Neighbourhood Aggregation (arXiv:2004.05718).
+
+Config: 4 layers, d_hidden=75, aggregators {mean, max, min, std} x scalers
+{identity, amplification, attenuation} -> 12 aggregate views concatenated,
+then a linear post-transform, residual connection.
+
+Scalers use log-degree: S_amp = log(d+1)/delta, S_att = delta/log(d+1), with
+delta the mean log-degree of the training graph (computed from the batch).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph import segment
+from repro.models.gnn.common import GraphBatch, graph_readout
+from repro.nn.layers import init_dense
+
+Array = jax.Array
+
+N_AGG = 4
+N_SCALE = 3
+
+
+def init_params(key: Array, d_in: int, d_hidden: int, n_layers: int,
+                num_classes: int, dtype=jnp.float32) -> dict:
+    key, k_in, k_out = jax.random.split(key, 3)
+    layers = []
+    for _ in range(n_layers):
+        key, k1, k2 = jax.random.split(key, 3)
+        layers.append({
+            # pre-transform on (h_i || h_j), post-transform on 12 views
+            "pre": init_dense(k1, 2 * d_hidden, d_hidden, dtype),
+            "post": init_dense(k2, N_AGG * N_SCALE * d_hidden, d_hidden,
+                               dtype),
+            "b": jnp.zeros((d_hidden,), dtype),
+        })
+    return {
+        "embed": init_dense(k_in, d_in, d_hidden, dtype),
+        "layers": layers,
+        "out": init_dense(k_out, d_hidden, num_classes, dtype),
+    }
+
+
+def forward(params: dict, batch: GraphBatch) -> Array:
+    edges, emask = batch.edges, batch.edge_mask
+    n = batch.node_feat.shape[0]
+    src, dst = edges[:, 0], edges[:, 1]
+    deg = segment.in_degree(edges, n, emask)
+    log_deg = jnp.log(deg + 1.0)
+    delta = jnp.maximum(jnp.sum(log_deg * batch.node_mask)
+                        / jnp.maximum(batch.node_mask.sum(), 1.0), 1e-3)
+    s_amp = (log_deg / delta)[:, None]
+    s_att = (delta / jnp.maximum(log_deg, 1e-3))[:, None]
+
+    h = batch.node_feat @ params["embed"]
+
+    def layer(lp, h):
+        h_src = jnp.take(h, src, axis=0)
+        h_dst = jnp.take(h, dst, axis=0)
+        msg = jax.nn.relu(jnp.concatenate([h_dst, h_src], -1) @ lp["pre"])
+        aggs = [
+            segment.scatter_mean(msg, dst, n, emask),
+            segment.scatter_max(msg, dst, n, emask),
+            segment.scatter_min(msg, dst, n, emask),
+            segment.scatter_std(msg, dst, n, emask),
+        ]
+        views = []
+        for a in aggs:
+            views.extend([a, a * s_amp.astype(a.dtype),
+                          a * s_att.astype(a.dtype)])
+        return h + jax.nn.relu(jnp.concatenate(views, -1) @ lp["post"]
+                               + lp["b"])
+
+    layer = jax.checkpoint(layer, prevent_cse=True)
+    for lp in params["layers"]:
+        h = layer(lp, h)
+    return h
+
+
+def logits(params: dict, batch: GraphBatch) -> Array:
+    h = forward(params, batch)
+    if batch.graph_id is not None:
+        h = graph_readout(h, batch.graph_id, batch.num_graphs,
+                          batch.node_mask)
+    return h @ params["out"]

@@ -1,0 +1,95 @@
+"""SchNet (arXiv:1706.08566): continuous-filter convolutions over 3D
+positions.  Config: 3 interaction blocks, d_hidden=64, 300 RBF centers,
+cutoff 10 A.
+
+    interaction:  x_j -> W1 x_j ;  filter = MLP(rbf(d_ij)) (ssp act)
+                  m_i = sum_j (W1 x_j) * filter(d_ij)
+                  x_i += W3 ssp(W2 m_i)
+
+ssp = shifted softplus.  Edge list = radius graph (precomputed on host /
+supplied by the shape); distances computed on device from positions.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn.common import GraphBatch, graph_readout
+from repro.nn.layers import init_dense
+
+Array = jax.Array
+
+
+def ssp(x: Array) -> Array:
+    """Shifted softplus: log(0.5 e^x + 0.5)."""
+    return jax.nn.softplus(x) - jnp.log(2.0)
+
+
+def rbf_expand(dist: Array, n_rbf: int, cutoff: float) -> Array:
+    """Gaussian radial basis on [0, cutoff]: (E,) -> (E, n_rbf)."""
+    centers = jnp.linspace(0.0, cutoff, n_rbf, dtype=dist.dtype)
+    gamma = 1.0 / ((cutoff / n_rbf) ** 2)
+    return jnp.exp(-gamma * (dist[:, None] - centers[None, :]) ** 2)
+
+
+def init_params(key: Array, d_in: int, d_hidden: int, n_interactions: int,
+                n_rbf: int, num_classes: int, dtype=jnp.float32) -> dict:
+    key, k_in, k_o1, k_o2 = jax.random.split(key, 4)
+    blocks = []
+    for _ in range(n_interactions):
+        key, *ks = jax.random.split(key, 6)
+        blocks.append({
+            "w1": init_dense(ks[0], d_hidden, d_hidden, dtype),
+            "filt1": init_dense(ks[1], n_rbf, d_hidden, dtype),
+            "filt1_b": jnp.zeros((d_hidden,), dtype),
+            "filt2": init_dense(ks[2], d_hidden, d_hidden, dtype),
+            "filt2_b": jnp.zeros((d_hidden,), dtype),
+            "w2": init_dense(ks[3], d_hidden, d_hidden, dtype),
+            "w2_b": jnp.zeros((d_hidden,), dtype),
+            "w3": init_dense(ks[4], d_hidden, d_hidden, dtype),
+            "w3_b": jnp.zeros((d_hidden,), dtype),
+        })
+    return {
+        "embed": init_dense(k_in, d_in, d_hidden, dtype),
+        "blocks": blocks,
+        "out1": init_dense(k_o1, d_hidden, d_hidden // 2, dtype),
+        "out2": init_dense(k_o2, d_hidden // 2, num_classes, dtype),
+    }
+
+
+def forward(params: dict, batch: GraphBatch, cutoff: float = 10.0) -> Array:
+    edges, emask = batch.edges, batch.edge_mask
+    n = batch.node_feat.shape[0]
+    src, dst = edges[:, 0], edges[:, 1]
+    pos = batch.positions
+    diff = jnp.take(pos, src, axis=0) - jnp.take(pos, dst, axis=0)
+    dist = jnp.sqrt(jnp.sum(diff * diff, axis=-1) + 1e-12)
+    n_rbf = params["blocks"][0]["filt1"].shape[0]
+    rbf = rbf_expand(dist, n_rbf, cutoff)
+    # smooth cosine cutoff envelope
+    env = 0.5 * (jnp.cos(jnp.pi * jnp.clip(dist / cutoff, 0, 1)) + 1.0)
+    w_edge = (env * emask)[:, None]
+
+    x = batch.node_feat @ params["embed"]
+
+    def block(bp, x):
+        filt = ssp(rbf @ bp["filt1"] + bp["filt1_b"])
+        filt = ssp(filt @ bp["filt2"] + bp["filt2_b"]) * w_edge
+        msgs = jnp.take(x @ bp["w1"], src, axis=0) * filt
+        m = jax.ops.segment_sum(msgs, dst, num_segments=n)
+        return x + (ssp(m @ bp["w2"] + bp["w2_b"]) @ bp["w3"] + bp["w3_b"])
+
+    block = jax.checkpoint(block, prevent_cse=True)
+    for bp in params["blocks"]:
+        x = block(bp, x)
+    return x
+
+
+def logits(params: dict, batch: GraphBatch, cutoff: float = 10.0) -> Array:
+    h = forward(params, batch, cutoff)
+    h = ssp(h @ params["out1"])
+    if batch.graph_id is not None:
+        h = graph_readout(h, batch.graph_id, batch.num_graphs,
+                          batch.node_mask)
+    return h @ params["out2"]

@@ -1,0 +1,155 @@
+"""SO(3) representation machinery for eSCN-style equivariant convolutions.
+
+The eSCN trick (arXiv:2302.03655, used by EquiformerV2 arXiv:2306.12059):
+rotate each edge's features so the edge direction aligns with the z-axis;
+in that frame the SH of the edge direction is nonzero only at m=0, so the
+full Clebsch-Gordan tensor product collapses to independent per-m linear
+maps (SO(2) convolutions) — O(L^3) instead of O(L^6).
+
+This module provides real Wigner-D matrices D^l(alpha, beta, gamma) for
+l <= L_MAX, evaluated per edge inside jit:
+
+  * Wigner small-d via the explicit factorial sum (coefficients precomputed
+    as numpy tables at import, evaluation = powers of cos/sin half-angle),
+  * complex D = e^{-i m' alpha} d^l_{m'm}(beta) e^{-i m gamma},
+  * real basis change D_real = U D U^dagger (standard real-SH unitary U).
+
+Conventions: z-y-z Euler angles, active rotations; real SH ordering
+m = -l..l within each l block; the full feature vector stacks blocks
+l = 0..l_max (dim = (l_max+1)^2).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+L_MAX_SUPPORTED = 8
+
+
+def irreps_dim(l_max: int) -> int:
+    return (l_max + 1) ** 2
+
+
+def block_slices(l_max: int) -> list[slice]:
+    out, off = [], 0
+    for l in range(l_max + 1):
+        out.append(slice(off, off + 2 * l + 1))
+        off += 2 * l + 1
+    return out
+
+
+@lru_cache(maxsize=None)
+def _wigner_d_tables(l: int):
+    """Coefficient tables for d^l_{m'm}(beta) = sum_k c * cos^p * sin^q.
+
+    Returns (rows, cols, cos_pow, sin_pow, coeff) flat numpy arrays.
+    """
+    rows, cols, cps, sps, cfs = [], [], [], [], []
+    for mp in range(-l, l + 1):
+        for m in range(-l, l + 1):
+            pref = math.sqrt(math.factorial(l + mp) * math.factorial(l - mp)
+                             * math.factorial(l + m) * math.factorial(l - m))
+            k_lo = max(0, m - mp)
+            k_hi = min(l + m, l - mp)
+            for k in range(k_lo, k_hi + 1):
+                denom = (math.factorial(l + m - k) * math.factorial(k)
+                         * math.factorial(l - k - mp)
+                         * math.factorial(k - m + mp))
+                c = ((-1) ** (k - m + mp)) * pref / denom
+                rows.append(mp + l)
+                cols.append(m + l)
+                cps.append(2 * l + m - mp - 2 * k)
+                sps.append(2 * k + mp - m)
+                cfs.append(c)
+    return (np.asarray(rows, np.int32), np.asarray(cols, np.int32),
+            np.asarray(cps, np.int32), np.asarray(sps, np.int32),
+            np.asarray(cfs, np.float64))
+
+
+@lru_cache(maxsize=None)
+def _real_u_matrix(l: int) -> np.ndarray:
+    """Unitary U with Y_real = U Y_complex (complex m ordered -l..l)."""
+    dim = 2 * l + 1
+    u = np.zeros((dim, dim), dtype=np.complex128)
+    s2 = 1.0 / math.sqrt(2.0)
+    for m in range(-l, l + 1):
+        i = m + l
+        if m < 0:
+            # sign fixed so that the l=1 block in (y, z, x) ordering equals
+            # the coordinate rotation matrix (validated in tests)
+            u[i, m + l] = -1j * s2
+            u[i, -m + l] = 1j * s2 * ((-1) ** m)
+        elif m == 0:
+            u[i, l] = 1.0
+        else:
+            u[i, -m + l] = s2
+            u[i, m + l] = s2 * ((-1) ** m)
+    return u
+
+
+def wigner_d_real(l: int, alpha: Array, beta: Array, gamma: Array) -> Array:
+    """Real Wigner-D matrices for one l; angles (...,) -> (..., 2l+1, 2l+1)."""
+    rows, cols, cps, sps, cfs = _wigner_d_tables(l)
+    c = jnp.cos(beta / 2.0)
+    s = jnp.sin(beta / 2.0)
+    # powers 0..2l gathered from a table of stacked powers
+    pows_c = jnp.stack([c ** p for p in range(2 * l + 1)], axis=-1)
+    pows_s = jnp.stack([s ** p for p in range(2 * l + 1)], axis=-1)
+    terms = (jnp.asarray(cfs, jnp.float32)
+             * jnp.take(pows_c, jnp.asarray(cps), axis=-1)
+             * jnp.take(pows_s, jnp.asarray(sps), axis=-1))
+    dim = 2 * l + 1
+    flat = jnp.asarray(rows, jnp.int32) * dim + jnp.asarray(cols, jnp.int32)
+    small_d = jax.ops.segment_sum(
+        jnp.moveaxis(terms, -1, 0), flat, num_segments=dim * dim)
+    small_d = jnp.moveaxis(small_d, 0, -1).reshape(beta.shape + (dim, dim))
+    m_range = jnp.arange(-l, l + 1, dtype=jnp.float32)
+    e_alpha = jnp.exp(-1j * m_range * alpha[..., None])      # (..., dim)
+    e_gamma = jnp.exp(-1j * m_range * gamma[..., None])
+    d_complex = (e_alpha[..., :, None] * small_d.astype(jnp.complex64)
+                 * e_gamma[..., None, :])
+    u = jnp.asarray(_real_u_matrix(l), jnp.complex64)
+    d_real = jnp.einsum("ij,...jk,lk->...il", u, d_complex, u.conj())
+    return jnp.real(d_real).astype(jnp.float32)
+
+
+def wigner_d_real_stack(l_max: int, alpha: Array, beta: Array,
+                        gamma: Array) -> list[Array]:
+    """Per-l list of real Wigner-D matrices (block-diagonal factors)."""
+    return [wigner_d_real(l, alpha, beta, gamma) for l in range(l_max + 1)]
+
+
+def edge_rotation_angles(vec: Array) -> tuple[Array, Array, Array]:
+    """Euler angles (alpha=0, beta, gamma) rotating edge direction -> z-axis.
+
+    For unit r with polar angle theta and azimuth phi, R = Ry(-theta) Rz(-phi)
+    maps r to z; as z-y-z Euler (Rz(a) Ry(b) Rz(g)): a = 0, b = -theta,
+    g = -phi.
+    """
+    r = vec / jnp.maximum(jnp.linalg.norm(vec, axis=-1, keepdims=True), 1e-9)
+    theta = jnp.arccos(jnp.clip(r[..., 2], -1.0, 1.0))
+    phi = jnp.arctan2(r[..., 1], r[..., 0])
+    zeros = jnp.zeros_like(theta)
+    return zeros, -theta, -phi
+
+
+def rotate_features(feats: Array, d_blocks: list[Array],
+                    l_max: int, inverse: bool = False) -> Array:
+    """Apply block-diagonal Wigner-D to stacked irreps features.
+
+    feats: (E, dim, C); d_blocks[l]: (E, 2l+1, 2l+1).
+    """
+    out = []
+    for l, sl in enumerate(block_slices(l_max)):
+        d = d_blocks[l]
+        if inverse:
+            d = jnp.swapaxes(d, -1, -2)   # orthogonal: inverse = transpose
+        out.append(jnp.einsum("eij,ejc->eic", d, feats[:, sl, :]))
+    return jnp.concatenate(out, axis=1)

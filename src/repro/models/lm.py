@@ -1,0 +1,345 @@
+"""Decoder-only transformer LM family (yi-6b / gemma-7b / minicpm-2b /
+olmoe-1b-7b / moonshot-v1-16b-a3b).
+
+Structure: pre-RMSNorm blocks of GQA attention + gated FFN (dense GLU or
+MoE), RoPE positions, untied output head.  Layer parameters are STACKED on a
+leading L axis and the forward is a ``lax.scan`` over layers: the HLO is one
+layer's graph regardless of depth, which keeps 256/512-device dry-run
+compiles tractable and is the idiomatic production pattern (MaxText does the
+same).  ``jax.checkpoint`` on the block body implements activation remat.
+
+Sharding is annotated via ``with_sharding_constraint`` with specs from
+``repro.dist.sharding`` (TP over 'model', DP over ('pod','data'), EP for MoE
+experts, optional KV-sequence context parallelism for long decode).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import attention as attn
+from repro.nn import layers as nnl
+from repro.nn import moe as moelib
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class LMConfig:
+    name: str = "lm"
+    num_layers: int = 4
+    d_model: int = 256
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    head_dim: int = 64
+    d_ff: int = 1024
+    vocab_size: int = 32000
+    activation: str = "silu"         # silu = SwiGLU, gelu = GeGLU (gemma)
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    rms_plus_one: bool = False       # gemma (1 + w) RMSNorm
+    embed_scale: bool = False        # gemma sqrt(d_model) embedding scale
+    # MoE (0 experts = dense)
+    moe_experts: int = 0
+    moe_top_k: int = 0
+    moe_capacity_factor: float = 1.25
+    aux_loss_weight: float = 0.01
+    # execution
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    q_chunk: int = attn.DEFAULT_Q_CHUNK
+    # cost-extraction mode: fully unroll layer/chunk scans so XLA's
+    # cost_analysis (which counts while bodies ONCE) sees every iteration
+    layer_unroll: int = 1
+    unroll_chunks: bool = False
+    # two-level layer remat (sqrt-checkpointing — the paper's SS3.1 timeline
+    # blocking applied to the LAYER axis): save one carry per group of
+    # ``layer_block`` layers instead of per layer; inner layers re-nest
+    # jax.checkpoint.  0 = flat per-layer remat.
+    layer_block: int = 8
+    # chunk the CE loss over the sequence so (B, S, V) f32 logits are never
+    # materialized (SSPerf iteration 6); 0 = unchunked
+    loss_chunk: int = 1024
+    # schedule hint (minicpm uses WSD)
+    lr_schedule: str = "cosine"
+
+    @property
+    def is_moe(self) -> bool:
+        return self.moe_experts > 0
+
+    @property
+    def padded_vocab(self) -> int:
+        return -(-self.vocab_size // 256) * 256
+
+    def param_count(self) -> int:
+        d, l = self.d_model, self.num_layers
+        attn_p = d * self.head_dim * (2 * self.num_heads
+                                      + 2 * self.num_kv_heads)
+        if self.is_moe:
+            ffn_p = self.moe_experts * 3 * d * self.d_ff + d * self.moe_experts
+        else:
+            ffn_p = 3 * d * self.d_ff
+        embed = 2 * self.padded_vocab * d
+        return l * (attn_p + ffn_p + 2 * d) + embed + d
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE counts top_k experts only)."""
+        if not self.is_moe:
+            return self.param_count()
+        d, l = self.d_model, self.num_layers
+        attn_p = d * self.head_dim * (2 * self.num_heads
+                                      + 2 * self.num_kv_heads)
+        ffn_p = self.moe_top_k * 3 * d * self.d_ff
+        embed = 2 * self.padded_vocab * d
+        return l * (attn_p + ffn_p + 2 * d) + embed + d
+
+
+# ------------------------------------------------------------- params -------
+
+def init_lm_params(key: Array, cfg: LMConfig) -> dict:
+    keys = jax.random.split(key, 8)
+    l = cfg.num_layers
+
+    def stack(init_fn, k):
+        ks = jax.random.split(k, l)
+        return jax.vmap(init_fn)(ks)
+
+    def attn_init(k):
+        return attn.init_attention(k, cfg.d_model, cfg.num_heads,
+                                   cfg.num_kv_heads, cfg.head_dim, cfg.dtype)
+
+    if cfg.is_moe:
+        def ffn_init(k):
+            return moelib.init_moe(k, cfg.d_model, cfg.d_ff,
+                                   cfg.moe_experts, cfg.dtype)
+    else:
+        def ffn_init(k):
+            return nnl.init_glu_ffn(k, cfg.d_model, cfg.d_ff, cfg.dtype)
+
+    vp = cfg.padded_vocab
+    embed = (jax.random.normal(keys[0], (vp, cfg.d_model), jnp.float32)
+             * 0.02).astype(cfg.dtype)
+    out_w = (jax.random.normal(keys[1], (cfg.d_model, vp), jnp.float32)
+             * 0.02).astype(cfg.dtype)
+    return {
+        "embed": embed,
+        "layers": {
+            "attn": stack(attn_init, keys[2]),
+            "ffn": stack(ffn_init, keys[3]),
+            "ln1": jnp.zeros((l, cfg.d_model), cfg.dtype)
+            if cfg.rms_plus_one else jnp.ones((l, cfg.d_model), cfg.dtype),
+            "ln2": jnp.zeros((l, cfg.d_model), cfg.dtype)
+            if cfg.rms_plus_one else jnp.ones((l, cfg.d_model), cfg.dtype),
+        },
+        "final_norm": jnp.zeros((cfg.d_model,), cfg.dtype)
+        if cfg.rms_plus_one else jnp.ones((cfg.d_model,), cfg.dtype),
+        "out": out_w,
+    }
+
+
+# ------------------------------------------------------------ forward -------
+
+def _block(cfg: LMConfig, lp: dict, x: Array, positions: Array,
+           constrain, chunk_constrain=None) -> tuple[Array, Array]:
+    """One transformer block; returns (x, moe_aux_loss)."""
+    h = nnl.rms_norm(x, lp["ln1"], cfg.norm_eps, cfg.rms_plus_one)
+    a = attn.attention_apply(lp["attn"], h, positions, cfg.rope_theta,
+                             cfg.q_chunk, unroll=cfg.unroll_chunks,
+                             chunk_constrain=chunk_constrain)
+    x = constrain(x + a)
+    h = nnl.rms_norm(x, lp["ln2"], cfg.norm_eps, cfg.rms_plus_one)
+    if cfg.is_moe:
+        f, aux = moelib.moe_apply(lp["ffn"], h, cfg.moe_top_k,
+                                  cfg.moe_capacity_factor, cfg.activation,
+                                  ep_constrain=getattr(constrain,
+                                                       "ep", None))
+        lb = aux["lb_loss"]
+    else:
+        f = nnl.glu_ffn_apply(lp["ffn"], h, cfg.activation)
+        lb = jnp.zeros((), jnp.float32)
+    return constrain(x + f), lb
+
+
+def forward(cfg: LMConfig, params: dict, tokens: Array,
+            constrain=lambda x: x,
+            return_hidden: bool = False,
+            chunk_constrain=None) -> tuple[Array, Array]:
+    """tokens (B, S) int32 -> (logits (B, S, Vp) f32, moe aux loss); with
+    return_hidden=True returns final hidden states instead of logits."""
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    x = constrain(x)
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    def layer_step(carry, lp):
+        x, lb_sum = carry
+        x, lb = _block(cfg, lp, x, positions, constrain, chunk_constrain)
+        return (x, lb_sum + lb), None
+
+    init = (x, jnp.zeros((), jnp.float32))
+    lb_grouping = (cfg.remat and cfg.layer_unroll == 1
+                   and 1 < cfg.layer_block < cfg.num_layers
+                   and cfg.num_layers % cfg.layer_block == 0)
+    if lb_grouping:
+        g = cfg.num_layers // cfg.layer_block
+        grouped = jax.tree.map(
+            lambda a: a.reshape((g, cfg.layer_block) + a.shape[1:]),
+            params["layers"])
+        inner = jax.checkpoint(layer_step, prevent_cse=True)
+
+        def group_step(carry, glp):
+            c2, _ = jax.lax.scan(inner, carry, glp)
+            return c2, None
+
+        body = jax.checkpoint(group_step, prevent_cse=True)
+        (x, lb_sum), _ = jax.lax.scan(body, init, grouped)
+    else:
+        step = jax.checkpoint(layer_step, prevent_cse=True) if cfg.remat \
+            else layer_step
+        (x, lb_sum), _ = jax.lax.scan(step, init, params["layers"],
+                                      unroll=cfg.layer_unroll)
+    x = nnl.rms_norm(x, params["final_norm"], cfg.norm_eps, cfg.rms_plus_one)
+    if return_hidden:
+        return x, lb_sum
+    logits = jnp.einsum("bsd,dv->bsv", x, params["out"]).astype(jnp.float32)
+    return logits, lb_sum
+
+
+def lm_loss(cfg: LMConfig, params: dict, tokens: Array, targets: Array,
+            constrain=lambda x: x, chunk_constrain=None) -> Array:
+    """Next-token CE + MoE load-balance aux.
+
+    The head + CE run seq-chunked under remat (cfg.loss_chunk) so the
+    (B, S, Vp) f32 logits tensor never exists in full.
+    """
+    b, s_len = tokens.shape
+    hidden, lb = forward(cfg, params, tokens, constrain,
+                         return_hidden=True,
+                         chunk_constrain=chunk_constrain)
+    mask_all = (targets >= 0) & (targets < cfg.vocab_size)
+
+    def chunk_nll(x_c, tgt_c, m_c):
+        logits = jnp.einsum("bsd,dv->bsv", x_c,
+                            params["out"]).astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, tgt_c[..., None], axis=-1)[..., 0]
+        return jnp.sum(jnp.where(m_c, nll, 0.0))
+
+    c = cfg.loss_chunk
+    if c and s_len % c == 0 and s_len > c:
+        n_chunks = s_len // c
+        xc = hidden.reshape(b, n_chunks, c, -1).transpose(1, 0, 2, 3)
+        tc = targets.reshape(b, n_chunks, c).transpose(1, 0, 2)
+        mc = mask_all.reshape(b, n_chunks, c).transpose(1, 0, 2)
+
+        def step(acc, inp):
+            return acc + jax.checkpoint(chunk_nll)(*inp), None
+
+        total, _ = jax.lax.scan(step, jnp.zeros((), jnp.float32),
+                                (xc, tc, mc))
+    else:
+        total = chunk_nll(hidden, targets, mask_all)
+    ce = total / jnp.maximum(mask_all.sum(), 1)
+    return ce + cfg.aux_loss_weight * lb / cfg.num_layers
+
+
+# -------------------------------------------------------------- decode ------
+
+def init_kv_cache(cfg: LMConfig, batch: int, max_len: int,
+                  dtype=None) -> dict:
+    dtype = dtype or cfg.dtype
+    shape = (cfg.num_layers, batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "len": jnp.zeros((batch,), jnp.int32)}
+
+
+def decode_step(cfg: LMConfig, params: dict, cache: dict, token: Array,
+                constrain=lambda x: x) -> tuple[Array, dict]:
+    """One decoding step. token: (B,) int32 -> (logits (B, Vp), new cache)."""
+    x = jnp.take(params["embed"], token, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    x = constrain(x)
+    cache_len = cache["len"]
+
+    def layer_step(x, lp_kv):
+        lp, k_c, v_c = lp_kv
+        h = nnl.rms_norm(x, lp["ln1"], cfg.norm_eps, cfg.rms_plus_one)
+        a, k_new, v_new = attn.decode_step_attention(
+            lp["attn"], h, k_c, v_c, cache_len, cfg.rope_theta)
+        x = x + a
+        h = nnl.rms_norm(x, lp["ln2"], cfg.norm_eps, cfg.rms_plus_one)
+        if cfg.is_moe:
+            f, _ = moelib.moe_apply(lp["ffn"], h[:, None, :], cfg.moe_top_k,
+                                    cfg.moe_capacity_factor, cfg.activation)
+            f = f[:, 0, :]
+        else:
+            f = nnl.glu_ffn_apply(lp["ffn"], h, cfg.activation)
+        return constrain(x + f), (k_new, v_new)
+
+    x, (k_all, v_all) = jax.lax.scan(
+        layer_step, x, (params["layers"], cache["k"], cache["v"]),
+        unroll=cfg.layer_unroll)
+    x = nnl.rms_norm(x, params["final_norm"], cfg.norm_eps, cfg.rms_plus_one)
+    logits = (x @ params["out"]).astype(jnp.float32)
+    new_cache = {"k": k_all, "v": v_all, "len": cache_len + 1}
+    return logits, new_cache
+
+
+def prefill(cfg: LMConfig, params: dict, tokens: Array, max_len: int,
+            constrain=lambda x: x, chunk_constrain=None) -> tuple[Array, dict]:
+    """Prefill the KV cache from a full prompt; returns last-token logits.
+
+    Runs the training forward per layer but also emits K/V; tokens (B, S).
+    """
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    x = constrain(x)
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    def layer_step(x, lp):
+        h = nnl.rms_norm(x, lp["ln1"], cfg.norm_eps, cfg.rms_plus_one)
+        q = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wv"])
+        from repro.nn.rope import apply_rope
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        if s > attn.CHUNK_THRESHOLD or chunk_constrain is not None:
+            o = attn.chunked_causal_attention(
+                q, k, v, cfg.q_chunk, unroll=cfg.unroll_chunks,
+                chunk_constrain=chunk_constrain)
+        else:
+            o = attn.causal_attention(q, k, v)
+        a = jnp.einsum("bshk,hkd->bsd", o, lp["attn"]["wo"])
+        x = constrain(x + a)
+        h = nnl.rms_norm(x, lp["ln2"], cfg.norm_eps, cfg.rms_plus_one)
+        if cfg.is_moe:
+            f, _ = moelib.moe_apply(lp["ffn"], h, cfg.moe_top_k,
+                                    cfg.moe_capacity_factor, cfg.activation,
+                                    ep_constrain=getattr(constrain,
+                                                         "ep", None))
+        else:
+            f = nnl.glu_ffn_apply(lp["ffn"], h, cfg.activation)
+        kv = (jnp.pad(k, ((0, 0), (0, max_len - s), (0, 0), (0, 0))),
+              jnp.pad(v, ((0, 0), (0, max_len - s), (0, 0), (0, 0))))
+        return constrain(x + f), kv
+
+    body = jax.checkpoint(layer_step, prevent_cse=True) if cfg.remat \
+        else layer_step
+    x, (k_all, v_all) = jax.lax.scan(body, x, params["layers"],
+                                     unroll=cfg.layer_unroll)
+    x = nnl.rms_norm(x, params["final_norm"], cfg.norm_eps, cfg.rms_plus_one)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], params["out"]) \
+        .astype(jnp.float32)
+    cache = {"k": k_all, "v": v_all,
+             "len": jnp.full((b,), s, jnp.int32)}
+    return logits, cache

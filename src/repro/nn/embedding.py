@@ -1,0 +1,59 @@
+"""Sparse embedding substrate for recsys: EmbeddingBag built from
+``jnp.take`` + ``jax.ops.segment_sum`` (JAX has no native EmbeddingBag;
+this IS part of the system).
+
+Tables are row(vocab)-sharded over the 'model' mesh axis at scale; the
+lookup of a sharded table under GSPMD lowers to partial gathers + an
+all-reduce — the regular-pattern re-distribution this framework favors
+(DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def init_table(key: Array, vocab: int, dim: int,
+               dtype=jnp.float32) -> Array:
+    return (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.01
+            ).astype(dtype)
+
+
+def embedding_lookup(table: Array, ids: Array) -> Array:
+    """Plain lookup: ids (...,) int32 -> (..., dim)."""
+    return jnp.take(table, ids, axis=0)
+
+
+def embedding_bag(table: Array, ids: Array, offsets_or_mask: Array,
+                  mode: str = "sum") -> Array:
+    """Bagged lookup over a padded (B, L) id matrix with a validity mask.
+
+    Equivalent to torch.nn.EmbeddingBag on padded bags:
+      out[b] = reduce_{l: mask[b,l]>0} table[ids[b,l]]
+    """
+    b, l = ids.shape
+    emb = jnp.take(table, ids.reshape(-1), axis=0).reshape(b, l, -1)
+    mask = offsets_or_mask.astype(emb.dtype)
+    if mode == "sum":
+        return jnp.sum(emb * mask[..., None], axis=1)
+    if mode == "mean":
+        cnt = jnp.maximum(mask.sum(axis=1, keepdims=True), 1.0)
+        return jnp.sum(emb * mask[..., None], axis=1) / cnt[..., None][:, 0]
+    if mode == "max":
+        neg = jnp.where(mask[..., None] > 0, emb, -1e30)
+        out = jnp.max(neg, axis=1)
+        return jnp.where(out <= -1e29, 0.0, out)
+    raise ValueError(mode)
+
+
+def embedding_bag_segment(table: Array, flat_ids: Array, segment_ids: Array,
+                          num_bags: int, weights: Array | None = None
+                          ) -> Array:
+    """Ragged EmbeddingBag: flat ids + segment ids (CSR-style bags)."""
+    emb = jnp.take(table, flat_ids, axis=0)
+    if weights is not None:
+        emb = emb * weights[:, None].astype(emb.dtype)
+    return jax.ops.segment_sum(emb, segment_ids, num_segments=num_bags)

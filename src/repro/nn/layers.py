@@ -1,0 +1,82 @@
+"""Transformer substrate: norms, dense projections, gated FFNs.
+
+Pure-functional modules: ``init_*`` build param pytrees (with matching
+PartitionSpec trees supplied by ``repro.dist.sharding``); ``*_apply`` are
+jittable.  Everything is einsum-based so GSPMD can shard along the annotated
+logical axes.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def rms_norm(x: Array, weight: Array, eps: float = 1e-6,
+             plus_one: bool = False) -> Array:
+    """RMSNorm; ``plus_one`` uses the (1 + w) parametrization (Gemma)."""
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    xn = xf * jax.lax.rsqrt(var + eps)
+    w = weight.astype(jnp.float32)
+    if plus_one:
+        w = 1.0 + w
+    return (xn * w).astype(dtype)
+
+
+def init_dense(key: Array, d_in: int, d_out: int, dtype=jnp.bfloat16) -> Array:
+    scale = 1.0 / jnp.sqrt(d_in)
+    w = jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * scale
+    return w.astype(dtype)
+
+
+ACTIVATIONS: dict[str, Callable] = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+}
+
+
+def init_glu_ffn(key: Array, d_model: int, d_ff: int,
+                 dtype=jnp.bfloat16) -> dict:
+    """Gated FFN (SwiGLU / GeGLU — the activation is chosen at apply time)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi_gate": init_dense(k1, d_model, d_ff, dtype),
+        "wi_up": init_dense(k2, d_model, d_ff, dtype),
+        "wo": init_dense(k3, d_ff, d_model, dtype),
+    }
+
+
+def glu_ffn_apply(params: dict, x: Array, activation: str = "silu") -> Array:
+    act = ACTIVATIONS[activation]
+    gate = act(jnp.einsum("...d,df->...f", x, params["wi_gate"]))
+    up = jnp.einsum("...d,df->...f", x, params["wi_up"])
+    return jnp.einsum("...f,fd->...d", gate * up, params["wo"])
+
+
+def init_mlp(key: Array, dims: list[int], dtype=jnp.float32) -> list[dict]:
+    """Plain MLP stack (used by the recsys / GNN heads)."""
+    layers = []
+    for i in range(len(dims) - 1):
+        key, k = jax.random.split(key)
+        layers.append({
+            "w": init_dense(k, dims[i], dims[i + 1], dtype),
+            "b": jnp.zeros((dims[i + 1],), dtype=dtype),
+        })
+    return layers
+
+
+def mlp_apply(layers: list[dict], x: Array, activation: str = "relu",
+              final_activation: bool = False) -> Array:
+    act = ACTIVATIONS[activation]
+    for i, layer in enumerate(layers):
+        x = x @ layer["w"] + layer["b"]
+        if i < len(layers) - 1 or final_activation:
+            x = act(x)
+    return x

@@ -1,0 +1,128 @@
+"""Mixture-of-Experts FFN with sort-based top-k dispatch (EP-shardable).
+
+Dispatch is the MegaBlocks/GShard hybrid that works well under GSPMD:
+
+  1. router logits -> top-k experts + softmax combine weights per token,
+  2. flatten (token, k) assignments, order by expert id (argsort),
+  3. positions within each expert via a cumulative count, clipped to a static
+     capacity C = ceil(cf * T * k / E),
+  4. gather tokens into the (E, C, d) expert batch   (one scatter),
+  5. batched expert GLU-FFN einsum  ("ecd,edf->ecf") — the E axis is what
+     expert parallelism shards over the 'model' mesh axis,
+  6. scatter back with combine weights (one gather + segment-sum over k).
+
+Everything is static-shape; tokens overflowing an expert's capacity are
+dropped (standard capacity-factor semantics), counted in ``aux['dropped']``.
+The auxiliary load-balancing loss follows Switch/GShard.
+
+This dispatch -> process -> undispatch structure is the transformer analogue
+of the paper's snapshot re-distribution: tokens re-sharded by expert id via
+all-to-all, processed locally, and re-sharded back (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import ACTIVATIONS
+
+Array = jax.Array
+
+
+def init_moe(key: Array, d_model: int, d_ff: int, num_experts: int,
+             dtype=jnp.bfloat16) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    scale = 1.0 / jnp.sqrt(d_model)
+
+    def mk(k, shape, s):
+        return (jax.random.normal(k, shape, dtype=jnp.float32) * s
+                ).astype(dtype)
+
+    return {
+        "router": mk(k1, (d_model, num_experts), scale).astype(jnp.float32),
+        "wi_gate": mk(k2, (num_experts, d_model, d_ff), scale),
+        "wi_up": mk(k3, (num_experts, d_model, d_ff), scale),
+        "wo": mk(k4, (num_experts, d_ff, d_model), 1.0 / jnp.sqrt(d_ff)),
+    }
+
+
+def moe_apply(params: dict, x: Array, top_k: int,
+              capacity_factor: float = 1.25, activation: str = "silu",
+              capacity: int | None = None,
+              ep_constrain=None) -> tuple[Array, dict]:
+    """x: (B, S, d) -> (out (B, S, d), aux dict with load-balance loss).
+
+    ``ep_constrain``: sharding hook for the (E, C, d) expert batch —
+    P('model', dp, None) pins experts to EP shards and the capacity dim to
+    the data axes, so the dispatch lowers to an all-to-all instead of the
+    all-gather GSPMD otherwise picks (§Perf iteration on the MoE cells).
+    """
+    b, s, d = x.shape
+    e = params["router"].shape[1]
+    tokens = x.reshape(b * s, d)
+    t = b * s
+    if capacity is None:
+        capacity = int(capacity_factor * t * top_k / e)
+        capacity = max(8, -(-capacity // 8) * 8)
+
+    logits = tokens.astype(jnp.float32) @ params["router"]   # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)      # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(axis=-1, keepdims=True), 1e-9)
+
+    # ---- flatten (T, k) assignments and order by expert ------------------
+    flat_expert = expert_idx.reshape(-1)                     # (T*k,)
+    flat_token = jnp.repeat(jnp.arange(t), top_k)
+    flat_gate = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_expert, stable=True)
+    se, st, sg = (jnp.take(a, order) for a in
+                  (flat_expert, flat_token, flat_gate))
+    # position of each assignment within its expert
+    ones = jnp.ones_like(se)
+    csum = jnp.cumsum(ones) - 1
+    expert_start = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32),
+         jnp.cumsum(jax.ops.segment_sum(ones, se, num_segments=e))[:-1]
+         .astype(jnp.int32)])
+    pos_in_expert = csum.astype(jnp.int32) - jnp.take(expert_start, se)
+    keep = pos_in_expert < capacity
+
+    # ---- gather tokens into the (E, C, d) expert batch --------------------
+    slot = jnp.where(keep, se * capacity + pos_in_expert, e * capacity)
+    token_for_slot = jnp.zeros((e * capacity + 1,), jnp.int32) \
+        .at[slot].set(st.astype(jnp.int32), mode="drop")[:-1]
+    slot_filled = jnp.zeros((e * capacity + 1,), jnp.float32) \
+        .at[slot].set(1.0, mode="drop")[:-1]
+    expert_in = jnp.take(tokens, token_for_slot, axis=0) \
+        * slot_filled[:, None].astype(tokens.dtype)
+    expert_in = expert_in.reshape(e, capacity, d)
+    if ep_constrain is not None:
+        expert_in = ep_constrain(expert_in)
+
+    # ---- expert FFNs (E sharded over the 'model' axis = EP) ---------------
+    act = ACTIVATIONS[activation]
+    gate = act(jnp.einsum("ecd,edf->ecf", expert_in, params["wi_gate"]))
+    up = jnp.einsum("ecd,edf->ecf", expert_in, params["wi_up"])
+    expert_out = jnp.einsum("ecf,efd->ecd", gate * up, params["wo"])
+    if ep_constrain is not None:
+        expert_out = ep_constrain(expert_out)
+    expert_out = expert_out.reshape(e * capacity, d)
+
+    # ---- combine back ------------------------------------------------------
+    contrib = jnp.take(expert_out, jnp.clip(slot, 0, e * capacity - 1),
+                       axis=0)
+    contrib = contrib * (sg * keep.astype(jnp.float32))[:, None] \
+        .astype(contrib.dtype)
+    out = jax.ops.segment_sum(contrib, st, num_segments=t)
+    out = out.reshape(b, s, d).astype(x.dtype)
+
+    # ---- aux: Switch-style load-balance loss -------------------------------
+    frac_tokens = jax.ops.segment_sum(
+        jnp.ones_like(flat_expert, dtype=jnp.float32), flat_expert,
+        num_segments=e) / (t * top_k)
+    frac_probs = probs.mean(axis=0)
+    lb_loss = e * jnp.sum(frac_tokens * frac_probs)
+    dropped = jnp.sum(1.0 - keep.astype(jnp.float32)) / (t * top_k)
+    return out, {"lb_loss": lb_loss, "dropped_frac": dropped}

@@ -1,0 +1,16 @@
+"""Test configuration.
+
+8 host devices (NOT the dry-run's 512 — that flag stays local to
+launch/dryrun.py): the partitioning-equivalence and elastic-scaling tests
+need a real multi-device mesh to exercise shard_map collectives, and 8 keeps
+CPU compiles fast.  Must run before the first jax import in the process.
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import warnings
+
+warnings.filterwarnings("ignore", category=DeprecationWarning)

@@ -1,0 +1,135 @@
+"""SO(3)/eSCN machinery + EquiformerV2 equivariance (the flagship GNN
+property test)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.gnn import common, equiformer_v2 as eq, so3
+
+
+def _rot(a, b, g):
+    def rz(t):
+        return np.array([[np.cos(t), -np.sin(t), 0],
+                         [np.sin(t), np.cos(t), 0], [0, 0, 1]])
+
+    def ry(t):
+        return np.array([[np.cos(t), 0, np.sin(t)], [0, 1, 0],
+                         [-np.sin(t), 0, np.cos(t)]])
+
+    return rz(a) @ ry(b) @ rz(g)
+
+
+@pytest.mark.parametrize("l", list(range(7)))
+def test_wigner_d_orthogonal(l):
+    rng = np.random.default_rng(l)
+    a, b, g = (jnp.asarray(rng.uniform(-np.pi, np.pi, 4).astype(np.float32))
+               for _ in range(3))
+    d = so3.wigner_d_real(l, a, b, g)
+    eye = jnp.einsum("eij,ekj->eik", d, d)
+    np.testing.assert_allclose(np.asarray(eye),
+                               np.broadcast_to(np.eye(2 * l + 1),
+                                               eye.shape), atol=1e-5)
+
+
+def test_wigner_l1_equals_rotation_matrix():
+    rng = np.random.default_rng(0)
+    perm = [1, 2, 0]   # real-SH l=1 ordering (y, z, x)
+    for _ in range(5):
+        a, b, g = rng.uniform(-np.pi, np.pi, 3)
+        r = _rot(a, b, g)[np.ix_(perm, perm)]
+        d = np.asarray(so3.wigner_d_real(1, jnp.array([a]), jnp.array([b]),
+                                         jnp.array([g])))[0]
+        np.testing.assert_allclose(d, r, atol=1e-5)
+
+
+@pytest.mark.parametrize("l", [2, 4, 6])
+def test_wigner_composition_homomorphism(l):
+    rng = np.random.default_rng(l)
+    a1, b1, g1 = rng.uniform(0.1, np.pi - 0.1, 3)
+    a2, b2, g2 = rng.uniform(0.1, np.pi - 0.1, 3)
+    r3 = _rot(a1, b1, g1) @ _rot(a2, b2, g2)
+    b3 = np.arccos(np.clip(r3[2, 2], -1, 1))
+    a3 = np.arctan2(r3[1, 2], r3[0, 2])
+    g3 = np.arctan2(r3[2, 1], -r3[2, 0])
+
+    def d(l_, a, b, g):
+        return np.asarray(so3.wigner_d_real(
+            l_, jnp.array([a]), jnp.array([b]), jnp.array([g])))[0]
+
+    np.testing.assert_allclose(d(l, a1, b1, g1) @ d(l, a2, b2, g2),
+                               d(l, a3, b3, g3), atol=1e-4)
+
+
+def test_edge_alignment_maps_to_z():
+    rng = np.random.default_rng(2)
+    v = jnp.asarray(rng.normal(size=(8, 3)).astype(np.float32))
+    al, be, ga = so3.edge_rotation_angles(v)
+    d1 = so3.wigner_d_real(1, al, be, ga)
+    vn = v / jnp.linalg.norm(v, axis=-1, keepdims=True)
+    rotated = jnp.einsum("eij,ej->ei", d1, vn[:, [1, 2, 0]])
+    np.testing.assert_allclose(np.asarray(rotated),
+                               np.tile([0, 1, 0], (8, 1)), atol=1e-5)
+
+
+def test_equiformer_rotation_invariance():
+    """Rotate all positions by a random R: invariant (l=0) outputs and the
+    classifier logits must be unchanged — the defining property."""
+    r = jnp.asarray(_rot(0.7, 1.2, -0.3).astype(np.float32))
+    batch = common.batch_molecules(4, 8, 16, feat_dim=5, seed=0)
+    batch_rot = dataclasses.replace(batch, positions=batch.positions @ r.T)
+    p = eq.init_params(jax.random.PRNGKey(0), 5, channels=16, n_layers=2,
+                       l_max=4, m_max=2, n_heads=4, n_rbf=8, num_classes=3)
+    kw = dict(l_max=4, m_max=2, n_heads=4, n_rbf=8)
+    o1 = eq.logits(p, batch, **kw)
+    o2 = eq.logits(p, batch_rot, **kw)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-4)
+
+
+def test_equiformer_translation_invariance():
+    batch = common.batch_molecules(2, 6, 12, feat_dim=5, seed=1)
+    shifted = dataclasses.replace(batch, positions=batch.positions + 7.5)
+    p = eq.init_params(jax.random.PRNGKey(1), 5, channels=8, n_layers=2,
+                       l_max=2, m_max=1, n_heads=2, n_rbf=6, num_classes=2)
+    kw = dict(l_max=2, m_max=1, n_heads=2, n_rbf=6)
+    np.testing.assert_allclose(np.asarray(eq.logits(p, batch, **kw)),
+                               np.asarray(eq.logits(p, shifted, **kw)),
+                               atol=1e-4)
+
+
+def test_equiformer_grads_finite():
+    batch = common.batch_molecules(2, 6, 12, feat_dim=5, seed=2)
+    p = eq.init_params(jax.random.PRNGKey(2), 5, channels=8, n_layers=2,
+                       l_max=3, m_max=2, n_heads=2, n_rbf=6, num_classes=2)
+    g = jax.grad(lambda pp: float(0) + jnp.sum(
+        eq.logits(pp, batch, l_max=3, m_max=2, n_heads=2, n_rbf=6) ** 2))(p)
+    assert all(bool(jnp.isfinite(x).all()) for x in jax.tree.leaves(g))
+
+
+def test_gnn_archs_permutation_equivariance():
+    """Node relabeling permutes GNN outputs correspondingly (gatedgcn/pna)."""
+    from repro.models.gnn import gatedgcn, pna
+    rng = np.random.default_rng(0)
+    n, e, f = 20, 60, 5
+    edges = rng.integers(0, n, size=(e, 2)).astype(np.int32)
+    feat = rng.normal(size=(n, f)).astype(np.float32)
+    perm = rng.permutation(n)
+    inv = np.argsort(perm)
+    batch = common.GraphBatch(
+        edges=jnp.asarray(edges), edge_mask=jnp.ones((e,), jnp.float32),
+        node_feat=jnp.asarray(feat), node_mask=jnp.ones((n,), jnp.float32))
+    batch_p = common.GraphBatch(
+        edges=jnp.asarray(perm[edges]),
+        edge_mask=jnp.ones((e,), jnp.float32),
+        node_feat=jnp.asarray(feat[inv]),
+        node_mask=jnp.ones((n,), jnp.float32))
+    for mod, init in ((gatedgcn, lambda k: gatedgcn.init_params(
+            k, f, 16, 2, 2)),
+            (pna, lambda k: pna.init_params(k, f, 12, 2, 2))):
+        p = init(jax.random.PRNGKey(0))
+        h1 = np.asarray(mod.forward(p, batch))
+        h2 = np.asarray(mod.forward(p, batch_p))
+        np.testing.assert_allclose(h2, h1[inv], atol=1e-4)

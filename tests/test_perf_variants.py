@@ -1,0 +1,114 @@
+"""Equivalence tests for the §Perf optimization variants — every speedup
+must preserve the math (or bound its error, for bf16 comms)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import checkpoint as ckpt_exec
+from repro.core import dtdg, models, partition
+from repro.graph import generate
+from repro.launch.mesh import make_host_mesh
+from repro.models import lm
+
+T, N = 16, 32
+
+
+def _setup(model):
+    snaps = generate.evolving_dynamic_graph(N, T, density=2.0, churn=0.1,
+                                            seed=0)
+    frames = np.stack([generate.degree_features(s, N) for s in snaps])
+    batch = dtdg.build_batch(snaps, frames, N)
+    cfg = models.DynGNNConfig(model=model, num_nodes=N, num_steps=T,
+                              window=3, checkpoint_blocks=2)
+    params = models.init_params(jax.random.PRNGKey(0), cfg)
+    labels = jnp.asarray(
+        np.random.default_rng(0).integers(0, 2, size=(T, N)))
+    return cfg, params, batch, labels
+
+
+@pytest.mark.parametrize("model", ["tmgcn", "cdgcn"])
+def test_fused_final_loss_matches_plain(model):
+    """Eliding the final N->T all-to-all must not change the loss."""
+    mesh = make_host_mesh(data=4, model=1)
+    cfg, params, batch, labels = _setup(model)
+    fr, ed, ew = partition.blockify_batch(batch, 2)
+    lab_b = labels.reshape(2, T // 2, N)
+    plain = partition.snapshot_partition_loss(cfg, mesh)
+    fused = partition.snapshot_partition_loss(cfg, mesh, fuse_final=True)
+    l1 = jax.jit(lambda p: plain(p, fr, ed, ew, lab_b))(params)
+    l2 = jax.jit(lambda p: fused(p, fr, ed, ew, lab_b))(params)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
+
+
+def test_bf16_comm_bounded_error():
+    mesh = make_host_mesh(data=4, model=1)
+    cfg, params, batch, labels = _setup("tmgcn")
+    fr, ed, ew = partition.blockify_batch(batch, 2)
+    lab_b = labels.reshape(2, T // 2, N)
+    plain = partition.snapshot_partition_loss(cfg, mesh)
+    bf16 = partition.snapshot_partition_loss(cfg, mesh,
+                                             comm_dtype=jnp.bfloat16)
+    l1 = float(jax.jit(lambda p: plain(p, fr, ed, ew, lab_b))(params))
+    l2 = float(jax.jit(lambda p: bf16(p, fr, ed, ew, lab_b))(params))
+    assert abs(l1 - l2) / abs(l1) < 5e-2
+
+
+def _lm_cfg(**kw):
+    base = dict(num_layers=4, d_model=64, num_heads=4, num_kv_heads=4,
+                head_dim=16, d_ff=128, vocab_size=512, dtype=jnp.float32)
+    base.update(kw)
+    return lm.LMConfig(**base)
+
+
+def test_layer_block_grouping_matches_flat():
+    """Two-level (sqrt) layer remat must be a pure storage-schedule change."""
+    toks = jnp.asarray(np.random.default_rng(0).integers(0, 512, (2, 16)),
+                       jnp.int32)
+    cfg_flat = _lm_cfg(layer_block=0)
+    cfg_grouped = _lm_cfg(layer_block=2)
+    params = lm.init_lm_params(jax.random.PRNGKey(0), cfg_flat)
+    l1, g1 = jax.value_and_grad(
+        lambda p: lm.lm_loss(cfg_flat, p, toks, toks))(params)
+    l2, g2 = jax.value_and_grad(
+        lambda p: lm.lm_loss(cfg_grouped, p, toks, toks))(params)
+    np.testing.assert_allclose(float(l1), float(l2), atol=1e-6)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_chunked_loss_matches_unchunked():
+    toks = jnp.asarray(np.random.default_rng(1).integers(0, 512, (2, 64)),
+                       jnp.int32)
+    cfg_u = _lm_cfg(loss_chunk=0)
+    cfg_c = _lm_cfg(loss_chunk=16)
+    params = lm.init_lm_params(jax.random.PRNGKey(1), cfg_u)
+    l1 = lm.lm_loss(cfg_u, params, toks, toks)
+    l2 = lm.lm_loss(cfg_c, params, toks, toks)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
+
+
+def test_seq_parallel_chunk_attention_matches():
+    """chunk_constrain (sequence-parallel attention) is sharding-only."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = make_host_mesh(data=2, model=4)
+    cfg = _lm_cfg(num_heads=6, num_kv_heads=6, d_model=96,
+                  q_chunk=8)   # 6 heads don't divide model=4
+    toks = jnp.asarray(np.random.default_rng(2).integers(0, 512, (2, 32)),
+                       jnp.int32)
+    params = lm.init_lm_params(jax.random.PRNGKey(2), cfg)
+    inward = NamedSharding(mesh, P("data", "model", None, None))
+    outward = NamedSharding(mesh, P("data", None, None, None))
+
+    def chunk_con(x, to_sharded):
+        return jax.lax.with_sharding_constraint(
+            x, inward if to_sharded else outward)
+
+    with mesh:
+        l_plain = jax.jit(lambda p: lm.lm_loss(cfg, p, toks, toks))(params)
+        l_sp = jax.jit(lambda p: lm.lm_loss(
+            cfg, p, toks, toks, chunk_constrain=chunk_con))(params)
+    np.testing.assert_allclose(float(l_plain), float(l_sp), rtol=1e-5)
