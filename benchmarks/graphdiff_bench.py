@@ -5,10 +5,15 @@ Reports, per (model x smoothing) configuration and churn level:
   * the transfer-time reduction factor implied on a PCIe16-class link,
   * measured on-device reconstruction cost (the price GD pays),
   * the beyond-paper variant: recompute edge VALUES on device (Laplacian
-    weights are degree-derived), shipping only index deltas.
+    weights are degree-derived), shipping only index deltas,
+  * encoder throughput: the vectorized ``repro.stream`` encoder vs the
+    reference dict-based encoder (same output, measured speedup),
+  * shard-aware streaming: per-shard time-slice payloads vs broadcast.
 """
 
 from __future__ import annotations
+
+import time
 
 import jax
 import jax.numpy as jnp
@@ -17,9 +22,59 @@ import numpy as np
 from benchmarks.common import record, time_fn
 from repro.core import graphdiff, smoothing
 from repro.graph import generate
+from repro.stream import encoder as stream_encoder
+from repro.stream import sharded as stream_sharded
+
+
+def encoder_throughput(n: int = 2048, t: int = 32, density: float = 3.0,
+                       churn: float = 0.2, iters: int = 3) -> None:
+    """Host encode wall-time: reference dict encoder vs vectorized."""
+    snaps = generate.evolving_dynamic_graph(n, t, density, churn, seed=0)
+    rng = np.random.default_rng(0)
+    values = [rng.uniform(0.5, 1.5, s.shape[0]).astype(np.float32)
+              for s in snaps]
+    max_edges = stream_encoder.padded_max_edges(snaps)
+    stats = stream_encoder.measure_stats(snaps, n, 8, max_edges)
+    edges_total = sum(s.shape[0] for s in snaps)
+
+    def timed(fn):
+        best = float("inf")
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            fn()
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    t_ref = timed(lambda: graphdiff.encode_stream(snaps, values, n,
+                                                  max_edges, 8))
+    t_fast = timed(lambda: stream_encoder.encode_stream_fast(
+        snaps, values, n, max_edges, 8, stats))
+    record("graphdiff/encoder/dict_reference", t_ref * 1e6,
+           f"{edges_total / t_ref / 1e6:.2f} Medges/s")
+    record("graphdiff/encoder/vectorized", t_fast * 1e6,
+           f"{edges_total / t_fast / 1e6:.2f} Medges/s "
+           f"speedup={t_ref / t_fast:.1f}x")
+
+
+def sharded_payloads(n: int = 2048, t: int = 32, density: float = 3.0,
+                     churn: float = 0.1) -> None:
+    """Per-shard time-slice payloads under snapshot partitioning."""
+    snaps = generate.evolving_dynamic_graph(n, t, density, churn, seed=0)
+    max_edges = stream_encoder.padded_max_edges(snaps)
+    stream = stream_encoder.encode_stream_fast(snaps, None, n, max_edges, 8)
+    total = graphdiff.stream_bytes(stream)
+    for p in (2, 4):
+        shards = stream_sharded.encode_time_sliced(snaps, None, n,
+                                                   max_edges, 8, p)
+        per_shard = max(sum(i.payload_bytes for i in s) for s in shards)
+        record(f"graphdiff/sharded/P{p}", 0.0,
+               f"max_shard_bytes={per_shard} broadcast={total} "
+               f"reduction={total / max(per_shard, 1):.2f}x")
 
 
 def run(n: int = 2048, t: int = 32, density: float = 3.0) -> None:
+    encoder_throughput(n, t, density)
+    sharded_payloads(n, t, density)
     for model, smooth in (("cdgcn", "none"), ("evolvegcn", "edgelife"),
                           ("tmgcn", "mproduct")):
         for churn in (0.05, 0.2):
@@ -30,10 +85,9 @@ def run(n: int = 2048, t: int = 32, density: float = 3.0) -> None:
                 snaps, values = smoothing.edge_life(snaps, 5)
             elif smooth == "mproduct":
                 snaps, values = smoothing.m_transform_sparse(snaps, 5)
-            max_edges = max(s.shape[0] for s in snaps)
-            max_edges = ((max_edges + 127) // 128) * 128
-            stream = graphdiff.encode_stream(snaps, values, n, max_edges,
-                                             block_size=8)
+            max_edges = stream_encoder.padded_max_edges(snaps)
+            stream = stream_encoder.encode_stream_fast(
+                snaps, values, n, max_edges, block_size=8)
             gd = graphdiff.stream_bytes(stream)
             naive = graphdiff.naive_bytes(snaps)
             record(f"graphdiff/{model}/churn{churn}/bytes_ratio",

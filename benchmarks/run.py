@@ -1,16 +1,21 @@
 """Benchmark driver — one section per paper table/figure.
 
 Emits ``name,us_per_call,derived`` CSV rows:
-  * graphdiff_bench      — Fig. 4 (graph-difference transfer)
+  * graphdiff_bench      — Fig. 4 (graph-difference transfer + encoder
+                           throughput + sharded streaming)
   * scaling_bench        — Fig. 5 strong scaling + Fig. 7 weak scaling
   * partition_compare    — Table 2 (snapshot vs hypergraph vertex part.)
   * checkpoint_bench     — §3.1/§6.2 (memory/time vs nb)
   * kernel_bench         — hot-spot op microbenchmarks
-  * overlap_bench        — §6.5 compute/comm overlap (beyond-paper)
+  * overlap_bench        — §6.5 compute/comm + stream transfer overlap
+
+``--smoke`` runs tiny shapes (the CI smoke job); ``--only a,b`` restricts
+to named sections.
 """
 
 from __future__ import annotations
 
+import argparse
 import sys
 import traceback
 
@@ -18,17 +23,33 @@ from benchmarks.common import header
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes for CI (seconds, not minutes)")
+    ap.add_argument("--only", default="",
+                    help="comma-separated section names to run")
+    args = ap.parse_args()
+
     header()
     from benchmarks import (checkpoint_bench, graphdiff_bench, kernel_bench,
                             overlap_bench, partition_compare, scaling_bench)
+    smoke = args.smoke
     sections = [
-        ("graphdiff", graphdiff_bench.run),
+        ("graphdiff", lambda: graphdiff_bench.run(
+            **({"n": 256, "t": 12} if smoke else {}))),
         ("scaling", scaling_bench.run),
         ("partition_compare", partition_compare.run),
-        ("checkpoint", checkpoint_bench.run),
+        ("checkpoint", lambda: checkpoint_bench.run(
+            **({"n": 128, "t": 16} if smoke else {}))),
         ("kernels", kernel_bench.run),
-        ("overlap", overlap_bench.run),
+        ("overlap", lambda: overlap_bench.run(smoke=smoke)),
     ]
+    only = {s.strip() for s in args.only.split(",") if s.strip()}
+    if only:
+        unknown = only - {name for name, _ in sections}
+        if unknown:
+            raise SystemExit(f"unknown sections: {sorted(unknown)}")
+        sections = [(n, f) for n, f in sections if n in only]
     failures = 0
     for name, fn in sections:
         print(f"# --- {name} ---", flush=True)

@@ -1,0 +1,70 @@
+"""Version-compat shims over the moving parts of the jax API.
+
+The repo targets the jax that ships in the pinned image (see
+requirements.txt) but must keep importing on neighbouring versions:
+
+* ``shard_map`` graduated from ``jax.experimental.shard_map`` to
+  ``jax.shard_map`` and renamed ``check_rep`` -> ``check_vma`` along the
+  way.  Everything in the repo imports the symbol from HERE and always
+  passes the new-style ``check_vma`` keyword; the shim translates.
+* ``jax.sharding.AxisType`` (explicit/auto axis types) does not exist on
+  older jax; ``make_mesh_compat`` drops the ``axis_types`` argument when
+  the installed jax cannot accept it.
+"""
+
+from __future__ import annotations
+
+import jax
+
+# --------------------------------------------------------------- shard_map --
+
+try:  # jax >= 0.5-ish
+    _shard_map_impl = jax.shard_map
+    _NEW_API = True
+except AttributeError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+    _NEW_API = False
+
+
+def shard_map(f, mesh=None, in_specs=None, out_specs=None,
+              check_vma: bool | None = None, **kwargs):
+    """``jax.shard_map`` with the new-style signature on every jax.
+
+    Callers always use the modern keyword names; on old jax the
+    ``check_vma`` flag is forwarded as ``check_rep`` (same meaning:
+    verify per-shard replication invariants).
+    """
+    if _NEW_API:
+        if check_vma is not None:
+            kwargs["check_vma"] = check_vma
+        return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                               out_specs=out_specs, **kwargs)
+    if check_vma is not None:
+        kwargs["check_rep"] = check_vma
+    return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, **kwargs)
+
+
+# ---------------------------------------------------------------- AxisType --
+
+try:
+    from jax.sharding import AxisType  # noqa: F401
+    HAS_AXIS_TYPES = True
+except ImportError:
+    AxisType = None
+    HAS_AXIS_TYPES = False
+
+
+def auto_axis_types(n: int):
+    """(AxisType.Auto,) * n on new jax, None (= omit the kwarg) on old."""
+    if not HAS_AXIS_TYPES:
+        return None
+    return (AxisType.Auto,) * n
+
+
+def make_mesh_compat(shape, axis_names):
+    """``jax.make_mesh`` with Auto axis types where supported."""
+    types = auto_axis_types(len(axis_names))
+    if types is None:
+        return jax.make_mesh(shape, axis_names)
+    return jax.make_mesh(shape, axis_names, axis_types=types)

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core import models as mdl
 from repro.core import temporal
 
@@ -84,7 +85,7 @@ def hybrid_forward(cfg: mdl.DynGNNConfig, mesh: Mesh,
                                    concat_axis=1, tiled=True)
         return h
 
-    return jax.shard_map(
+    return shard_map(
         fn, mesh=mesh,
         in_specs=(P(), P(data_axis, model_axis, None),
                   P(data_axis, model_axis, None),

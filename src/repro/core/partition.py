@@ -27,12 +27,12 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core import models as mdl
 from repro.core import temporal
 from repro.core.dtdg import DTDGBatch
 
 Array = jax.Array
-shard_map = jax.shard_map
 
 
 def _axis_size(mesh: Mesh, axis) -> int:
@@ -48,7 +48,8 @@ def _axis_size(mesh: Mesh, axis) -> int:
 
 def _sp_block_body(cfg: mdl.DynGNNConfig, params: dict, axis,
                    num_procs: int, carries: list, blk,
-                   comm_dtype=None, fused_labels: bool = False):
+                   comm_dtype=None, fused_labels: bool = False,
+                   a2a_chunks: int = 1):
     """One checkpoint block under snapshot partitioning (Fig. 3b).
 
     Local shapes: x (bsize/P, N, F); temporal carries are vertex-sharded
@@ -76,8 +77,19 @@ def _sp_block_body(cfg: mdl.DynGNNConfig, params: dict, axis,
         orig = y.dtype
         if comm_dtype is not None:
             y = y.astype(comm_dtype)
-        y = jax.lax.all_to_all(y, axis, split_axis=split_axis,
-                               concat_axis=concat_axis, tiled=True)
+        if a2a_chunks > 1:
+            # §6.5 overlap schedule: C independent all-to-alls over feature
+            # slices, so the scheduler can run chunk c's redistribution
+            # concurrently with chunk c-1's consumer compute.
+            cuts = [y.shape[-1] * c // a2a_chunks
+                    for c in range(1, a2a_chunks)]
+            pieces = [jax.lax.all_to_all(p, axis, split_axis=split_axis,
+                                         concat_axis=concat_axis, tiled=True)
+                      for p in jnp.split(y, cuts, axis=-1)]
+            y = jnp.concatenate(pieces, axis=-1)
+        else:
+            y = jax.lax.all_to_all(y, axis, split_axis=split_axis,
+                                   concat_axis=concat_axis, tiled=True)
         return y.astype(orig)
 
     h = x_b
@@ -127,11 +139,13 @@ def _sp_block_body(cfg: mdl.DynGNNConfig, params: dict, axis,
 
 
 def snapshot_partition_forward(cfg: mdl.DynGNNConfig, mesh: Mesh,
-                               axis="data"):
+                               axis="data", a2a_chunks: int = 1):
     """Build the sharded forward fn: (params, batch) -> Z (T-sharded).
 
     Block layout: arrays are (nb, bsize, ...) with the *bsize* axis sharded,
     so each processor owns contiguous steps within each block (Fig. 3b).
+    ``a2a_chunks > 1`` chunks every redistribution into that many
+    feature-sliced all-to-alls (the §6.5 overlap schedule; math-identical).
     """
     num_procs = _axis_size(mesh, axis)
     nb = cfg.checkpoint_blocks
@@ -144,7 +158,8 @@ def snapshot_partition_forward(cfg: mdl.DynGNNConfig, mesh: Mesh,
                                    dtype=frames.dtype)
         t0s = jnp.arange(nb, dtype=jnp.int32) * (bsl * num_procs)
         body = jax.checkpoint(
-            partial(_sp_block_body, cfg, params, axis, num_procs),
+            partial(_sp_block_body, cfg, params, axis, num_procs,
+                    a2a_chunks=a2a_chunks),
             prevent_cse=True)
         _, zs = jax.lax.scan(body, carries, (frames, edges, ew, t0s))
         return zs                     # (nb, bsize/P, N, out) local

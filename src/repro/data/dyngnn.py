@@ -21,6 +21,8 @@ import numpy as np
 from repro.core import graphdiff, smoothing
 from repro.core.dtdg import build_batch
 from repro.graph import generate
+from repro.stream import encoder as stream_encoder
+from repro.stream import sharded as stream_sharded
 
 
 @dataclass
@@ -75,14 +77,32 @@ class DTDGPipeline:
         # device-ready padded batch (precomputed Laplacian weights, §5.5)
         self.batch = build_batch(ds.snapshots, ds.frames, ds.num_nodes,
                                  max_edges=max_edges, values=ds.values)
-        self._stream = graphdiff.encode_stream(
-            ds.snapshots, ds.values, ds.num_nodes, max_edges, self.bsize)
+        # streamed transfer: vectorized encoder, churn-stat-sized pads.
+        # Only the byte total is retained — the streaming paths re-encode
+        # lazily (host_stream), so holding T padded items here would just
+        # duplicate the trace in host memory.
+        self.stream_stats = stream_encoder.measure_stats(
+            ds.snapshots, ds.num_nodes, self.bsize, max_edges)
+        self._stream_bytes = sum(
+            item.payload_bytes for item in self.host_stream())
 
     def transfer_bytes(self) -> dict:
-        gd = graphdiff.stream_bytes(self._stream)
+        gd = self._stream_bytes
         base = graphdiff.naive_bytes(self.ds.snapshots)
         return {"graph_diff": gd, "naive": base,
                 "ratio": gd / max(base, 1)}
+
+    def host_stream(self):
+        """Lazy re-encode of the trace (what the prefetch thread drains)."""
+        return stream_encoder.iter_encode_stream(
+            self.ds.snapshots, self.ds.values, self.ds.num_nodes,
+            self.max_edges, self.bsize, self.stream_stats)
+
+    def sharded_streams(self, num_shards: int):
+        """Per-shard time-slice streams for snapshot partitioning."""
+        return stream_sharded.encode_time_sliced(
+            self.ds.snapshots, self.ds.values, self.ds.num_nodes,
+            self.max_edges, self.bsize, num_shards, self.stream_stats)
 
     def blocked_arrays(self):
         """(frames, edges, edge_weights, labels) blocked (nb, bsize, ...)."""

@@ -1,0 +1,2 @@
+"""Distribution utilities: communication-volume models, compute/comm
+overlap, gradient compression, and sharding-spec helpers."""

@@ -1,0 +1,59 @@
+"""int8 gradient compression with error feedback for DP aggregation.
+
+Each shard quantizes (gradient + carried residual) to int8 with a local
+absmax scale, dequantizes, and psums the dequantized tensors; the
+quantization error is carried into the next step (error feedback), so the
+truncation never accumulates bias.  The reduction returns the MEAN over
+the axis — a drop-in for the uncompressed ``psum(g)/P`` data-parallel
+aggregate.
+
+The wire format modeled is 1 byte/element + one f32 scale per tensor
+(4x smaller than f32 all-reduce); on host meshes the psum still runs in
+f32, which changes bytes, not math.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+_QMAX = 127.0
+
+
+def init_residual(grads: Any) -> Any:
+    """Zero error-feedback residuals matching the gradient tree (f32)."""
+    return jax.tree.map(
+        lambda g: jnp.zeros(jnp.shape(g), jnp.float32), grads)
+
+
+def _quantize(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(g)) / _QMAX
+    scale = jnp.maximum(scale, jnp.finfo(jnp.float32).tiny)
+    q = jnp.clip(jnp.round(g / scale), -_QMAX, _QMAX).astype(jnp.int8)
+    return q, scale
+
+
+def compressed_psum(grads: Any, axis, residual: Any) -> tuple[Any, Any]:
+    """Error-feedback int8 mean-reduction over a mesh ``axis``.
+
+    Returns (reduced_mean_tree, new_residual_tree).  Must be called inside
+    ``shard_map``; the residual stays shard-local.
+    """
+    p = jax.lax.psum(jnp.ones((), jnp.float32), axis)
+
+    def one(g, res):
+        g32 = g.astype(jnp.float32) + res
+        q, scale = _quantize(g32)
+        deq = q.astype(jnp.float32) * scale
+        new_res = g32 - deq
+        red = jax.lax.psum(deq, axis) / p
+        return red.astype(g.dtype), new_res
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residual)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    red = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_res = jax.tree.unflatten(treedef, [o[1] for o in out])
+    return red, new_res

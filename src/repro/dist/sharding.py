@@ -1,0 +1,128 @@
+"""PartitionSpec trees + helpers for the production cells.
+
+Conventions (see launch/steps.py):
+  * TP over the 'model' axis, DP over ('pod', 'data') — ``dp_axes`` returns
+    whichever of those exist on the mesh, pod-major.
+  * A dimension is only sharded when it divides the axis size; otherwise it
+    stays replicated (the callers layer smarter fallbacks on top, e.g. the
+    GQA head specs in steps.py).
+  * ``named`` turns a PartitionSpec tree into a NamedSharding tree;
+    PartitionSpec is a tuple subclass, so every tree op here passes
+    ``is_leaf`` to stop the flattener from recursing into the specs.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+_DP_NAMES = ("pod", "data")
+
+
+def dp_axes(mesh: Mesh) -> tuple:
+    """Data-parallel axis names present on the mesh, pod-major."""
+    return tuple(a for a in _DP_NAMES if a in mesh.axis_names)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, P)
+
+
+def named(mesh: Mesh, specs: Any) -> Any:
+    """PartitionSpec tree -> NamedSharding tree."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=_is_spec)
+
+
+def replicate_specs(tree: Any) -> Any:
+    """Fully-replicated spec tree matching ``tree``'s structure."""
+    return jax.tree.map(lambda _: P(), tree)
+
+
+def opt_state_specs(p_specs: Any) -> dict:
+    """AdamW state specs: m/v/master mirror the param specs."""
+    return {"m": p_specs, "v": p_specs, "master": p_specs, "step": P()}
+
+
+# ------------------------------------------------------------------ LM ------
+
+def _model_if_divisible(dim: int, mesh: Mesh):
+    m = mesh.shape.get("model", 1)
+    return "model" if m > 1 and dim % m == 0 else None
+
+
+def lm_param_specs(cfg, mesh: Mesh, mode: str = "tp") -> dict:
+    """Megatron-style TP specs for the stacked-layer LM param tree.
+
+    Attention gets a baseline head-sharded spec; launch/steps.py replaces
+    ``specs["layers"]["attn"]`` with the GQA-aware variant.
+    """
+    del mode  # one strategy here; steps.py layers variants on top
+    ff = _model_if_divisible(cfg.d_ff, mesh)
+    vocab = _model_if_divisible(cfg.padded_vocab, mesh)
+    heads = _model_if_divisible(cfg.num_heads, mesh)
+    kv = _model_if_divisible(cfg.num_kv_heads, mesh)
+    attn = {"wq": P(None, None, heads, None),
+            "wk": P(None, None, kv, None),
+            "wv": P(None, None, kv, None),
+            "wo": P(None, heads, None, None)}
+    if cfg.is_moe:
+        ep = _model_if_divisible(cfg.moe_experts, mesh)
+        ffn = {"router": P(),
+               "wi_gate": P(None, ep, None, None if ep else ff),
+               "wi_up": P(None, ep, None, None if ep else ff),
+               "wo": P(None, ep, None if ep else ff, None)}
+    else:
+        ffn = {"wi_gate": P(None, None, ff),
+               "wi_up": P(None, None, ff),
+               "wo": P(None, ff, None)}
+    return {
+        "embed": P(vocab, None),
+        "layers": {"attn": attn, "ffn": ffn, "ln1": P(), "ln2": P()},
+        "final_norm": P(),
+        "out": P(None, vocab),
+    }
+
+
+def lm_batch_specs(mesh: Mesh) -> P:
+    """(B, S) token batches: batch over DP, sequence replicated."""
+    return P(dp_axes(mesh), None)
+
+
+def lm_activation_constrainer(mesh: Mesh):
+    """Rank-agnostic activation constraint: leading (batch) dim over DP.
+
+    The returned callable carries an ``ep`` attribute (expert-parallel
+    constrainer) that MoE layers probe via getattr; None = no EP here.
+    """
+    dp = dp_axes(mesh)
+
+    def constrain(x):
+        if not dp or x.ndim == 0:
+            return x
+        spec = P(dp, *([None] * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    constrain.ep = None
+    return constrain
+
+
+# -------------------------------------------------------------- recsys ------
+
+def din_param_specs(mesh: Mesh, cfg=None) -> dict:
+    """DIN: the huge embedding tables vocab-sharded over 'model', the small
+    MLP towers replicated.  Structure is derived from the config so the
+    spec tree always matches ``din.init_params``."""
+    from repro.models import din as din_mod
+    cfg = cfg or din_mod.DINConfig()
+    abstract = jax.eval_shape(
+        lambda: din_mod.init_params(jax.random.PRNGKey(0), cfg))
+    specs = replicate_specs(abstract)
+    table = P("model", None) if mesh.shape.get("model", 1) > 1 else P(None,
+                                                                      None)
+    for k in ("item_table", "cate_table", "user_table"):
+        specs[k] = table
+    return specs

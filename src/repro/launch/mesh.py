@@ -9,17 +9,14 @@ from __future__ import annotations
 
 import jax
 
-
-def _auto(n: int):
-    from jax.sharding import AxisType
-    return (AxisType.Auto,) * n
+from repro.compat import make_mesh_compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return make_mesh_compat(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
@@ -28,8 +25,7 @@ def make_host_mesh(data: int = 1, model: int = 1):
     if data * model > n:
         raise ValueError(f"mesh {data}x{model} needs {data * model} devices, "
                          f"have {n}")
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=_auto(2))
+    return make_mesh_compat((data, model), ("data", "model"))
 
 
 def mesh_device_count(mesh) -> int:

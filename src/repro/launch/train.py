@@ -28,6 +28,14 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--full-config", action="store_true",
                     help="use the full (pod-scale) config instead of smoke")
+    ap.add_argument("--stream", action="store_true",
+                    help="dyngnn only: per-snapshot streaming training "
+                         "over the async graph-diff delta stream")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="with --stream: synchronous reference schedule "
+                         "(no prefetch/transfer overlap)")
+    ap.add_argument("--epochs", type=int, default=1,
+                    help="with --stream: passes over the trace")
     args = ap.parse_args()
 
     from repro.configs import registry
@@ -53,6 +61,15 @@ def main() -> None:
         ds = synthetic_dataset(n, t, density=3.0, churn=0.1,
                                smoothing_mode=smooth, window=cfg.window)
         pipe = DTDGPipeline(ds, nb=cfg.checkpoint_blocks)
+        if args.stream:
+            state, losses = trainer.train_dyngnn_streamed(
+                cfg, pipe, num_epochs=args.epochs,
+                overlap=not args.no_overlap)
+            rep = pipe.transfer_bytes()
+            final = f"{losses[-1]:.4f}" if losses else "n/a"
+            print(f"streamed {state.step} snapshot steps, final loss "
+                  f"{final}, transfer ratio {rep['ratio']:.3f} vs naive")
+            return
         mesh = make_host_mesh(data=dp, model=1) if dp > 1 else None
         state, losses = trainer.train_dyngnn(
             cfg, pipe, mesh=mesh, num_steps=args.steps,

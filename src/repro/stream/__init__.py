@@ -1,0 +1,27 @@
+"""Streamed graph-diff snapshot transfer (paper §3.2, made asynchronous).
+
+The subsystem has three pieces:
+
+* ``encoder``    — vectorized host delta encoder (searchsorted key
+  alignment; drop/add pads sized from dataset statistics, not E_max);
+* ``prefetch``   — background-thread encode + ``jax.device_put`` lookahead
+  overlapping delta k+1's transfer with step k's compute, and the
+  device-resident edge-buffer ring the deltas are applied into;
+* ``sharded``    — per-shard time-slice streams for snapshot partitioning.
+
+``core.graphdiff`` keeps the synchronous reference encoder/decoder the
+tests diff against; ``train_loop`` drives per-snapshot streaming training
+through both the synchronous and the overlapped path (identical math).
+"""
+
+from repro.stream.encoder import (DeltaStats, encode_stream_fast,
+                                  iter_encode_stream, measure_stats,
+                                  padded_max_edges)
+from repro.stream.prefetch import DeltaApplier, PrefetchIterator
+from repro.stream.sharded import encode_time_sliced, shard_slice_steps
+
+__all__ = [
+    "DeltaStats", "encode_stream_fast", "iter_encode_stream",
+    "measure_stats", "padded_max_edges", "DeltaApplier",
+    "PrefetchIterator", "encode_time_sliced", "shard_slice_steps",
+]

@@ -1,0 +1,157 @@
+"""Asynchronous host->device delta streaming.
+
+``PrefetchIterator`` runs the host encoder on a background thread and
+issues ``jax.device_put`` there too, keeping up to ``depth`` staged items
+ahead of the consumer: while the device executes ``apply_delta`` + the
+train step for delta k, delta k+1 is being encoded and transferred.  The
+numpy encode and the device execution overlap because both release the
+GIL for their heavy parts.
+
+``DeltaApplier`` owns the device-resident edge-buffer ring: ``apply_delta``
+is jitted with donated input buffers, so the reconstructed snapshot is
+written into the slot of the buffer being retired rather than a fresh
+allocation — the stream runs in O(ring) device memory regardless of T.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable, Iterable, Iterator
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import graphdiff
+from repro.core.graphdiff import FullSnapshot, SnapshotDelta
+
+_SENTINEL = object()
+
+
+class PrefetchIterator:
+    """Stage items of ``host_iter`` on a background thread.
+
+    ``stage_fn`` (default ``jax.device_put``-based staging of stream items)
+    runs on the worker; the bounded queue applies backpressure so at most
+    ``depth`` staged items exist at once.  Exceptions on the worker are
+    re-raised at the consumer's next ``__next__``; the iterator stays
+    terminated (StopIteration) afterwards.  ``close()`` (also via the
+    context-manager protocol) unblocks and retires the worker when the
+    consumer abandons the stream early, releasing the staged buffers.
+    """
+
+    def __init__(self, host_iter: Iterable, stage_fn: Callable | None = None,
+                 depth: int = 2):
+        if depth < 1:
+            raise ValueError("prefetch depth must be >= 1")
+        self._stage = stage_fn if stage_fn is not None else stage_item
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._err: BaseException | None = None
+        self._stop = threading.Event()
+        self._done = False
+        self._thread = threading.Thread(
+            target=self._worker, args=(iter(host_iter),), daemon=True)
+        self._thread.start()
+
+    def _put(self, item) -> bool:
+        """Blocking put that still observes close(); False = shut down."""
+        while not self._stop.is_set():
+            try:
+                self._q.put(item, timeout=0.05)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def _worker(self, it: Iterator) -> None:
+        try:
+            for item in it:
+                if self._stop.is_set():
+                    return
+                if not self._put(self._stage(item)):
+                    return
+        except BaseException as e:  # noqa: BLE001 — re-raised on consumer
+            self._err = e
+        finally:
+            self._put(_SENTINEL)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        if self._done:
+            raise StopIteration
+        item = self._q.get()
+        if item is _SENTINEL:
+            self._done = True
+            if self._err is not None:
+                raise self._err
+            raise StopIteration
+        return item
+
+    def close(self) -> None:
+        """Retire the worker and drop staged items (idempotent)."""
+        self._stop.set()
+        self._done = True
+        while True:
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                break
+        self._thread.join(timeout=1.0)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+
+def stage_item(item: Any) -> Any:
+    """Ship one stream item's arrays to device (tuples recurse)."""
+    if isinstance(item, tuple):
+        return tuple(stage_item(x) for x in item)
+    if isinstance(item, FullSnapshot):
+        return FullSnapshot(edges=jax.device_put(item.edges),
+                            mask=jax.device_put(item.mask),
+                            values=jax.device_put(item.values),
+                            num_edges=item.num_edges)
+    if isinstance(item, SnapshotDelta):
+        return SnapshotDelta(drop_pos=jax.device_put(item.drop_pos),
+                             drop_mask=jax.device_put(item.drop_mask),
+                             add_edges=jax.device_put(item.add_edges),
+                             add_mask=jax.device_put(item.add_mask),
+                             values=jax.device_put(item.values),
+                             num_edges=item.num_edges)
+    return jax.device_put(item)
+
+
+class DeltaApplier:
+    """Device-resident (edges, mask) buffer ring.
+
+    ``consume`` turns a staged stream item into the current snapshot's
+    device buffers: full snapshots swap in directly; deltas run the jitted
+    ``apply_delta`` with the previous buffers DONATED, so XLA writes the
+    new snapshot into the retiring slot (a 2-deep ring realized through
+    input/output aliasing — no per-step allocation).
+    """
+
+    def __init__(self, max_edges: int, donate: bool = True):
+        self.edges = jnp.zeros((max_edges, 2), dtype=jnp.int32)
+        self.mask = jnp.zeros((max_edges,), dtype=jnp.float32)
+        self._apply = jax.jit(graphdiff.apply_delta,
+                              donate_argnums=(0, 1) if donate else ())
+
+    def consume(self, item: FullSnapshot | SnapshotDelta
+                ) -> tuple[jax.Array, jax.Array, jax.Array]:
+        """-> (edges, mask, values) device arrays for this step."""
+        if isinstance(item, FullSnapshot):
+            self.edges = jnp.asarray(item.edges)
+            self.mask = jnp.asarray(item.mask)
+        else:
+            self.edges, self.mask = self._apply(
+                self.edges, self.mask, jnp.asarray(item.drop_pos),
+                jnp.asarray(item.drop_mask), jnp.asarray(item.add_edges),
+                jnp.asarray(item.add_mask))
+        return self.edges, self.mask, jnp.asarray(item.values)

@@ -122,6 +122,32 @@ def train_dyngnn(cfg: dyn_models.DynGNNConfig, pipeline: DTDGPipeline,
                       step=min(num_steps, start_step + len(losses))), losses
 
 
+def train_dyngnn_streamed(cfg: dyn_models.DynGNNConfig,
+                          pipeline: DTDGPipeline, num_epochs: int = 1,
+                          overlap: bool = True, prefetch_depth: int = 2,
+                          opt_cfg: adamw.AdamWConfig | None = None,
+                          log_every: int = 10,
+                          log_fn: Callable[[str], None] = print):
+    """Per-snapshot streaming training over the graph-diff delta stream.
+
+    Transfers ride the ``repro.stream`` subsystem: vectorized host encode
+    + prefetched ``device_put`` of delta k+1 overlapped with the jitted
+    ``apply_delta`` + train step of delta k (overlap=False forces the
+    synchronous reference schedule — identical losses, no overlap).
+    """
+    from repro.stream import train_loop as stream_train
+    ds = pipeline.ds
+    state = stream_train.train_streamed(
+        cfg, ds.snapshots, ds.values, np.asarray(ds.frames),
+        np.asarray(ds.labels), block_size=pipeline.bsize,
+        num_epochs=num_epochs, overlap=overlap,
+        prefetch_depth=prefetch_depth, opt_cfg=opt_cfg,
+        stats=pipeline.stream_stats, max_edges=pipeline.max_edges,
+        log_every=log_every, log_fn=log_fn)
+    return TrainState(params=state.params, opt_state=state.opt_state,
+                      step=len(state.losses)), state.losses
+
+
 def evaluate_link_prediction(cfg, params, pipeline: DTDGPipeline,
                              test_snapshot: np.ndarray, theta: float = 0.1,
                              seed: int = 0) -> float:

@@ -109,6 +109,7 @@ def test_int8_error_feedback_compression():
     error feedback drives the residual to track the truncation."""
     from functools import partial
     from jax.sharding import PartitionSpec as P
+    from repro.compat import shard_map
     from repro.launch.mesh import make_host_mesh
     mesh = make_host_mesh(data=4, model=1)
     rng = np.random.default_rng(0)
@@ -120,7 +121,7 @@ def test_int8_error_feedback_compression():
         red, new_res = compression.compressed_psum(grads, "data", res)
         return red["w"], new_res["w"]
 
-    out, res = jax.jit(jax.shard_map(
+    out, res = jax.jit(shard_map(
         fn, mesh=mesh, in_specs=(P("data", None),),
         out_specs=(P(), P()), check_vma=False))(g_local)
     exact = np.asarray(g_local).mean(axis=0)

@@ -8,8 +8,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (see requirements.txt)")
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
 
 from repro.kernels.flash_decode import ops as fd_ops
 from repro.kernels.mproduct import ops as mp_ops

@@ -123,6 +123,7 @@ def test_hybrid_spmm_matches_dense():
     from functools import partial as fpartial
 
     from jax.sharding import PartitionSpec as P
+    from repro.compat import shard_map
     mesh = make_host_mesh(data=1, model=4)
     rng = np.random.default_rng(0)
     n, e, f = 64, 512, 8
@@ -130,7 +131,7 @@ def test_hybrid_spmm_matches_dense():
     w = rng.normal(size=(e,)).astype(np.float32)
     x = rng.normal(size=(n, f)).astype(np.float32)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         fpartial(partition.hybrid_spmm, num_nodes=n, model_axis="model"),
         mesh=mesh, in_specs=(P(), P("model", None), P("model")),
         out_specs=P(), check_vma=False)

@@ -112,6 +112,7 @@ def test_grad_compression_trains():
     communication path, §5.5 + compression)."""
     from functools import partial
     from jax.sharding import PartitionSpec as P
+    from repro.compat import shard_map
     from repro.dist import compression
     mesh = make_host_mesh(data=4, model=1)
     rng = np.random.default_rng(0)
@@ -124,7 +125,7 @@ def test_grad_compression_trains():
         red, res = compression.compressed_psum({"w": g}, "data", {"w": res})
         return w - 0.1 * red["w"], res
 
-    fn = jax.jit(jax.shard_map(
+    fn = jax.jit(shard_map(
         local_step, mesh=mesh,
         in_specs=(P(), P(), P("data", None), P("data", None)),
         out_specs=(P(), P()), check_vma=False))
