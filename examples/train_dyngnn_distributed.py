@@ -53,6 +53,14 @@ def main() -> None:
                                            ds.snapshots[-1])
     print(f"link-prediction accuracy: {acc:.3f}")
 
+    # Same mesh, ONLINE: per-shard time-slice delta streams feed per-device
+    # edge-buffer rings; each checkpoint block trains one snapshot-parallel
+    # shard_map round while the next block's deltas prefetch.
+    s_state, s_losses = trainer.train_dyngnn_streamed(
+        cfg, pipeline, num_epochs=2, mesh=mesh, log_every=4)
+    print(f"streamed {s_state.step} block rounds on {p} shards; "
+          f"loss {s_losses[0]:.4f} -> {s_losses[-1]:.4f}")
+
 
 if __name__ == "__main__":
     main()

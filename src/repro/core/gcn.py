@@ -28,17 +28,24 @@ def init_gcn_params(key: Array, f_in: int, f_out: int,
 
 
 def spatial_aggregate(x: Array, edges: Array, edge_weights: Array,
-                      num_nodes: int, use_pallas: bool = False) -> Array:
-    """``A_tilde @ X`` for one snapshot. x: (N, F) -> (N, F)."""
+                      num_nodes: int, use_pallas: bool = False,
+                      interpret: bool | None = None) -> Array:
+    """``A_tilde @ X`` for one snapshot. x: (N, F) -> (N, F).
+
+    ``interpret=None`` lets the kernel wrapper resolve from the backend
+    (interpret only on CPU); pass an explicit bool to force either mode.
+    """
     if use_pallas:
         from repro.kernels.segment_spmm import ops as spmm_ops
-        return spmm_ops.segment_spmm(x, edges, edge_weights, num_nodes)
+        return spmm_ops.segment_spmm(x, edges, edge_weights, num_nodes,
+                                     interpret=interpret)
     return segment.spmm(x, edges, edge_weights, num_nodes)
 
 
 def gcn_apply(params: dict, x: Array, edges: Array, edge_weights: Array,
               num_nodes: int, *, activation: Callable = jax.nn.relu,
               concat_skip: bool = False, use_pallas: bool = False,
+              interpret: bool | None = None,
               pre_aggregated: bool = False) -> Array:
     """One GCN op on one snapshot.
 
@@ -48,7 +55,7 @@ def gcn_apply(params: dict, x: Array, edges: Array, edge_weights: Array,
     pre-computation, §5.5) — skip the sparse product.
     """
     y0 = x if pre_aggregated else spatial_aggregate(
-        x, edges, edge_weights, num_nodes, use_pallas)
+        x, edges, edge_weights, num_nodes, use_pallas, interpret)
     y1 = y0 @ params["w"] + params["b"]
     if concat_skip:
         return activation(jnp.concatenate([y0, y1], axis=-1))

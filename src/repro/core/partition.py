@@ -138,6 +138,13 @@ def _sp_block_body(cfg: mdl.DynGNNConfig, params: dict, axis,
     return new_carries, h
 
 
+# Public alias: one checkpoint block of the sharded layer stack (carries in,
+# carries out).  The streamed distributed trainer (repro.stream.distributed)
+# reuses it directly so the online path shares every collective with the
+# offline shard_map path above.
+snapshot_block_body = _sp_block_body
+
+
 def snapshot_partition_forward(cfg: mdl.DynGNNConfig, mesh: Mesh,
                                axis="data", a2a_chunks: int = 1):
     """Build the sharded forward fn: (params, batch) -> Z (T-sharded).

@@ -39,6 +39,35 @@ def snapshot_partition_volume(t: int, n: int, feat: int, layers: int,
     return 2.0 * layers * t * n * feat * (p - 1) / p
 
 
+def alltoall_round_payload(win: int, n: int, feat: int, layers: int,
+                           p: int, bytes_per: float = 4.0) -> float:
+    """Bytes crossing the network in ONE streamed round of ``win``
+    snapshots under snapshot partitioning: two all-to-alls per GCN layer
+    over the (win, N, F) block, each moving the (P-1)/P off-device
+    fraction.  Per SNAPSHOT this approaches 2*L*N*F*bytes_per from below
+    as P grows — the fixed-volume property the streamed distributed
+    trainer inherits (total communication independent of P)."""
+    if p <= 1:
+        return 0.0
+    return 2.0 * layers * win * n * feat * (p - 1) / p * bytes_per
+
+
+def streamed_shard_volume(num_steps: int, p: int, block_size: int,
+                          bytes_full: float, bytes_delta: float) -> float:
+    """Analytic per-shard host->device stream bytes under the time-sliced
+    delta streams (stream/sharded.py): each shard opens every round
+    (= checkpoint block) with one self-contained full snapshot — the
+    per-shard analogue of the block-boundary rule — and ships deltas for
+    the rest of its ``num_steps/P`` owned slice.
+
+    Under time-axis weak scaling (T and block_size grown with P, per-shard
+    work fixed) this is CONSTANT in P; on a fixed trace it shrinks ~1/P.
+    """
+    owned = num_steps / p
+    fulls = num_steps / block_size          # one slice start per block
+    return fulls * bytes_full + max(owned - fulls, 0.0) * bytes_delta
+
+
 def allgather_vertex_volume(t: int, n: int, feat: int, layers: int,
                             p: int) -> float:
     """Regular-pattern vertex baseline: per layer & snapshot every

@@ -47,6 +47,62 @@ def opt_state_specs(p_specs: Any) -> dict:
     return {"m": p_specs, "v": p_specs, "master": p_specs, "step": P()}
 
 
+# -------------------------------------------------- streamed dyn-GNN --------
+
+def stream_batch_specs(axis="data") -> dict:
+    """Specs for one streamed round under snapshot partitioning.
+
+    Every array is (win, ...) with the TIME axis sharded: shard s owns its
+    contiguous ``win/P`` reconstructed snapshots (Fig. 3b layout, one
+    checkpoint block per round).
+    """
+    return {
+        "frames": P(axis, None, None),    # (win, N, F)
+        "edges": P(axis, None, None),     # (win, E, 2)
+        "mask": P(axis, None),            # (win, E)
+        "values": P(axis, None),          # (win, E)
+        "labels": P(axis, None),          # (win, N)
+    }
+
+
+def stream_carry_specs(cfg, axis="data") -> list:
+    """PartitionSpec tree mirroring ``models.init_carries`` for the
+    snapshot-parallel streamed trainer.
+
+    The temporal stage runs in the N-sharded domain (after the first
+    all-to-all), so feature-RNN carries are vertex-sharded; EvolveGCN's
+    weight-LSTM carry is tiny and evolved redundantly on every shard
+    (§5.5), hence replicated.
+    """
+    specs: list = []
+    for _ in range(cfg.num_layers):
+        if cfg.model == "cdgcn":
+            specs.append((P(axis, None), P(axis, None)))      # LSTM (h, c)
+        elif cfg.model == "evolvegcn":
+            specs.append((P(), (P(), P())))                   # (W, (h, c))
+        elif cfg.model == "tmgcn":
+            specs.append(P(None, axis, None))                 # (w-1, N, d)
+        else:
+            raise ValueError(cfg.model)
+    return specs
+
+
+def shard_devices(mesh: Mesh, axis: str = "data") -> list:
+    """One representative device per shard along ``axis`` (which must be
+    the leading mesh axis): the placement target for per-shard delta
+    streams and edge-buffer rings."""
+    if mesh.axis_names[0] != axis:
+        raise ValueError(f"stream sharding expects {axis!r} leading the "
+                         f"mesh, got axes {mesh.axis_names}")
+    import numpy as np
+    devs = np.asarray(mesh.devices).reshape(mesh.shape[axis], -1)
+    if devs.shape[1] != 1:
+        raise ValueError(
+            "per-shard delta streams need a pure snapshot-parallel mesh "
+            f"(every non-{axis!r} axis of size 1); got {dict(mesh.shape)}")
+    return [devs[s, 0] for s in range(mesh.shape[axis])]
+
+
 # ------------------------------------------------------------------ LM ------
 
 def _model_if_divisible(dim: int, mesh: Mesh):

@@ -1,0 +1,17 @@
+"""Shared kernel-wrapper policy helpers."""
+
+from __future__ import annotations
+
+import jax
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """``None`` -> interpret exactly where Pallas has no native lowering.
+
+    The CPU backend runs kernels through the interpreter; every real
+    accelerator backend (TPU, GPU) must get the compiled kernel — silently
+    interpreting there would turn the "Pallas path" into a slow emulation.
+    """
+    if interpret is None:
+        return jax.default_backend() == "cpu"
+    return interpret

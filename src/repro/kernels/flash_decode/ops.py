@@ -4,6 +4,7 @@ from __future__ import annotations
 
 import jax
 
+from repro.kernels.common import resolve_interpret
 from repro.kernels.flash_decode import ref as _ref
 from repro.kernels.flash_decode.flash_decode import flash_decode
 
@@ -13,8 +14,8 @@ flash_decode_ref = _ref.flash_decode_ref
 def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                      cache_len: jax.Array, kv_block: int = 512,
                      use_pallas: bool = True,
-                     interpret: bool = True) -> jax.Array:
+                     interpret: bool | None = None) -> jax.Array:
     if use_pallas:
         return flash_decode(q, k, v, cache_len, kv_block=kv_block,
-                            interpret=interpret)
+                            interpret=resolve_interpret(interpret))
     return flash_decode_ref(q, k, v, cache_len)

@@ -5,6 +5,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import resolve_interpret
 from repro.kernels.mproduct import ref as _ref
 from repro.kernels.mproduct.mproduct import banded_ttm
 
@@ -13,12 +14,14 @@ m_matrix = _ref.m_matrix
 
 
 def m_product(x: jax.Array, window: int, t_offset: jax.Array | int = 0,
-              interpret: bool = True) -> jax.Array:
+              interpret: bool | None = None) -> jax.Array:
     """TM-GCN temporal op on a (T, N, F) tensor via the Pallas kernel.
 
     Drop-in for ``repro.core.temporal.m_product`` (use_pallas path).
+    ``interpret=None`` resolves from the backend: interpret on CPU only.
     """
     t = x.shape[0]
     flat = x.reshape(t, -1)
-    y = banded_ttm(flat, window, t_offset, interpret=interpret)
+    y = banded_ttm(flat, window, t_offset,
+                   interpret=resolve_interpret(interpret))
     return y.reshape(x.shape)

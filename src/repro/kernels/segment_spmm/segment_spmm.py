@@ -29,6 +29,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import resolve_interpret  # noqa: F401 (re-export)
+
 DEFAULT_NODE_BLOCK = 128
 DEFAULT_FEAT_BLOCK = 128
 
@@ -53,8 +55,9 @@ def _kernel(dst_ref, msg_ref, out_ref, *, node_block: int):
 def bucketed_segment_sum(dst_local: jax.Array, messages: jax.Array,
                          node_block: int = DEFAULT_NODE_BLOCK,
                          feat_block: int = DEFAULT_FEAT_BLOCK,
-                         interpret: bool = False) -> jax.Array:
+                         interpret: bool | None = None) -> jax.Array:
     """(NB, EPB) int32 x (NB, EPB, F) -> (NB, node_block, F)."""
+    interpret = resolve_interpret(interpret)
     nb, epb = dst_local.shape
     f = messages.shape[-1]
     if f % feat_block != 0:

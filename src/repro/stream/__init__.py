@@ -7,21 +7,29 @@ The subsystem has three pieces:
 * ``prefetch``   — background-thread encode + ``jax.device_put`` lookahead
   overlapping delta k+1's transfer with step k's compute, and the
   device-resident edge-buffer ring the deltas are applied into;
-* ``sharded``    — per-shard time-slice streams for snapshot partitioning.
+* ``sharded``    — per-shard time-slice streams for snapshot partitioning;
+* ``distributed``— the composition: per-shard streams feeding per-device
+  edge-buffer rings under the snapshot-parallel shard_map train step
+  (2 fixed-volume all-to-alls per layer, GCN stage communication-free).
 
 ``core.graphdiff`` keeps the synchronous reference encoder/decoder the
 tests diff against; ``train_loop`` drives per-snapshot streaming training
-through both the synchronous and the overlapped path (identical math).
+through both the synchronous and the overlapped path (identical math) and
+the slice-granularity single-device reference the distributed trainer is
+pinned against.
 """
 
-from repro.stream.encoder import (DeltaStats, encode_stream_fast,
+from repro.stream.encoder import (ChurnOverflowError, DeltaStats,
+                                  StreamReport, encode_stream_fast,
                                   iter_encode_stream, measure_stats,
                                   padded_max_edges)
-from repro.stream.prefetch import DeltaApplier, PrefetchIterator
+from repro.stream.prefetch import (DeltaApplier, PrefetchIterator,
+                                   SlotStacker)
 from repro.stream.sharded import encode_time_sliced, shard_slice_steps
 
 __all__ = [
-    "DeltaStats", "encode_stream_fast", "iter_encode_stream",
-    "measure_stats", "padded_max_edges", "DeltaApplier",
-    "PrefetchIterator", "encode_time_sliced", "shard_slice_steps",
+    "ChurnOverflowError", "DeltaStats", "StreamReport",
+    "encode_stream_fast", "iter_encode_stream", "measure_stats",
+    "padded_max_edges", "DeltaApplier", "PrefetchIterator", "SlotStacker",
+    "encode_time_sliced", "shard_slice_steps",
 ]

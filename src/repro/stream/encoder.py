@@ -20,12 +20,45 @@ tests/test_stream.py.
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+import warnings
+from dataclasses import dataclass, field
 from typing import Iterator
 
 import numpy as np
 
 from repro.core.graphdiff import FullSnapshot, SnapshotDelta, _edge_key
+
+
+class ChurnOverflowError(ValueError):
+    """Measured churn at one step exceeds the stats-sized delta pads."""
+
+    def __init__(self, drops: int, adds: int, drop_pad: int, add_pad: int):
+        self.drops, self.adds = drops, adds
+        self.drop_pad, self.add_pad = drop_pad, add_pad
+        super().__init__(
+            f"churn ({drops} drops / {adds} adds) exceeds stats pad "
+            f"({drop_pad}/{add_pad}); re-measure stats")
+
+
+@dataclass
+class StreamReport:
+    """Mutable per-stream health counters (shared with the caller).
+
+    ``resyncs`` counts delta steps that overflowed the stats pads and were
+    downgraded to FullSnapshot resyncs — a long-running stream whose live
+    churn drifts past the measured trace statistics degrades (extra full
+    payloads) instead of crashing mid-training.
+    """
+    resyncs: int = 0
+    worst_drops: int = 0
+    worst_adds: int = 0
+    resync_steps: list = field(default_factory=list)
+
+    def note_overflow(self, step: int, err: ChurnOverflowError) -> None:
+        self.resyncs += 1
+        self.worst_drops = max(self.worst_drops, err.drops)
+        self.worst_adds = max(self.worst_adds, err.adds)
+        self.resync_steps.append(step)
 
 
 @dataclass(frozen=True)
@@ -109,9 +142,8 @@ def _delta_step(dev: _DeviceMirror, snap: np.ndarray, vals: np.ndarray,
     drop_pos = np.nonzero(~keep_sel)[0].astype(np.int32)
     adds = snap[add_sel]
     if drop_pos.shape[0] > drop_pad or adds.shape[0] > add_pad:
-        raise ValueError(
-            f"churn ({drop_pos.shape[0]} drops / {adds.shape[0]} adds) "
-            f"exceeds stats pad ({drop_pad}/{add_pad}); re-measure stats")
+        raise ChurnOverflowError(drop_pos.shape[0], adds.shape[0],
+                                 drop_pad, add_pad)
 
     dp = np.zeros((drop_pad,), dtype=np.int32)
     dm = np.zeros((drop_pad,), dtype=np.float32)
@@ -151,31 +183,70 @@ def _full_step(snap: np.ndarray, vals: np.ndarray,
 def iter_encode_stream(snapshots: list[np.ndarray],
                        values: list[np.ndarray] | None,
                        num_nodes: int, max_edges: int, block_size: int,
-                       stats: DeltaStats | None = None
+                       stats: DeltaStats | None = None,
+                       on_overflow: str = "resync",
+                       report: StreamReport | None = None
                        ) -> Iterator[FullSnapshot | SnapshotDelta]:
-    """Lazily encode the trace (the form the prefetch thread consumes)."""
+    """Lazily encode the trace (the form the prefetch thread consumes).
+
+    ``on_overflow`` governs steps whose measured churn exceeds the
+    stats-sized pads (possible when ``stats`` came from a different trace
+    prefix than the live stream):
+
+    * ``"resync"`` (default) — ship that step as a FullSnapshot resync (the
+      decoder treats it like a block boundary), warn, and count it on
+      ``report``; long-running streams degrade instead of crashing.
+    * ``"raise"`` — propagate :class:`ChurnOverflowError` (strict mode for
+      offline encoding where stats are authoritative).
+    """
+    if on_overflow not in ("resync", "raise"):
+        raise ValueError(f"on_overflow must be resync|raise, "
+                         f"got {on_overflow!r}")
     if stats is None:
         stats = measure_stats(snapshots, num_nodes, block_size, max_edges)
+
+    def full_resync(snap, vals):
+        keys = _edge_key(snap, num_nodes)
+        return _full_step(snap, vals, max_edges), _DeviceMirror(
+            edges=snap.copy(), keys=keys, keys_sorted=np.sort(keys))
+
     dev: _DeviceMirror | None = None
+    warned = False
     for i, snap in enumerate(snapshots):
         vals = (values[i] if values is not None
                 else np.ones((snap.shape[0],), dtype=np.float32))
         if i % block_size == 0:
-            yield _full_step(snap, vals, max_edges)
-            keys = _edge_key(snap, num_nodes)
-            dev = _DeviceMirror(edges=snap.copy(), keys=keys,
-                                keys_sorted=np.sort(keys))
+            item, dev = full_resync(snap, vals)
         else:
-            delta, dev = _delta_step(dev, snap, vals, num_nodes, max_edges,
-                                     stats.max_drops, stats.max_adds)
-            yield delta
+            try:
+                item, dev = _delta_step(dev, snap, vals, num_nodes,
+                                        max_edges, stats.max_drops,
+                                        stats.max_adds)
+            except ChurnOverflowError as err:
+                if on_overflow == "raise":
+                    raise
+                if report is not None:
+                    report.note_overflow(i, err)
+                if not warned:
+                    # once per stream: a long-drifted stream can resync on
+                    # many steps and must not flood stderr — the report
+                    # carries the per-step detail
+                    warnings.warn(
+                        f"delta stream step {i}: {err}; emitting "
+                        "FullSnapshot resync (further overflows counted "
+                        "on StreamReport, not warned)", stacklevel=2)
+                    warned = True
+                item, dev = full_resync(snap, vals)
+        yield item
 
 
 def encode_stream_fast(snapshots: list[np.ndarray],
                        values: list[np.ndarray] | None,
                        num_nodes: int, max_edges: int, block_size: int,
-                       stats: DeltaStats | None = None
+                       stats: DeltaStats | None = None,
+                       on_overflow: str = "resync",
+                       report: StreamReport | None = None
                        ) -> list[FullSnapshot | SnapshotDelta]:
     """Drop-in replacement for ``core.graphdiff.encode_stream``."""
     return list(iter_encode_stream(snapshots, values, num_nodes, max_edges,
-                                   block_size, stats))
+                                   block_size, stats, on_overflow, report))

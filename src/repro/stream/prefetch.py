@@ -108,23 +108,31 @@ class PrefetchIterator:
         return False
 
 
-def stage_item(item: Any) -> Any:
-    """Ship one stream item's arrays to device (tuples recurse)."""
+def stage_item(item: Any, device=None) -> Any:
+    """Ship one stream item's arrays to device (tuples recurse).
+
+    ``device`` may be a concrete ``jax.Device`` (per-shard staging: the
+    distributed streamed trainer pins each shard's delta to its own device)
+    or a ``Sharding`` — anything ``jax.device_put`` accepts.  ``None`` keeps
+    the single-device default placement.
+    """
+    put = (jax.device_put if device is None
+           else (lambda x: jax.device_put(x, device)))
     if isinstance(item, tuple):
-        return tuple(stage_item(x) for x in item)
+        return tuple(stage_item(x, device) for x in item)
     if isinstance(item, FullSnapshot):
-        return FullSnapshot(edges=jax.device_put(item.edges),
-                            mask=jax.device_put(item.mask),
-                            values=jax.device_put(item.values),
+        return FullSnapshot(edges=put(item.edges),
+                            mask=put(item.mask),
+                            values=put(item.values),
                             num_edges=item.num_edges)
     if isinstance(item, SnapshotDelta):
-        return SnapshotDelta(drop_pos=jax.device_put(item.drop_pos),
-                             drop_mask=jax.device_put(item.drop_mask),
-                             add_edges=jax.device_put(item.add_edges),
-                             add_mask=jax.device_put(item.add_mask),
-                             values=jax.device_put(item.values),
+        return SnapshotDelta(drop_pos=put(item.drop_pos),
+                             drop_mask=put(item.drop_mask),
+                             add_edges=put(item.add_edges),
+                             add_mask=put(item.add_mask),
+                             values=put(item.values),
                              num_edges=item.num_edges)
-    return jax.device_put(item)
+    return put(item)
 
 
 class DeltaApplier:
@@ -137,9 +145,15 @@ class DeltaApplier:
     input/output aliasing — no per-step allocation).
     """
 
-    def __init__(self, max_edges: int, donate: bool = True):
+    def __init__(self, max_edges: int, donate: bool = True, device=None):
         self.edges = jnp.zeros((max_edges, 2), dtype=jnp.int32)
         self.mask = jnp.zeros((max_edges,), dtype=jnp.float32)
+        if device is not None:
+            # Pin the ring to one shard's device: with committed inputs the
+            # jitted apply (and every donation) stays on that device, so P
+            # shard rings run truly independent per-device streams.
+            self.edges = jax.device_put(self.edges, device)
+            self.mask = jax.device_put(self.mask, device)
         self._apply = jax.jit(graphdiff.apply_delta,
                               donate_argnums=(0, 1) if donate else ())
 
@@ -155,3 +169,32 @@ class DeltaApplier:
                 jnp.asarray(item.drop_mask), jnp.asarray(item.add_edges),
                 jnp.asarray(item.add_mask))
         return self.edges, self.mask, jnp.asarray(item.values)
+
+
+class SlotStacker:
+    """Per-shard slot staging for blockwise streaming.
+
+    The distributed trainer reconstructs ``slots`` consecutive snapshots on
+    each shard before one sharded train step consumes them all.  The
+    applier's ring DONATES its buffers on the next ``consume``, so each
+    reconstructed snapshot must be copied out first: ``put(j, ...)``
+    dispatches one O(E) copy per buffer (device program order guarantees
+    the read happens before the next apply retires the ring slot), and
+    ``arrays()`` stacks the slots into fresh (slots, E, ...) blocks once
+    per round — O(slots * E) total, and nothing the assembled global
+    array aliases is ever donated.
+    """
+
+    def __init__(self, slots: int):
+        self._slots: list = [None] * slots
+
+    _copy = staticmethod(jax.jit(jnp.copy))
+
+    def put(self, j: int, edges, mask, values) -> None:
+        self._slots[j] = (self._copy(edges), self._copy(mask),
+                          self._copy(values))
+
+    def arrays(self):
+        """-> (edges (slots, E, 2), mask (slots, E), values (slots, E))."""
+        es, ms, vs = zip(*self._slots)
+        return jnp.stack(es), jnp.stack(ms), jnp.stack(vs)

@@ -31,7 +31,8 @@ from repro.core import models as mdl
 from repro.graph import segment
 from repro.optim import adamw
 from repro.stream import encoder as enc
-from repro.stream.prefetch import DeltaApplier, PrefetchIterator, stage_item
+from repro.stream.prefetch import (DeltaApplier, PrefetchIterator,
+                                   SlotStacker, stage_item)
 
 
 @dataclass
@@ -78,6 +79,76 @@ def make_stream_train_step(cfg: mdl.DynGNNConfig,
     return step
 
 
+def make_self_loops(n: int) -> tuple[jax.Array, jax.Array]:
+    """Device-resident self-loop edge list + unit mask/values for N nodes."""
+    return (jnp.stack([jnp.arange(n, dtype=jnp.int32)] * 2, axis=1),
+            jnp.ones((n,), dtype=jnp.float32))
+
+
+def slice_weights_with_loops(n: int, loop_edges, loop_ones, edges, mask,
+                             values) -> tuple[jax.Array, jax.Array]:
+    """Append self-loops to a (k, E, 2) slice of reconstructed snapshots
+    and recompute the per-step Laplacian weights on device.
+
+    The ONE implementation of the streamed loss preamble — the
+    single-device slice step and the sharded block step (where ``edges``
+    is each shard's local time slice) both call it, so the <=1e-5 pinned
+    equivalence can't drift apart edit by edit.
+    """
+    k = edges.shape[0]
+    le = jnp.broadcast_to(loop_edges[None], (k,) + loop_edges.shape)
+    lo = jnp.broadcast_to(loop_ones[None], (k,) + loop_ones.shape)
+    e_full = jnp.concatenate([edges, le], axis=1)
+    m_full = jnp.concatenate([mask, lo], axis=1)
+    v_full = jnp.concatenate([values, lo], axis=1)
+    w_full = jax.vmap(
+        lambda e, m, v: segment.gcn_edge_weights(e, n, m, v))(
+        e_full, m_full, v_full)
+    return e_full, w_full
+
+
+def slice_nll(params: dict, z, labels) -> jax.Array:
+    """Per-(t, u) CE against the shared classifier (float32 softmax)."""
+    logits = mdl.classify(params, z)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+
+
+def make_stream_slice_step(cfg: mdl.DynGNNConfig,
+                           opt_cfg: adamw.AdamWConfig):
+    """Jitted multi-snapshot step over a contiguous timeline slice.
+
+    Same math as ``make_stream_train_step`` generalized to ``k`` stacked
+    reconstructed snapshots: per-step Laplacian weights on device, one
+    ``forward_slice`` over the k-length timeline, mean CE, one AdamW
+    update.  This is the single-device reference the snapshot-parallel
+    distributed streamed trainer (``repro.stream.distributed``) must match:
+    there the identical slice is computed with the time axis sharded and
+    the temporal stage reached through two all-to-alls.
+    """
+    n = cfg.num_nodes
+    loop_edges, loop_ones = make_self_loops(n)
+
+    @jax.jit
+    def step(params, opt_state, carries, frames, edges, mask, values,
+             labels, t_offset):
+        e_full, w_full = slice_weights_with_loops(
+            n, loop_edges, loop_ones, edges, mask, values)
+
+        def loss_fn(p):
+            z, new_carries = mdl.forward_slice(cfg, p, frames, e_full,
+                                               w_full, carries, t_offset)
+            return jnp.mean(slice_nll(p, z, labels)), new_carries
+
+        (loss, new_carries), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        params2, opt2 = adamw.apply_updates(opt_cfg, params, grads,
+                                            opt_state)
+        return params2, opt2, new_carries, loss
+
+    return step
+
+
 def host_stream(snapshots, values, frames, labels, num_nodes: int,
                 max_edges: int, block_size: int,
                 stats: enc.DeltaStats | None = None):
@@ -92,6 +163,22 @@ def default_max_edges(snapshots) -> int:
     return enc.padded_max_edges(snapshots)
 
 
+def round_host_stream(step_iter, slice_len: int):
+    """Group the per-step host stream into slices of ``slice_len``:
+    yields (items tuple, frames (k, N, F), labels (k, N)) per round."""
+    items, frs, labs = [], [], []
+    for item, fr, lab in step_iter:
+        items.append(item)
+        frs.append(fr)
+        labs.append(lab)
+        if len(items) == slice_len:
+            yield tuple(items), np.stack(frs), np.stack(labs)
+            items, frs, labs = [], [], []
+    if items:
+        raise ValueError(f"trace length not divisible by slice_len="
+                         f"{slice_len} ({len(items)} steps left over)")
+
+
 def train_streamed(cfg: mdl.DynGNNConfig, snapshots, values, frames,
                    labels, *, block_size: int | None = None,
                    num_epochs: int = 1, overlap: bool = True,
@@ -100,6 +187,7 @@ def train_streamed(cfg: mdl.DynGNNConfig, snapshots, values, frames,
                    params: dict | None = None, opt_state=None,
                    stats: enc.DeltaStats | None = None,
                    max_edges: int | None = None,
+                   slice_len: int | None = None,
                    log_every: int = 10,
                    log_fn=None) -> StreamTrainState:
     """Stream the trace through per-snapshot training.
@@ -107,6 +195,13 @@ def train_streamed(cfg: mdl.DynGNNConfig, snapshots, values, frames,
     Identical-loss guarantee: for fixed inputs the returned loss sequence
     does not depend on ``overlap`` / ``prefetch_depth`` — prefetching moves
     work between threads, never across the data dependency order.
+
+    ``slice_len`` > 1 switches to slice-granularity online updates: each
+    round reconstructs ``slice_len`` consecutive snapshots from the delta
+    stream and takes ONE AdamW step on their mean CE (the single-device
+    reference semantics of the distributed streamed trainer, which shards
+    exactly this slice over its mesh).  ``slice_len`` in (None, 1) keeps
+    the per-snapshot schedule unchanged.
     """
     t_steps = len(snapshots)
     block_size = block_size or max(t_steps // max(cfg.checkpoint_blocks, 1),
@@ -122,28 +217,52 @@ def train_streamed(cfg: mdl.DynGNNConfig, snapshots, values, frames,
         params = mdl.init_params(jax.random.PRNGKey(0), cfg)
     if opt_state is None:
         opt_state = adamw.init_state(params)
-    step_fn = make_stream_train_step(cfg, opt_cfg)
+    sliced = slice_len is not None and slice_len > 1
+    step_fn = (make_stream_slice_step(cfg, opt_cfg) if sliced
+               else make_stream_train_step(cfg, opt_cfg))
     mk_host = partial(host_stream, snapshots, values, frames, labels,
                       cfg.num_nodes, max_edges, block_size, stats)
+    if sliced and t_steps % slice_len:
+        raise ValueError(f"slice_len {slice_len} must divide the trace "
+                         f"length {t_steps}")
 
     losses: list[float] = []
     for _ in range(num_epochs):
+        host = round_host_stream(mk_host(), slice_len) if sliced \
+            else mk_host()
         if overlap:
-            items = PrefetchIterator(mk_host(), depth=prefetch_depth)
+            items = PrefetchIterator(host, depth=prefetch_depth)
         else:
-            items = (stage_item(x) for x in mk_host())
+            items = (stage_item(x) for x in host)
         applier = DeltaApplier(max_edges)
         carries = mdl.init_carries(cfg, params)
         try:
-            for t, (item, frame, lab) in enumerate(items):
-                edges, mask, vals = applier.consume(item)
-                params, opt_state, carries, loss = step_fn(
-                    params, opt_state, carries, frame, edges, mask, vals,
-                    lab, jnp.int32(t))
-                losses.append(float(loss))
-                if log_fn is not None and (len(losses) - 1) % log_every == 0:
-                    log_fn(f"stream step {len(losses) - 1} "
-                           f"loss {losses[-1]:.4f}")
+            if sliced:
+                stacker = SlotStacker(slice_len)
+                for r, (slice_items, frame_b, lab_b) in enumerate(items):
+                    for j, item in enumerate(slice_items):
+                        edges, mask, vals = applier.consume(item)
+                        stacker.put(j, edges, mask, vals)
+                    e_b, m_b, v_b = stacker.arrays()
+                    params, opt_state, carries, loss = step_fn(
+                        params, opt_state, carries, frame_b, e_b, m_b,
+                        v_b, lab_b, jnp.int32(r * slice_len))
+                    losses.append(float(loss))
+                    if log_fn is not None \
+                            and (len(losses) - 1) % log_every == 0:
+                        log_fn(f"stream slice {len(losses) - 1} "
+                               f"loss {losses[-1]:.4f}")
+            else:
+                for t, (item, frame, lab) in enumerate(items):
+                    edges, mask, vals = applier.consume(item)
+                    params, opt_state, carries, loss = step_fn(
+                        params, opt_state, carries, frame, edges, mask,
+                        vals, lab, jnp.int32(t))
+                    losses.append(float(loss))
+                    if log_fn is not None \
+                            and (len(losses) - 1) % log_every == 0:
+                        log_fn(f"stream step {len(losses) - 1} "
+                               f"loss {losses[-1]:.4f}")
         finally:
             # unblock + retire the prefetch worker if the step raised
             if isinstance(items, PrefetchIterator):

@@ -126,17 +126,35 @@ def train_dyngnn_streamed(cfg: dyn_models.DynGNNConfig,
                           pipeline: DTDGPipeline, num_epochs: int = 1,
                           overlap: bool = True, prefetch_depth: int = 2,
                           opt_cfg: adamw.AdamWConfig | None = None,
-                          log_every: int = 10,
+                          mesh=None, log_every: int = 10,
                           log_fn: Callable[[str], None] = print):
-    """Per-snapshot streaming training over the graph-diff delta stream.
+    """Streaming training over the graph-diff delta stream.
 
     Transfers ride the ``repro.stream`` subsystem: vectorized host encode
     + prefetched ``device_put`` of delta k+1 overlapped with the jitted
     ``apply_delta`` + train step of delta k (overlap=False forces the
     synchronous reference schedule — identical losses, no overlap).
+
+    ``mesh=None`` runs the single-device per-snapshot loop.  With a mesh,
+    the trainer goes snapshot-parallel: per-shard time-slice delta streams
+    (1/P transfer volume each) feed per-device edge-buffer rings, and each
+    checkpoint block trains under the snapshot-partition shard_map — the
+    temporal stage crosses shards through two fixed-volume all-to-alls per
+    layer while the GCN stage stays communication-free.
     """
-    from repro.stream import train_loop as stream_train
     ds = pipeline.ds
+    if mesh is not None:
+        from repro.stream import distributed as stream_dist
+        state = stream_dist.train_distributed_streamed(
+            cfg, ds.snapshots, ds.values, np.asarray(ds.frames),
+            np.asarray(ds.labels), mesh=mesh, block_size=pipeline.bsize,
+            num_epochs=num_epochs, overlap=overlap,
+            prefetch_depth=prefetch_depth, opt_cfg=opt_cfg,
+            stats=pipeline.stream_stats, max_edges=pipeline.max_edges,
+            log_every=log_every, log_fn=log_fn)
+        return TrainState(params=state.params, opt_state=state.opt_state,
+                          step=len(state.losses)), state.losses
+    from repro.stream import train_loop as stream_train
     state = stream_train.train_streamed(
         cfg, ds.snapshots, ds.values, np.asarray(ds.frames),
         np.asarray(ds.labels), block_size=pipeline.bsize,

@@ -1,0 +1,186 @@
+"""Distributed streamed training vs the single-device streamed reference.
+
+The composition PR 2 exists for: per-shard time-slice delta streams +
+per-device edge-buffer rings + the snapshot-parallel shard_map step must
+reproduce the single-device slice-granularity streamed loss stream on the
+same trace (<= 1e-5 relative), ship only ~1/P of the stream to each
+device, and cross shards exclusively through the two all-to-alls per
+layer."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.models import DynGNNConfig
+from repro.data.dyngnn import synthetic_dataset
+from repro.dist import sharding as shardlib
+from repro.launch.mesh import make_host_mesh
+from repro.stream import distributed as dist
+from repro.stream import train_loop as stream_train
+
+N, T, NB = 48, 16, 2
+WIN = T // NB
+
+
+def _ds(model, seed=0):
+    smooth = {"tmgcn": "mproduct", "evolvegcn": "edgelife",
+              "cdgcn": "none"}[model]
+    ds = synthetic_dataset(N, T, density=2.0, churn=0.1,
+                           smoothing_mode=smooth, window=3, seed=seed)
+    cfg = DynGNNConfig(model=model, num_nodes=N, num_steps=T, window=3,
+                       checkpoint_blocks=NB)
+    return cfg, ds, np.asarray(ds.frames), np.asarray(ds.labels)
+
+
+@pytest.mark.parametrize("model", ["tmgcn", "cdgcn", "evolvegcn"])
+def test_distributed_matches_single_device_reference(model):
+    """Same trace, same seed: the distributed loss stream equals the
+    slice-granularity single-device reference to <= 1e-5 relative, and so
+    do the final params."""
+    cfg, ds, frames, labels = _ds(model)
+    ref = stream_train.train_streamed(
+        cfg, ds.snapshots, ds.values, frames, labels, num_epochs=2,
+        overlap=False, slice_len=WIN)
+    mesh = make_host_mesh(data=4, model=1)
+    got = dist.train_distributed_streamed(
+        cfg, ds.snapshots, ds.values, frames, labels, mesh=mesh,
+        num_epochs=2)
+    assert len(got.losses) == len(ref.losses) == 2 * NB
+    np.testing.assert_allclose(got.losses, ref.losses, rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(ref.params),
+                    jax.tree.leaves(got.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-6)
+
+
+def test_distributed_overlap_is_pure_schedule_change():
+    """Prefetched per-shard staging vs the synchronous schedule: identical
+    losses (prefetch moves work between threads, never across the data
+    dependency order)."""
+    cfg, ds, frames, labels = _ds("tmgcn")
+    mesh = make_host_mesh(data=4, model=1)
+    kw = dict(mesh=mesh, num_epochs=2)
+    sync = dist.train_distributed_streamed(
+        cfg, ds.snapshots, ds.values, frames, labels, overlap=False, **kw)
+    over = dist.train_distributed_streamed(
+        cfg, ds.snapshots, ds.values, frames, labels, overlap=True,
+        prefetch_depth=3, **kw)
+    assert sync.losses == over.losses
+    for a, b in zip(jax.tree.leaves(sync.params),
+                    jax.tree.leaves(over.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("p", [2, 4])
+def test_per_shard_stream_volume_scales_down(p):
+    """Each shard receives only its own time slices: per-shard payload is
+    well under the full stream's bytes (down to slice-boundary fulls)."""
+    cfg, ds, frames, labels = _ds("tmgcn")
+    mesh = make_host_mesh(data=p, model=1)
+    got = dist.train_distributed_streamed(
+        cfg, ds.snapshots, ds.values, frames, labels, mesh=mesh,
+        num_epochs=1)
+    assert len(got.per_shard_bytes) == p
+    from repro.core import graphdiff
+    from repro.stream import encoder as enc
+    max_edges = enc.padded_max_edges(ds.snapshots)
+    full = graphdiff.stream_bytes(enc.encode_stream_fast(
+        ds.snapshots, ds.values, N, max_edges, WIN))
+    for per_dev in got.per_shard_bytes:
+        assert per_dev < full
+    assert max(got.per_shard_bytes) < 2 * full / p + max_edges * 12
+
+
+def test_round_staging_pins_shards_to_their_devices():
+    """The prefetch stage function must place shard s's delta items on
+    shard s's device and frames/labels with their NamedSharding."""
+    cfg, ds, frames, labels = _ds("tmgcn")
+    mesh = make_host_mesh(data=4, model=1)
+    devices = shardlib.shard_devices(mesh, "data")
+    from repro.stream import encoder as enc
+    from repro.stream import sharded as stream_sharded
+    max_edges = enc.padded_max_edges(ds.snapshots)
+    streams = stream_sharded.encode_time_sliced(
+        ds.snapshots, ds.values, N, max_edges, WIN, 4)
+    stage = dist.make_round_stage_fn(mesh, "data")
+    (items, fr_g, lab_g) = stage(next(dist.dist_round_stream(
+        streams, frames, labels, WIN, WIN // 4)))
+    for s, shard_items in enumerate(items):
+        assert len(shard_items) == WIN // 4
+        for it in shard_items:
+            arr = it.edges if hasattr(it, "edges") else it.add_edges
+            assert list(arr.devices()) == [devices[s]]
+    assert fr_g.shape == (WIN, N, frames.shape[-1])
+    assert fr_g.sharding.spec == shardlib.stream_batch_specs()["frames"]
+    assert lab_g.sharding.spec == shardlib.stream_batch_specs()["labels"]
+
+
+def test_step_crosses_shards_via_all_to_all_only():
+    """Structural: the compiled sharded loss contains all-to-alls (the two
+    redistributions per GCN layer) and no all-gather on the feature path;
+    EvolveGCN compiles with NO feature collectives at all (§5.5)."""
+    mesh = make_host_mesh(data=4, model=1)
+
+    def hlo_for(model):
+        cfg, ds, frames, labels = _ds(model)
+        from repro.core import models as mdl
+        from repro.optim import adamw
+        step = dist.make_dist_stream_step(
+            cfg, mesh, adamw.AdamWConfig(lr=1e-2, total_steps=10))
+        params = mdl.init_params(jax.random.PRNGKey(0), cfg)
+        opt_state = adamw.init_state(params)
+        carries = dist.init_sharded_carries(cfg, params, mesh)
+        e = jnp.zeros((WIN, 128, 2), jnp.int32)
+        m = jnp.zeros((WIN, 128), jnp.float32)
+        v = jnp.zeros((WIN, 128), jnp.float32)
+        fr = jnp.zeros((WIN, N, cfg.feat_in), jnp.float32)
+        lab = jnp.zeros((WIN, N), jnp.int32)
+        return step.lower(params, opt_state, carries, fr, e, m, v, lab,
+                          jnp.int32(0)).compile().as_text()
+
+    txt = hlo_for("tmgcn")
+    assert txt.count("all-to-all") >= 2     # T->N and N->T redistributions
+    evolve = hlo_for("evolvegcn")
+    assert "all-to-all" not in evolve       # weights evolve locally (§5.5)
+
+
+def test_sharded_carries_keep_their_placement():
+    """Feature-RNN carries stay vertex-sharded across rounds — the step
+    must not silently gather them to one device."""
+    cfg, ds, frames, labels = _ds("cdgcn")
+    mesh = make_host_mesh(data=4, model=1)
+    from repro.core import models as mdl
+    params = mdl.init_params(jax.random.PRNGKey(0), cfg)
+    carries = dist.init_sharded_carries(cfg, params, mesh)
+    for h, c in carries:
+        assert len(h.sharding.device_set) == 4
+        assert h.sharding.spec == jax.sharding.PartitionSpec("data", None)
+
+
+def test_streamed_comm_volume_laws():
+    """Analytic invariants the benchmark relies on: per-shard stream
+    volume constant under time-axis weak scaling, ~1/P on a fixed trace;
+    per-snapshot all-to-all payload monotone in P and bounded by the
+    fixed 2*L*N*F total."""
+    from repro.dist import comm_volume as cv
+    weak = [cv.streamed_shard_volume(8 * p, p, 2 * p, 1000.0, 100.0)
+            for p in (1, 2, 4, 8)]
+    assert max(weak) == min(weak)               # exactly constant
+    fixed = [cv.streamed_shard_volume(64, p, 8, 1000.0, 100.0)
+             for p in (1, 2, 4, 8)]
+    assert fixed[0] > fixed[1] > fixed[2] > fixed[3]
+    n, feat, layers = 128, 6, 2
+    bound = 2 * layers * n * feat * 4
+    payloads = [cv.alltoall_round_payload(2 * p, n, feat, layers, p) /
+                (2 * p) for p in (1, 2, 4, 8)]
+    assert payloads[0] == 0.0
+    assert payloads[1] < payloads[2] < payloads[3] <= bound
+
+
+def test_mesh_validation_errors():
+    cfg, ds, frames, labels = _ds("tmgcn")
+    mesh = make_host_mesh(data=3, model=1)
+    with pytest.raises(ValueError, match="must divide"):
+        dist.train_distributed_streamed(
+            cfg, ds.snapshots, ds.values, frames, labels, mesh=mesh)

@@ -85,6 +85,41 @@ def test_payload_bytes_match_reference_and_ratio_bound():
     assert gd >= full_bytes > 0
 
 
+def test_encoder_churn_overflow_resyncs_instead_of_crashing():
+    """When live churn exceeds the stats-sized pads the encoder must not
+    raise mid-stream: it ships a FullSnapshot resync for that step, counts
+    it, and the stream still decodes to the exact snapshot sequence."""
+    snaps, values, max_edges = _trace(churn=0.3)
+    tiny = stream_encoder.DeltaStats(max_edges=max_edges, max_drops=1,
+                                     max_adds=1)
+    report = stream_encoder.StreamReport()
+    with pytest.warns(UserWarning, match="resync"):
+        stream = stream_encoder.encode_stream_fast(
+            snaps, values, N, max_edges, BS, tiny, report=report)
+    assert report.resyncs > 0
+    assert report.worst_drops > tiny.max_drops \
+        or report.worst_adds > tiny.max_adds
+    assert len(report.resync_steps) == report.resyncs
+    fulls = sum(isinstance(s, graphdiff.FullSnapshot) for s in stream)
+    assert fulls == T // BS + report.resyncs
+    # degraded, not wrong: every step still reconstructs its snapshot
+    for (e, m), snap in zip(graphdiff.decode_stream(stream, max_edges),
+                            snaps):
+        valid = e[m > 0]
+        assert set(map(tuple, valid.tolist())) \
+            == set(map(tuple, snap.tolist()))
+
+
+def test_encoder_churn_overflow_strict_mode_raises():
+    snaps, values, max_edges = _trace(churn=0.3)
+    tiny = stream_encoder.DeltaStats(max_edges=max_edges, max_drops=1,
+                                     max_adds=1)
+    with pytest.raises(stream_encoder.ChurnOverflowError,
+                       match="exceeds stats pad"):
+        stream_encoder.encode_stream_fast(snaps, values, N, max_edges, BS,
+                                          tiny, on_overflow="raise")
+
+
 def test_prefetch_iterator_preserves_order_and_propagates_errors():
     items = list(range(20))
     out = list(PrefetchIterator(iter(items), stage_fn=lambda x: x * 2,
@@ -114,6 +149,112 @@ def test_prefetch_iterator_close_unblocks_abandoned_worker():
     assert not it._thread.is_alive()
     with pytest.raises(StopIteration):
         next(it)
+
+
+def test_prefetch_worker_exception_before_first_next():
+    """An encoder that dies immediately re-raises on the FIRST __next__
+    (not a hang, not a swallowed error)."""
+    def dead():
+        raise RuntimeError("dead on arrival")
+        yield  # pragma: no cover
+
+    it = PrefetchIterator(dead(), stage_fn=lambda x: x, depth=2)
+    with pytest.raises(RuntimeError, match="dead on arrival"):
+        next(it)
+    with pytest.raises(StopIteration):
+        next(it)
+
+
+def test_prefetch_stage_fn_exception_propagates():
+    """Errors raised while STAGING (device_put path) surface like encoder
+    errors: re-raised at the consumer, then terminated."""
+    def boom(x):
+        if x == 3:
+            raise ValueError("stage failed")
+        return x
+
+    it = PrefetchIterator(iter(range(10)), stage_fn=boom, depth=2)
+    got = [next(it), next(it), next(it)]
+    assert got == [0, 1, 2]
+    with pytest.raises(ValueError, match="stage failed"):
+        list(it)
+
+
+def test_prefetch_close_releases_staged_buffers_and_is_idempotent():
+    """close() during backpressure drains every staged item (releasing the
+    buffers), retires the worker, and is safe to call repeatedly /
+    via the context-manager protocol."""
+    import itertools
+    staged: list[int] = []
+
+    def stage(x):
+        staged.append(x)
+        return x
+
+    it = PrefetchIterator(itertools.count(), stage_fn=stage, depth=3)
+    assert next(it) == 0
+    it.close()
+    it.close()                      # idempotent
+    assert not it._thread.is_alive()
+    assert it._q.qsize() == 0       # staged buffers dropped
+    assert len(staged) >= 1         # worker really was ahead of us
+    with pytest.raises(StopIteration):
+        next(it)
+    # context-manager form retires the worker on exit too
+    with PrefetchIterator(itertools.count(), stage_fn=lambda x: x,
+                          depth=2) as cm:
+        assert next(cm) == 0
+    assert not cm._thread.is_alive()
+
+
+@pytest.mark.parametrize("donate", [True, False])
+def test_delta_applier_multi_shard_ring(donate):
+    """One donated edge-buffer ring per device shard, consumed interleaved
+    (the distributed trainer's schedule): every shard's ring reproduces
+    its own stream's decode exactly — rings never cross-contaminate."""
+    from repro.dist import sharding as shardlib
+    from repro.launch.mesh import make_host_mesh
+    num_shards = 4
+    mesh = make_host_mesh(data=num_shards, model=1)
+    devices = shardlib.shard_devices(mesh, "data")
+    snaps, values, max_edges = _trace()
+    shard_streams = stream_sharded.encode_time_sliced(
+        snaps, values, N, max_edges, BS, num_shards)
+    want = [graphdiff.decode_stream(s, max_edges) for s in shard_streams]
+    appliers = [DeltaApplier(max_edges, donate=donate, device=d)
+                for d in devices]
+    steps = len(shard_streams[0])
+    for j in range(steps):
+        outs = []
+        for s in range(num_shards):
+            item = stage_item(shard_streams[s][j], devices[s])
+            e, m, _ = appliers[s].consume(item)
+            outs.append((e, m))
+        for s, (e, m) in enumerate(outs):
+            assert list(e.devices()) == [devices[s]]
+            we, wm = want[s][j]
+            assert np.array_equal(np.asarray(e), we)
+            assert np.array_equal(np.asarray(m), wm)
+
+
+def test_slot_stacker_copies_survive_ring_donation():
+    """SlotStacker.put must copy the ring buffers BEFORE the next consume
+    donates them: after filling all slots, the block equals the decoded
+    per-step sequence."""
+    from repro.stream.prefetch import SlotStacker
+    snaps, values, max_edges = _trace()
+    stream = stream_encoder.encode_stream_fast(snaps, values, N, max_edges,
+                                               BS)
+    want = graphdiff.decode_stream(stream, max_edges)
+    applier = DeltaApplier(max_edges)
+    stacker = SlotStacker(len(stream))
+    for j, item in enumerate(stream):
+        e, m, v = applier.consume(stage_item(item))
+        stacker.put(j, e, m, v)
+    e_blk, m_blk, _ = stacker.arrays()
+    for j, (we, wm) in enumerate(want):
+        assert np.array_equal(np.asarray(e_blk[j]), we)
+        assert np.array_equal(np.asarray(m_blk[j]), wm)
 
 
 def test_delta_applier_reconstructs_stream():
