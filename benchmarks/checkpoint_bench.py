@@ -13,13 +13,20 @@ import numpy as np
 from benchmarks.common import record, time_fn
 from repro.core import checkpoint as ckpt_exec
 from repro.core import models
-from repro.data.dyngnn import DTDGPipeline, synthetic_dataset
+from repro.run import Engine, ExecutionPlan, RunConfig, SyntheticTrace
 
 
 def run(model: str = "tmgcn", n: int = 512, t: int = 32) -> None:
-    ds = synthetic_dataset(n, t, density=3.0, churn=0.1,
-                           smoothing_mode="none", seed=0)
-    pipe = DTDGPipeline(ds, nb=1)
+    # data + pipeline resolved through the Engine (the nb sweep below
+    # varies the blocking of the SAME device batch, so resolve once)
+    resolved = Engine(RunConfig(
+        model=models.DynGNNConfig(model=model, num_nodes=n, num_steps=t,
+                                  window=3, checkpoint_blocks=1),
+        data=SyntheticTrace(num_nodes=n, num_steps=t, density=3.0,
+                            churn=0.1, smoothing_mode="none", seed=0),
+        plan=ExecutionPlan(mode="eager", num_steps=1),
+        log_fn=lambda _msg: None)).resolve()
+    ds, pipe = resolved.ds, resolved.pipeline
     labels = jnp.asarray(ds.labels)
     num_edges = int(np.mean([s.shape[0] for s in ds.snapshots]))
     for nb in (1, 2, 4, 8):

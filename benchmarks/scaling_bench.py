@@ -21,11 +21,13 @@ import numpy as np
 
 from benchmarks.common import record, time_fn
 from repro.core import models
-from repro.data.dyngnn import DTDGPipeline, synthetic_dataset
+from repro.data.dyngnn import synthetic_dataset
 from repro.dist import comm_volume as cv
 from repro.launch.mesh import make_host_mesh
 from repro.optim import adamw
-from repro.train import trainer
+from repro.run import Engine, ExecutionPlan, InMemoryDTDG, RunConfig
+
+_SILENT = lambda _msg: None  # noqa: E731  — benchmark output is CSV rows
 
 GPU_FLOPS = 14e12           # V100 fp32
 PCIE_BW = 12e9              # CPU->GPU
@@ -59,27 +61,38 @@ def modeled_strong_scaling(model: str = "tmgcn", n: int = 1_000_000,
                f"xfer={t_xfer:.3f} comm={t_comm:.3f}")
 
 
-def measured_strong_scaling(model: str = "tmgcn") -> None:
+def measured_strong_scaling(model: str = "tmgcn",
+                            steps_per_fit: int = 16) -> None:
+    """Engine.fit() wall-time per step as the mesh grows 1 -> n_dev.
+
+    Repeated ``fit()`` calls on one Engine reuse the compiled shard_map
+    step (``ResolvedRun.cache``), so warmup pays the trace/compile.
+    Each timed fit still re-runs the (P-independent) per-run setup —
+    param/optimizer init, blocked-array reshapes — so ``steps_per_fit``
+    is sized to amortize that overhead below the per-step signal.
+    """
     n_dev = len(jax.devices())
     n, t = 256, 16
     smooth = {"tmgcn": "mproduct", "cdgcn": "none",
               "evolvegcn": "edgelife"}[model]
     ds = synthetic_dataset(n, t, density=3.0, churn=0.1,
                            smoothing_mode=smooth, seed=0)
-    pipe = DTDGPipeline(ds, nb=2)
     cfg = models.DynGNNConfig(model=model, num_nodes=n, num_steps=t,
                               window=3, checkpoint_blocks=2)
     opt_cfg = adamw.AdamWConfig(lr=1e-2, total_steps=100)
-    frames, edges, ew, labels = pipe.blocked_arrays()
-    params = models.init_params(jax.random.PRNGKey(0), cfg)
-    opt_state = adamw.init_state(params)
     base = None
     p = 1
     while p <= n_dev:
-        mesh = make_host_mesh(data=p, model=1)
-        step = trainer.make_dyngnn_train_step(cfg, mesh, opt_cfg)
-        us = time_fn(step, params, opt_state, frames, edges, ew, labels,
-                     warmup=2, iters=3)
+        # inject the mesh so P=1 also runs the shard_map step (comparable
+        # code path at every P, as before)
+        engine = Engine(RunConfig(
+            model=cfg, data=InMemoryDTDG(ds),
+            plan=ExecutionPlan(mode="eager",
+                               mesh=make_host_mesh(data=p, model=1),
+                               num_steps=steps_per_fit),
+            optimizer=opt_cfg, log_fn=_SILENT))
+        us = time_fn(lambda: engine.fit().losses[-1],
+                     warmup=2, iters=3) / steps_per_fit
         if base is None:
             base = us
         record(f"strong_scaling_measured/{model}/P{p}", us,
@@ -105,9 +118,7 @@ def streamed_scaling(model: str = "tmgcn", n: int = 128, t0: int = 8,
         devices to run it.
     """
     from repro.core.graphdiff import FullSnapshot
-    from repro.stream import distributed as sdist
-    from repro.stream import encoder as enc
-    from repro.stream import sharded as ssh
+    from repro.data.dyngnn import DTDGPipeline
 
     n_dev = len(jax.devices())
     smooth = {"tmgcn": "mproduct", "cdgcn": "none",
@@ -119,9 +130,11 @@ def streamed_scaling(model: str = "tmgcn", n: int = 128, t0: int = 8,
         win = bsl0 * p
         ds = synthetic_dataset(n, t, density=3.0, churn=0.1,
                                smoothing_mode=smooth, seed=0)
-        max_edges = enc.padded_max_edges(ds.snapshots)
-        streams = ssh.encode_time_sliced(ds.snapshots, ds.values, n,
-                                         max_edges, win, p)
+        # ONE stream set serves both the byte report and the timed Engine
+        # run below (the pipeline is what the Engine resolves, so the
+        # reported bytes are exactly what the timed run transfers)
+        pipe = DTDGPipeline(ds, nb=t // win)
+        streams = pipe.sharded_streams(p)
         per_dev = [sum(i.payload_bytes for i in s) for s in streams]
         mean_b = float(np.mean(per_dev))
         if base_per_dev is None:
@@ -147,26 +160,23 @@ def streamed_scaling(model: str = "tmgcn", n: int = 128, t0: int = 8,
                f"bound={2 * layers * n * feat * 4} "
                f"total_fixed={cv.snapshot_partition_volume(t, n, feat, layers, p) * 4 / max(t, 1):.0f}")
         if p <= n_dev:
-            mesh = make_host_mesh(data=p, model=1)
             cfg = models.DynGNNConfig(model=model, num_nodes=n,
                                       num_steps=t, window=3,
                                       checkpoint_blocks=t // win)
-            frames = np.asarray(ds.frames)
-            labels = np.asarray(ds.labels)
-            # compiled step + encoded streams hoisted OUT of the timed
-            # region: warmup compiles once, timed iterations measure the
-            # stream->reconstruct->shard_map round itself
+            # the Engine hoists the compiled step + encoded shard streams
+            # into ResolvedRun.cache: warmup compiles/encodes once, timed
+            # iterations measure the stream->reconstruct->shard_map round
             opt_cfg = adamw.AdamWConfig(lr=1e-2, total_steps=100)
-            step_fn = sdist.make_dist_stream_step(cfg, mesh, opt_cfg)
+            engine = Engine(RunConfig(
+                model=cfg, data=InMemoryDTDG(ds, pipeline=pipe),
+                plan=ExecutionPlan(mode="streamed_mesh", shards=p,
+                                   num_epochs=1),
+                optimizer=opt_cfg, log_fn=_SILENT))
+            # seed the cache with the streams reported above (no re-encode)
+            engine.resolve().cache["shard_streams"] = streams
 
-            def one_epoch():
-                return sdist.train_distributed_streamed(
-                    cfg, ds.snapshots, ds.values, frames, labels,
-                    mesh=mesh, num_epochs=1, opt_cfg=opt_cfg,
-                    step_fn=step_fn, shard_streams=streams,
-                    max_edges=max_edges).losses[-1]
-
-            us = time_fn(one_epoch, warmup=1, iters=2)
+            us = time_fn(lambda: engine.fit().losses[-1],
+                         warmup=1, iters=2)
             record(f"streamed_scaling/{model}/P{p}/epoch_wall",
                    us, f"rounds={t // win} us_per_round={us / (t // win):.0f}")
 

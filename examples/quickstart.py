@@ -1,38 +1,40 @@
-"""Quickstart: train a TM-GCN dynamic GNN on a synthetic evolving graph.
+"""Quickstart: train a TM-GCN dynamic GNN on a synthetic evolving graph
+through the declarative ``repro.run`` Engine API.
 
 Runs in ~30 s on CPU:
   python examples/quickstart.py
 """
 
-import jax
-
 from repro.core import models
-from repro.data.dyngnn import DTDGPipeline, synthetic_dataset
-from repro.train import trainer
+from repro.run import Engine, ExecutionPlan, RunConfig, SyntheticTrace
 
 
 def main() -> None:
-    # 1. Data: an evolving graph, smoothed with the M-transform (paper §5.4)
-    ds = synthetic_dataset(num_nodes=128, num_steps=16, density=3.0,
-                           churn=0.1, smoothing_mode="mproduct", window=3)
-    pipeline = DTDGPipeline(ds, nb=2)        # 2 gradient-checkpoint blocks
-    rep = pipeline.transfer_bytes()
-    print(f"graph-difference transfer: {rep['graph_diff']:,} bytes "
-          f"vs naive {rep['naive']:,} ({1 / rep['ratio']:.2f}x less)")
-
-    # 2. Model: 2-layer GCN + M-product (TM-GCN), feature widths per paper
+    # 1. Model: 2-layer GCN + M-product (TM-GCN), feature widths per paper
     cfg = models.DynGNNConfig(model="tmgcn", num_nodes=128, num_steps=16,
                               feat_in=2, hidden=6, out_dim=6, window=3,
                               checkpoint_blocks=2)
 
-    # 3. Train (single device here; pass a mesh for snapshot partitioning)
-    state, losses = trainer.train_dyngnn(cfg, pipeline, num_steps=60,
-                                         log_every=10)
-    print(f"loss: {losses[0]:.4f} -> {losses[-1]:.4f}")
+    # 2. One declarative run: data spec (an evolving graph, smoothed with
+    #    the M-transform, paper §5.4) + execution plan (eager schedule,
+    #    single device here; shards=P for snapshot partitioning)
+    run = RunConfig(
+        model=cfg,
+        data=SyntheticTrace(num_nodes=128, num_steps=16, density=3.0,
+                            churn=0.1, smoothing_mode="mproduct", window=3),
+        plan=ExecutionPlan(mode="eager", num_steps=60),
+        seed=0)
+
+    # 3. Train
+    engine = Engine(run)
+    result = engine.fit()
+    rep = result.transfer_report
+    print(f"graph-difference transfer: {rep['graph_diff']:,} bytes "
+          f"vs naive {rep['naive']:,} ({1 / rep['ratio']:.2f}x less)")
+    print(f"loss: {result.losses[0]:.4f} -> {result.losses[-1]:.4f}")
 
     # 4. Evaluate link prediction on the held-out last snapshot (§6.4)
-    acc = trainer.evaluate_link_prediction(cfg, state.params, pipeline,
-                                           ds.snapshots[-1])
+    acc = engine.evaluate(result)
     print(f"link-prediction accuracy: {acc:.3f}")
 
 

@@ -1,17 +1,22 @@
 """End-to-end distributed training driver (the paper's full stack).
 
-Uses every production component: synthetic DTDG + smoothing, graph-diff
-transfer accounting, snapshot partitioning over a device mesh (shard_map
-all-to-alls), blocked gradient checkpointing, AdamW, async checkpointing,
-preemption guard, straggler watchdog — then link-prediction eval.
+One ``RunConfig`` per schedule drives every production component:
+synthetic DTDG + smoothing, graph-diff transfer accounting, snapshot
+partitioning over a device mesh (shard_map all-to-alls), blocked
+gradient checkpointing, AdamW, async checkpointing, preemption guard,
+straggler watchdog — then link-prediction eval; and the same mesh again
+ONLINE, with per-shard time-slice delta streams feeding per-device
+edge-buffer rings under the snapshot-parallel shard_map.
 
 On this host it runs over the available CPU devices:
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       python examples/train_dyngnn_distributed.py
-On a pod, the same code runs with mesh = make_production_mesh().
+On a pod, the same code runs with plan.mesh = make_production_mesh().
 """
 
 import os
+import shutil
+import tempfile
 
 if "XLA_FLAGS" not in os.environ:
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -19,47 +24,55 @@ if "XLA_FLAGS" not in os.environ:
 import jax
 
 from repro.core import models
-from repro.data.dyngnn import DTDGPipeline, synthetic_dataset
-from repro.launch.mesh import make_host_mesh
 from repro.optim import adamw
-from repro.train import trainer
+from repro.run import (CheckpointSpec, Engine, ExecutionPlan, RunConfig,
+                       SyntheticTrace)
 
 
 def main() -> None:
     n_dev = len(jax.devices())
     p = max(d for d in (1, 2, 4, 8) if d <= n_dev)
-    mesh = make_host_mesh(data=p, model=1)
-    print(f"mesh: {dict(mesh.shape)}")
 
     t, n = 32, 512
-    ds = synthetic_dataset(n, t, density=3.0, churn=0.1,
-                           smoothing_mode="mproduct", window=5, seed=0)
-    pipeline = DTDGPipeline(ds, nb=4)
-    rep = pipeline.transfer_bytes()
-    print(f"host->device transfer with graph-diff: "
-          f"{1 / rep['ratio']:.2f}x reduction")
-
     cfg = models.DynGNNConfig(model="tmgcn", num_nodes=n, num_steps=t,
                               feat_in=2, hidden=6, out_dim=6, window=5,
                               checkpoint_blocks=4)
-    opt_cfg = adamw.AdamWConfig(lr=5e-3, warmup_steps=20, total_steps=300,
-                                weight_decay=0.0)
-    state, losses = trainer.train_dyngnn(
-        cfg, pipeline, mesh=mesh, num_steps=300, opt_cfg=opt_cfg,
-        ckpt_dir="/tmp/repro_dyngnn_ckpt", ckpt_every=100, log_every=25)
-    print(f"trained {state.step} steps; loss {losses[0]:.4f} -> "
-          f"{losses[-1]:.4f}")
-    acc = trainer.evaluate_link_prediction(cfg, state.params, pipeline,
-                                           ds.snapshots[-1])
+    data = SyntheticTrace(num_nodes=n, num_steps=t, density=3.0, churn=0.1,
+                          smoothing_mode="mproduct", window=5, seed=0)
+
+    # OFFLINE: blocked trainer under the snapshot-partition shard_map
+    # (fresh checkpoint dir: a stale one from a previous run would resume
+    # past num_steps and leave nothing to train)
+    ckpt_dir = tempfile.mkdtemp(prefix="repro_dyngnn_ckpt_")
+    engine = Engine(RunConfig(
+        model=cfg, data=data,
+        plan=ExecutionPlan(mode="eager", shards=p, num_steps=300),
+        optimizer=adamw.AdamWConfig(lr=5e-3, warmup_steps=20,
+                                    total_steps=300, weight_decay=0.0),
+        checkpoint=CheckpointSpec(ckpt_dir, every=100),
+        log_every=25))
+    mesh = engine.resolve().mesh
+    print(f"mesh: {dict(mesh.shape) if mesh is not None else 'single device'}")
+    rep = engine.resolve().pipeline.transfer_bytes()
+    print(f"host->device transfer with graph-diff: "
+          f"{1 / rep['ratio']:.2f}x reduction")
+    result = engine.fit()
+    print(f"trained {result.state.step} steps; loss "
+          f"{result.losses[0]:.4f} -> {result.losses[-1]:.4f}")
+    acc = engine.evaluate(result)
     print(f"link-prediction accuracy: {acc:.3f}")
 
     # Same mesh, ONLINE: per-shard time-slice delta streams feed per-device
     # edge-buffer rings; each checkpoint block trains one snapshot-parallel
     # shard_map round while the next block's deltas prefetch.
-    s_state, s_losses = trainer.train_dyngnn_streamed(
-        cfg, pipeline, num_epochs=2, mesh=mesh, log_every=4)
-    print(f"streamed {s_state.step} block rounds on {p} shards; "
-          f"loss {s_losses[0]:.4f} -> {s_losses[-1]:.4f}")
+    streamed = Engine(RunConfig(
+        model=cfg, data=data,
+        plan=ExecutionPlan(mode="streamed_mesh", shards=p, num_epochs=2),
+        log_every=4))
+    s_result = streamed.fit()
+    print(f"streamed {s_result.state.step} block rounds on {p} shards; "
+          f"loss {s_result.losses[0]:.4f} -> {s_result.losses[-1]:.4f}")
+    shutil.rmtree(ckpt_dir, ignore_errors=True)
 
 
 if __name__ == "__main__":

@@ -47,3 +47,10 @@ for _model in ("tmgcn", "cdgcn", "evolvegcn"):
     _mc, _ms = _mk(_model)
     register(ArchSpec(arch_id=_model, family="dyngnn", make_config=_mc,
                       make_smoke_config=_ms, shapes=_shapes()))
+
+# canonical alias for the paper's workload (the CI end-to-end job and the
+# README drive `--arch paper_dyngnn`); TM-GCN is the paper's headline model
+_mc, _ms = _mk("tmgcn")
+register(ArchSpec(arch_id="paper_dyngnn", family="dyngnn", make_config=_mc,
+                  make_smoke_config=_ms, shapes=_shapes(),
+                  notes="alias of tmgcn (paper headline config)"))

@@ -38,21 +38,24 @@ class DTDGDataset:
         return len(self.snapshots)
 
 
-def synthetic_dataset(num_nodes: int, num_steps: int, density: float = 3.0,
-                      churn: float = 0.1, smoothing_mode: str = "none",
-                      window: int = 5, edge_life: int = 5,
-                      seed: int = 0) -> DTDGDataset:
-    """Evolving synthetic DTDG with degree features and synthetic labels.
+def dataset_from_snapshots(snaps: list[np.ndarray], num_nodes: int,
+                           smoothing_mode: str = "none", window: int = 5,
+                           edge_life: int = 5) -> DTDGDataset:
+    """Raw snapshot edge lists -> device-ready DTDG dataset.
+
+    The one post-processing path (smoothing §5.4 -> degree features ->
+    synthetic labels) shared by the synthetic generator and the file
+    loaders (``repro.run.data.EdgeListDTDG``).
 
     smoothing_mode: none (CD-GCN) | mproduct (TM-GCN) | edgelife (EvolveGCN).
     """
-    snaps = generate.evolving_dynamic_graph(num_nodes, num_steps, density,
-                                            churn, seed)
     values = None
     if smoothing_mode == "mproduct":
         snaps, values = smoothing.m_transform_sparse(snaps, window)
     elif smoothing_mode == "edgelife":
         snaps, values = smoothing.edge_life(snaps, edge_life)
+    elif smoothing_mode != "none":
+        raise ValueError(f"unknown smoothing_mode {smoothing_mode!r}")
     frames = np.stack([generate.degree_features(s, num_nodes)
                        for s in snaps])
     # synthetic-but-learnable labels: high in-degree (above median) = class 1
@@ -60,6 +63,18 @@ def synthetic_dataset(num_nodes: int, num_steps: int, density: float = 3.0,
     labels = (frames[:, :, 0] > med).astype(np.int32)
     return DTDGDataset(snapshots=snaps, values=values, frames=frames,
                        labels=labels, num_nodes=num_nodes)
+
+
+def synthetic_dataset(num_nodes: int, num_steps: int, density: float = 3.0,
+                      churn: float = 0.1, smoothing_mode: str = "none",
+                      window: int = 5, edge_life: int = 5,
+                      seed: int = 0) -> DTDGDataset:
+    """Evolving synthetic DTDG with degree features and synthetic labels."""
+    snaps = generate.evolving_dynamic_graph(num_nodes, num_steps, density,
+                                            churn, seed)
+    return dataset_from_snapshots(snaps, num_nodes,
+                                  smoothing_mode=smoothing_mode,
+                                  window=window, edge_life=edge_life)
 
 
 class DTDGPipeline:

@@ -52,57 +52,64 @@ def main() -> None:
                                    d <= n_dev)
 
     if arch.family == "dyngnn":
-        from repro.core import models
-        from repro.data.dyngnn import DTDGPipeline, synthetic_dataset
-        from repro.train import trainer
+        from repro.run import (CheckpointSpec, Engine, ExecutionPlan,
+                               RunConfig, SyntheticTrace)
         cfg = (arch.make_config() if args.full_config
                else arch.make_smoke_config())
-        import dataclasses
-        n = cfg.num_nodes if cfg.num_nodes % dp == 0 else dp * 64
-        t = cfg.num_steps
-        cfg = dataclasses.replace(cfg, num_nodes=n)
         smooth = {"tmgcn": "mproduct", "evolvegcn": "edgelife",
                   "cdgcn": "none"}[cfg.model]
-        ds = synthetic_dataset(n, t, density=3.0, churn=0.1,
-                               smoothing_mode=smooth, window=cfg.window)
-        pipe = DTDGPipeline(ds, nb=cfg.checkpoint_blocks)
+        data = SyntheticTrace(num_nodes=cfg.num_nodes,
+                              num_steps=cfg.num_steps, density=3.0,
+                              churn=0.1, smoothing_mode=smooth,
+                              window=cfg.window)
         if args.stream:
-            s_mesh = None
-            if args.mesh > 1:
-                if n % args.mesh or pipe.bsize % args.mesh:
-                    raise SystemExit(
-                        f"--mesh {args.mesh} must divide num_nodes {n} "
-                        f"and block size {pipe.bsize}")
-                s_mesh = make_host_mesh(data=args.mesh, model=1)
-            state, losses = trainer.train_dyngnn_streamed(
-                cfg, pipe, num_epochs=args.epochs,
-                overlap=not args.no_overlap, mesh=s_mesh)
-            rep = pipe.transfer_bytes()
-            final = f"{losses[-1]:.4f}" if losses else "n/a"
-            if s_mesh is not None:
+            # non-divisible num_nodes auto-pads inside the plan (logged)
+            plan = ExecutionPlan(
+                mode="streamed_mesh" if args.mesh > 1 else "streamed",
+                shards=max(args.mesh, 1), num_epochs=args.epochs,
+                overlap=not args.no_overlap)
+            if args.ckpt_dir:
+                print("note: --ckpt-dir is ignored with --stream "
+                      "(checkpointing is wired for the eager schedule "
+                      "only)")
+            ckpt = None
+        else:
+            plan = ExecutionPlan(mode="eager", shards=dp,
+                                 num_steps=args.steps)
+            ckpt = (CheckpointSpec(args.ckpt_dir)
+                    if args.ckpt_dir else None)
+        engine = Engine(RunConfig(model=cfg, data=data, plan=plan,
+                                  checkpoint=ckpt))
+        try:
+            # surface plan/config contradictions (e.g. a trace length the
+            # shards cannot slice) as a one-line CLI error, not a traceback
+            engine.resolve()
+        except ValueError as e:
+            raise SystemExit(f"invalid run configuration: {e}") from None
+        result = engine.fit()
+        rep = result.transfer_report
+        if args.stream:
+            final = (f"{result.losses[-1]:.4f}" if result.losses else "n/a")
+            if plan.mode == "streamed_mesh":
                 # report what actually crossed the links: the per-shard
                 # time-sliced streams (extra slice-boundary fulls), not
                 # the single-device global stream
-                per_dev = [sum(i.payload_bytes for i in s)
-                           for s in pipe.sharded_streams(args.mesh)]
-                print(f"streamed {state.step} block rounds on "
+                per_dev = result.per_shard_bytes
+                print(f"streamed {result.state.step} block rounds on "
                       f"{args.mesh} shards, final loss {final}, "
                       f"per-device stream {max(per_dev)} B (total "
                       f"{sum(per_dev) / max(rep['naive'], 1):.3f} of "
                       "naive)")
             else:
-                print(f"streamed {state.step} snapshot steps, final loss "
-                      f"{final}, transfer ratio {rep['ratio']:.3f} "
-                      "vs naive")
+                print(f"streamed {result.state.step} snapshot steps, "
+                      f"final loss {final}, transfer ratio "
+                      f"{rep['ratio']:.3f} vs naive")
             return
-        mesh = make_host_mesh(data=dp, model=1) if dp > 1 else None
-        state, losses = trainer.train_dyngnn(
-            cfg, pipe, mesh=mesh, num_steps=args.steps,
-            ckpt_dir=args.ckpt_dir)
-        acc = trainer.evaluate_link_prediction(cfg, state.params, pipe,
-                                               ds.snapshots[-1])
-        print(f"done: {state.step} steps, final loss {losses[-1]:.4f}, "
-              f"link-pred acc {acc:.3f}")
+        acc = engine.evaluate(result)
+        # a checkpoint resume at/past --steps trains zero new steps
+        final = f"{result.losses[-1]:.4f}" if result.losses else "n/a"
+        print(f"done: {result.state.step} steps, final loss "
+              f"{final}, link-pred acc {acc:.3f}")
         return
 
     # LM / GNN / recsys: drive one cell's train step repeatedly

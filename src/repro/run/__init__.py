@@ -1,0 +1,35 @@
+"""``repro.run`` — the declarative training API.
+
+One composable surface over the paper's pipeline (graph-diff transfer ->
+snapshot-partitioned shard_map training):
+
+    from repro.run import (Engine, ExecutionPlan, RunConfig,
+                           SyntheticTrace)
+
+    run = RunConfig(
+        model=DynGNNConfig(model="tmgcn", num_nodes=128, num_steps=16),
+        data=SyntheticTrace(num_nodes=128, num_steps=16,
+                            smoothing_mode="mproduct", window=3),
+        plan=ExecutionPlan(mode="streamed", num_epochs=2),
+        seed=0)
+    result = Engine(run).fit()        # -> RunResult(state, losses, ...)
+
+The legacy entrypoints (``trainer.train_dyngnn`` /
+``trainer.train_dyngnn_streamed``) remain as deprecation shims that
+construct a ``RunConfig`` and call the Engine.
+"""
+
+from repro.run.config import (CheckpointSpec, ResolvedRun, RunConfig,
+                              RunResult)
+from repro.run.data import (DataSource, EdgeListDTDG, InMemoryDTDG,
+                            SyntheticTrace, pad_dataset, read_edgelist,
+                            write_edgelist)
+from repro.run.engine import Engine
+from repro.run.plan import ExecutionPlan
+
+__all__ = [
+    "CheckpointSpec", "DataSource", "EdgeListDTDG", "Engine",
+    "ExecutionPlan", "InMemoryDTDG", "ResolvedRun", "RunConfig",
+    "RunResult", "SyntheticTrace", "pad_dataset", "read_edgelist",
+    "write_edgelist",
+]

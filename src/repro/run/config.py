@@ -1,0 +1,96 @@
+"""Run configuration: the one declarative description of a training run.
+
+``RunConfig`` separates the three concerns the legacy entrypoints mixed
+into 10+ positional-and-keyword arguments:
+
+* ``model`` — the architecture config (``DynGNNConfig``).  Its
+  ``num_nodes`` / ``num_steps`` are resolved against the data source
+  (the data is authoritative; the plan may pad the vertex axis);
+* ``data``  — a :class:`repro.run.data.DataSource`;
+* ``plan``  — a :class:`repro.run.plan.ExecutionPlan`;
+
+plus the optimizer, checkpoint, logging, and — at last — the PRNG
+``seed`` that ``trainer.py`` used to hard-code as ``PRNGKey(0)``.
+
+``Engine.resolve()`` turns a ``RunConfig`` into a ``ResolvedRun``: the
+single bundle the private training workers consume instead of the old
+positional-array plumbing.  ``Engine.fit()`` returns a ``RunResult``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+from repro.core.models import DynGNNConfig
+from repro.data.dyngnn import DTDGDataset, DTDGPipeline
+from repro.optim.adamw import AdamWConfig
+from repro.run.data import DataSource
+from repro.run.plan import ExecutionPlan
+from repro.stream.encoder import StreamReport
+from repro.train.trainer import TrainState
+
+
+@dataclass(frozen=True)
+class CheckpointSpec:
+    """Where/how often to checkpoint (eager schedule only, for now)."""
+
+    directory: str
+    every: int = 50
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    model: DynGNNConfig
+    data: DataSource
+    plan: ExecutionPlan = ExecutionPlan()
+    optimizer: AdamWConfig | None = None      # None = schedule default
+    checkpoint: CheckpointSpec | None = None
+    seed: int = 0                             # param-init PRNG seed
+    log_every: int = 10
+    log_fn: Callable[[str], None] = print
+
+
+@dataclass
+class ResolvedRun:
+    """Everything a training worker needs, resolved once.
+
+    The workers (``repro.run.workers``) take exactly this bundle — no
+    re-plumbing of ``(snapshots, values, frames, labels, block_size,
+    stats, max_edges, ...)`` per entrypoint.  ``cache`` holds compiled
+    step functions and encoded shard streams so repeated ``fit()`` calls
+    (benchmark epochs) do not re-trace or re-encode.
+    """
+
+    config: RunConfig
+    cfg: DynGNNConfig               # model config w/ resolved N and T
+    ds: DTDGDataset
+    pipeline: DTDGPipeline
+    mesh: Any                       # None for single-device schedules
+    plan: ExecutionPlan
+    opt_cfg: AdamWConfig | None
+    seed: int
+    checkpoint: CheckpointSpec | None
+    log_every: int
+    log_fn: Callable[[str], None]
+    padded_from: int | None = None  # original num_nodes if auto-padded
+    cache: dict = field(default_factory=dict)
+
+
+@dataclass
+class RunResult:
+    """What ``Engine.fit()`` returns.
+
+    ``losses`` is the per-step (eager / streamed) or per-round
+    (streamed_mesh) loss stream; ``stream_report`` carries the encoder
+    health counters of the streamed schedule (None otherwise);
+    ``transfer_report`` is the graph-diff byte accounting
+    (``DTDGPipeline.transfer_bytes()``); ``per_shard_bytes`` the
+    per-device stream payloads of the streamed_mesh schedule.
+    """
+
+    state: TrainState
+    losses: list[float]
+    stream_report: StreamReport | None = None
+    transfer_report: dict | None = None
+    per_shard_bytes: list[int] | None = None

@@ -1,0 +1,239 @@
+"""Data sources: the *what* of a training run.
+
+A :class:`DataSource` yields a ``DTDGDataset`` — the Engine asks it to
+build (optionally at a padded ``num_nodes``, see
+``ExecutionPlan.padded_num_nodes``) and owns nothing else.  Three
+implementations cover the current workloads:
+
+* :class:`SyntheticTrace` — the evolving synthetic DTDG generator
+  (``repro.data.dyngnn.synthetic_dataset``) as a declarative spec;
+* :class:`EdgeListDTDG` — timestamped edge-list files (``.tsv`` /
+  ``.npz``) loaded into a ``DTDGDataset``: the on-ramp for the paper's
+  epinions/flickr/youtube traces, which ship in exactly this form;
+* :class:`InMemoryDTDG` — wrap an already-built dataset (and optionally
+  its pipeline) — what the legacy-entrypoint shims use.
+
+``write_edgelist`` is the matching writer, used by the round-trip tests
+and for exporting synthetic traces.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.data.dyngnn import (DTDGDataset, DTDGPipeline,
+                               dataset_from_snapshots, synthetic_dataset)
+
+
+@runtime_checkable
+class DataSource(Protocol):
+    """Anything that can build a ``DTDGDataset`` on demand.
+
+    ``num_nodes`` is the source's nominal vertex count (None when only
+    known after reading, e.g. an edge-list file); ``build(num_nodes=n)``
+    must honor an override >= the nominal count (vertex-axis padding).
+    """
+
+    num_nodes: int | None
+
+    def build(self, num_nodes: int | None = None) -> DTDGDataset:
+        ...
+
+
+def pad_dataset(ds: DTDGDataset, num_nodes: int) -> DTDGDataset:
+    """Append isolated vertices (zero features, class-0 labels) up to
+    ``num_nodes`` — the padding contract of ``ExecutionPlan``'s
+    vertex-axis auto-pad.  The edge lists (and therefore the trained
+    graph) are untouched."""
+    if num_nodes == ds.num_nodes:
+        return ds
+    if num_nodes < ds.num_nodes:
+        raise ValueError(f"cannot shrink dataset from {ds.num_nodes} to "
+                         f"{num_nodes} nodes")
+    t = ds.frames.shape[0]
+    extra = num_nodes - ds.num_nodes
+    frames = np.concatenate(
+        [ds.frames, np.zeros((t, extra, ds.frames.shape[2]),
+                             dtype=ds.frames.dtype)], axis=1)
+    labels = np.concatenate(
+        [ds.labels, np.zeros((t, extra), dtype=ds.labels.dtype)], axis=1)
+    return DTDGDataset(snapshots=ds.snapshots, values=ds.values,
+                       frames=frames, labels=labels, num_nodes=num_nodes)
+
+
+@dataclass(frozen=True)
+class SyntheticTrace:
+    """Spec for ``repro.data.dyngnn.synthetic_dataset``.
+
+    A ``num_nodes`` override pads the NOMINAL trace with isolated
+    vertices (same graph, same labels) — it never regenerates a
+    different random graph.
+    """
+
+    num_nodes: int
+    num_steps: int
+    density: float = 3.0
+    churn: float = 0.1
+    smoothing_mode: str = "none"    # none | mproduct | edgelife
+    window: int = 5
+    edge_life: int = 5
+    seed: int = 0
+
+    def build(self, num_nodes: int | None = None) -> DTDGDataset:
+        ds = synthetic_dataset(
+            self.num_nodes, self.num_steps, density=self.density,
+            churn=self.churn, smoothing_mode=self.smoothing_mode,
+            window=self.window, edge_life=self.edge_life, seed=self.seed)
+        if num_nodes is not None:
+            ds = pad_dataset(ds, num_nodes)
+        return ds
+
+
+@dataclass(frozen=True)
+class EdgeListDTDG:
+    """Timestamped edge-list loader: ``(src, dst, t)`` rows -> DTDG.
+
+    Formats (selected by extension):
+
+    * ``.npz`` — arrays ``src``, ``dst``, ``t`` (or one ``edges`` array
+      of shape (E, 3));
+    * anything else — whitespace/tab-separated text, one ``src dst t``
+      row per edge, ``#`` comments allowed.
+
+    Snapshot ``k`` holds the file-order edges with ``t == t_min + k``
+    (timestamps are treated as consecutive integer bins; empty bins make
+    empty snapshots).  Smoothing / features / labels are derived exactly
+    as for the synthetic traces (``dataset_from_snapshots``), so a
+    written-then-loaded trace trains bit-identically to its in-memory
+    original.
+    """
+
+    path: str
+    num_nodes: int | None = None
+    smoothing_mode: str = "none"
+    window: int = 5
+    edge_life: int = 5
+
+    def build(self, num_nodes: int | None = None) -> DTDGDataset:
+        snaps, n_seen = read_edgelist(self.path)
+        nominal = self.num_nodes or n_seen
+        if nominal < n_seen:
+            raise ValueError(f"num_nodes={nominal} but {self.path} "
+                             f"references node ids up to {n_seen - 1}")
+        # labels/features derive from the NOMINAL node count; a padding
+        # override appends isolated vertices afterwards so pad nodes can
+        # never shift the label median of the real ones
+        ds = dataset_from_snapshots(
+            snaps, nominal, smoothing_mode=self.smoothing_mode,
+            window=self.window, edge_life=self.edge_life)
+        if num_nodes is not None:
+            ds = pad_dataset(ds, num_nodes)
+        return ds
+
+
+@dataclass
+class InMemoryDTDG:
+    """Wrap an existing ``DTDGDataset`` (and optionally its pipeline).
+
+    Padding appends isolated vertices (zero features, class-0 labels);
+    the edge lists are untouched, so an unpadded build is the original
+    dataset object and any attached pipeline can be reused as-is.
+    """
+
+    ds: DTDGDataset
+    pipeline: DTDGPipeline | None = None
+
+    @property
+    def num_nodes(self) -> int:
+        return self.ds.num_nodes
+
+    def build(self, num_nodes: int | None = None) -> DTDGDataset:
+        if num_nodes is None:
+            return self.ds
+        return pad_dataset(self.ds, num_nodes)
+
+
+# ------------------------------------------------ edge-list file I/O -------
+
+def _tsv_num_steps(path: Path) -> int | None:
+    """``num_steps=K`` from the header comment, if the file carries one."""
+    with open(path) as f:
+        first = f.readline()
+    if first.startswith("#"):
+        m = re.search(r"num_steps=(\d+)", first)
+        if m:
+            return int(m.group(1))
+    return None
+
+
+def read_edgelist(path: str | Path) -> tuple[list[np.ndarray], int]:
+    """(snapshots, min num_nodes) from a timestamped edge-list file.
+
+    Files written by ``write_edgelist`` carry a ``num_steps`` marker
+    (npz key / tsv header comment) so that empty snapshots — including
+    leading/trailing ones — round-trip exactly.  External files without
+    the marker are binned over ``[t.min(), t.max()]``: empty bins inside
+    that span become empty snapshots, but empty bins outside it are
+    unknowable and dropped.
+    """
+    path = Path(path)
+    num_steps = None
+    if path.suffix == ".npz":
+        with np.load(path) as z:
+            if "edges" in z:
+                rows = np.asarray(z["edges"], dtype=np.int64)
+                src, dst, t = rows[:, 0], rows[:, 1], rows[:, 2]
+            else:
+                src = np.asarray(z["src"], dtype=np.int64)
+                dst = np.asarray(z["dst"], dtype=np.int64)
+                t = np.asarray(z["t"], dtype=np.int64)
+            if "num_steps" in z:
+                num_steps = int(z["num_steps"])
+    else:
+        rows = np.loadtxt(path, dtype=np.int64, comments="#", ndmin=2)
+        if rows.shape[1] != 3:
+            raise ValueError(f"{path}: expected 'src dst t' rows, got "
+                             f"{rows.shape[1]} columns")
+        src, dst, t = rows[:, 0], rows[:, 1], rows[:, 2]
+        num_steps = _tsv_num_steps(path)
+    if src.shape[0] == 0:
+        raise ValueError(f"{path}: empty edge list")
+    if src.min() < 0 or dst.min() < 0:
+        raise ValueError(f"{path}: negative node ids")
+    edges = np.stack([src, dst], axis=1).astype(np.int32)
+    if num_steps is not None:
+        if t.min() < 0 or t.max() >= num_steps:
+            raise ValueError(f"{path}: timestamps outside the declared "
+                             f"num_steps={num_steps}")
+        bins = range(0, num_steps)
+    else:
+        bins = range(int(t.min()), int(t.max()) + 1)
+    snaps = [edges[t == v] for v in bins]
+    return snaps, int(max(src.max(), dst.max())) + 1
+
+
+def write_edgelist(path: str | Path,
+                   snapshots: list[np.ndarray]) -> None:
+    """Write snapshots as a timestamped edge list (exact inverse of
+    ``read_edgelist`` up to the edge dtype: a ``num_steps`` marker keeps
+    empty snapshots, snapshot k is stamped ``t=k`` in row order)."""
+    path = Path(path)
+    num_steps = len(snapshots)
+    src = np.concatenate([np.asarray(s[:, 0], dtype=np.int64)
+                          for s in snapshots])
+    dst = np.concatenate([np.asarray(s[:, 1], dtype=np.int64)
+                          for s in snapshots])
+    t = np.concatenate([np.full((s.shape[0],), i, dtype=np.int64)
+                        for i, s in enumerate(snapshots)])
+    if path.suffix == ".npz":
+        np.savez(path, src=src, dst=dst, t=t,
+                 num_steps=np.int64(num_steps))
+        return
+    rows = np.stack([src, dst, t], axis=1)
+    np.savetxt(path, rows, fmt="%d", delimiter="\t",
+               header=f"src\tdst\tt\tnum_steps={num_steps}")

@@ -1,0 +1,127 @@
+"""The Engine: one way to train.
+
+``Engine(RunConfig).fit()`` replaces the four diverging entrypoints
+(``trainer.train_dyngnn``, ``trainer.train_dyngnn_streamed``,
+``stream.train_loop.train_streamed``,
+``stream.distributed.train_distributed_streamed``):
+
+    run = RunConfig(model=cfg,
+                    data=SyntheticTrace(num_nodes=128, num_steps=16),
+                    plan=ExecutionPlan(mode="streamed_mesh", shards=4))
+    result = Engine(run).fit()       # -> RunResult
+
+``resolve()`` is the one place mesh construction, vertex-axis padding,
+timeline re-blocking, and pipeline building happen; ``fit()`` dispatches
+the resolved bundle to the private workers; ``evaluate()`` runs the
+paper's link-prediction protocol on the trained params; ``resume()`` is
+an explicit restart from the configured checkpoint.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.data.dyngnn import DTDGPipeline
+from repro.run import workers
+from repro.run.config import ResolvedRun, RunConfig, RunResult
+from repro.run.data import pad_dataset
+from repro.train.trainer import TrainState
+
+
+class Engine:
+    """Declarative training driver for the dynamic-GNN workload."""
+
+    def __init__(self, config: RunConfig):
+        config.plan.validate()
+        self.config = config
+        self._resolved: ResolvedRun | None = None
+        self._last: RunResult | None = None
+
+    # ------------------------------------------------------ resolve -------
+
+    def resolve(self) -> ResolvedRun:
+        """Build (once) the bundle the workers consume."""
+        if self._resolved is not None:
+            return self._resolved
+        c = self.config
+        plan = c.plan
+        if c.checkpoint is not None and plan.mode != "eager":
+            raise ValueError(
+                "RunConfig.checkpoint is only wired for plan.mode='eager' "
+                f"(got {plan.mode!r}); the streamed schedules do not "
+                "checkpoint yet — drop the CheckpointSpec or switch modes")
+
+        nominal = c.data.num_nodes
+        ds = None
+        if nominal is None:               # e.g. edge-list file: read to learn
+            ds = c.data.build()
+            nominal = ds.num_nodes
+        n = plan.padded_num_nodes(nominal, log_fn=c.log_fn)
+        if ds is None:
+            ds = c.data.build(num_nodes=n if n != nominal else None)
+        elif n != nominal:                # already built: pad, don't rebuild
+            ds = pad_dataset(ds, n)
+
+        nb = plan.resolved_blocks(ds.num_steps, c.model.checkpoint_blocks,
+                                  log_fn=c.log_fn)
+        cfg = c.model
+        if (cfg.num_nodes != ds.num_nodes or cfg.num_steps != ds.num_steps
+                or cfg.checkpoint_blocks != nb):
+            cfg = dataclasses.replace(cfg, num_nodes=ds.num_nodes,
+                                      num_steps=ds.num_steps,
+                                      checkpoint_blocks=nb)
+
+        pipe = getattr(c.data, "pipeline", None)
+        if pipe is None or pipe.ds is not ds or pipe.nb != nb:
+            pipe = DTDGPipeline(ds, nb=nb)
+
+        self._resolved = ResolvedRun(
+            config=c, cfg=cfg, ds=ds, pipeline=pipe,
+            mesh=plan.build_mesh(), plan=plan, opt_cfg=c.optimizer,
+            seed=c.seed, checkpoint=c.checkpoint, log_every=c.log_every,
+            log_fn=c.log_fn,
+            padded_from=nominal if n != nominal else None)
+        return self._resolved
+
+    # ---------------------------------------------------------- fit -------
+
+    def fit(self) -> RunResult:
+        rr = self.resolve()
+        worker = {"eager": workers.fit_eager,
+                  "streamed": workers.fit_streamed,
+                  "streamed_mesh": workers.fit_streamed_mesh}[rr.plan.mode]
+        self._last = worker(rr)
+        return self._last
+
+    def resume(self) -> RunResult:
+        """Explicit restart from the configured checkpoint directory."""
+        rr = self.resolve()
+        if rr.checkpoint is None:
+            raise ValueError("resume() needs RunConfig.checkpoint")
+        if rr.plan.mode != "eager":
+            raise NotImplementedError("checkpoint resume is only wired for "
+                                      "the eager schedule")
+        from repro.ckpt.checkpoint import Checkpointer
+        if Checkpointer(rr.checkpoint.directory).latest_step() is None:
+            raise FileNotFoundError(
+                f"no checkpoint under {rr.checkpoint.directory}")
+        return self.fit()
+
+    # ----------------------------------------------------- evaluate -------
+
+    def evaluate(self, state: TrainState | RunResult | None = None,
+                 test_snapshot=None, theta: float = 0.1,
+                 seed: int = 0) -> float:
+        """Link-prediction accuracy (paper §6.4) of trained params on the
+        held-out ``test_snapshot`` (default: the trace's last snapshot)."""
+        rr = self.resolve()
+        if state is None:
+            if self._last is None:
+                raise ValueError("evaluate() before fit(): pass a state")
+            state = self._last
+        if isinstance(state, RunResult):
+            state = state.state
+        snap = rr.ds.snapshots[-1] if test_snapshot is None else test_snapshot
+        from repro.train import trainer
+        return trainer.evaluate_link_prediction(
+            rr.cfg, state.params, rr.pipeline, snap, theta=theta, seed=seed)

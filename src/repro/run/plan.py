@@ -1,0 +1,133 @@
+"""Execution plans: the *how* of a training run.
+
+An :class:`ExecutionPlan` owns everything the fractured entrypoints used
+to hard-code in ``if args.stream / if mesh is not None`` branches:
+
+* the schedule — ``eager`` (blocked offline trainer), ``streamed``
+  (per-snapshot online training over the graph-diff delta stream), or
+  ``streamed_mesh`` (per-shard delta streams + snapshot-parallel
+  shard_map);
+* mesh construction (or injection of a prebuilt mesh);
+* the overlap/prefetch knobs of the streamed paths;
+* the divisibility rules of the distributed paths — instead of dying
+  with ``SystemExit`` the plan auto-pads ``num_nodes`` up to the next
+  multiple of the mesh and re-blocks the timeline
+  (``repro.ft.elastic.dyngnn_elastic_blocks``) when the checkpoint block
+  does not divide over the shards, logging both adjustments.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+MODES = ("eager", "streamed", "streamed_mesh")
+
+
+@dataclass(frozen=True)
+class ExecutionPlan:
+    """Declarative execution spec, independent of model and data.
+
+    ``shards`` is the snapshot-parallel width (data axis of the mesh);
+    ``mesh`` may inject a prebuilt mesh instead (``shards`` is then
+    ignored and read off the mesh).  ``num_steps`` drives the eager
+    schedule, ``num_epochs`` the streamed ones; ``overlap`` /
+    ``prefetch_depth`` control the transfer-compute overlap of the
+    stream subsystem and never change losses (pure schedule knobs).
+    """
+
+    mode: str = "eager"             # eager | streamed | streamed_mesh
+    shards: int = 1
+    mesh: Any = None                # optional prebuilt Mesh (tests/shims)
+    mesh_axis: str = "data"
+    num_steps: int = 100            # eager schedule length
+    num_epochs: int = 1             # streamed passes over the trace
+    overlap: bool = True
+    prefetch_depth: int = 2
+    auto_pad: bool = True
+
+    def validate(self) -> None:
+        if self.mode not in MODES:
+            raise ValueError(f"plan.mode must be one of {MODES}, "
+                             f"got {self.mode!r}")
+        if self.shards < 1:
+            raise ValueError(f"plan.shards must be >= 1, got {self.shards}")
+        if self.prefetch_depth < 1:
+            raise ValueError("plan.prefetch_depth must be >= 1")
+        if self.mode == "streamed" and (self.shards > 1
+                                        or self.mesh is not None):
+            raise ValueError("mode='streamed' is single-device; use "
+                             "mode='streamed_mesh' for snapshot-parallel "
+                             "streaming")
+
+    @property
+    def num_shards(self) -> int:
+        if self.mesh is not None:
+            return int(self.mesh.shape[self.mesh_axis])
+        return self.shards
+
+    @property
+    def wants_mesh(self) -> bool:
+        """True when this plan trains under a shard_map mesh."""
+        return (self.mode == "streamed_mesh"
+                or (self.mode == "eager" and self.num_shards > 1))
+
+    def build_mesh(self):
+        """The plan's mesh (prebuilt or constructed), or None."""
+        if self.mesh is not None:
+            return self.mesh
+        if not self.wants_mesh:
+            return None
+        from repro.launch.mesh import make_host_mesh
+        return make_host_mesh(data=self.num_shards, model=1)
+
+    # ---------------------------------------------- divisibility ----------
+
+    def padded_num_nodes(self, num_nodes: int,
+                         log_fn: Callable[[str], None] | None = None) -> int:
+        """``num_nodes`` rounded up to the next multiple of the mesh.
+
+        The vertex-sharded temporal stage needs N % P == 0; rather than
+        refusing to run (the old launcher raised ``SystemExit``) the plan
+        pads the vertex axis with isolated nodes and logs the padding.
+        """
+        p = self.num_shards
+        if not self.wants_mesh or num_nodes % p == 0:
+            return num_nodes
+        if not self.auto_pad:
+            raise ValueError(f"num_nodes {num_nodes} must divide over "
+                             f"{p} shards (set plan.auto_pad=True to pad)")
+        padded = ((num_nodes + p - 1) // p) * p
+        if log_fn is not None:
+            log_fn(f"plan: auto-padding num_nodes {num_nodes} -> {padded} "
+                   f"(next multiple of {p} shards)")
+        return padded
+
+    def resolved_blocks(self, num_steps: int, checkpoint_blocks: int,
+                        log_fn: Callable[[str], None] | None = None) -> int:
+        """Checkpoint-block count adjusted for the streamed mesh.
+
+        ``streamed_mesh`` needs ``bsize % P == 0`` and ``T % bsize == 0``
+        (each round is one block, sliced over the shards).  When the
+        requested blocking violates that, re-block via
+        ``repro.ft.elastic.dyngnn_elastic_blocks`` (largest legal block
+        <= the requested one) and log the adjustment.
+        """
+        if self.mode != "streamed_mesh":
+            return checkpoint_blocks
+        p = self.num_shards
+        nb = max(checkpoint_blocks, 1)
+        bsize = num_steps // nb
+        if bsize >= 1 and num_steps % bsize == 0 and bsize % p == 0:
+            return nb
+        if num_steps % p:
+            raise ValueError(
+                f"trace length {num_steps} cannot be sliced over {p} "
+                "snapshot shards (num_steps % shards != 0)")
+        from repro.ft.elastic import dyngnn_elastic_blocks
+        nb2, bsize2 = dyngnn_elastic_blocks(num_steps, p, max(bsize, p))
+        if log_fn is not None:
+            log_fn(f"plan: re-blocking timeline for {p} shards: "
+                   f"checkpoint_blocks {checkpoint_blocks} -> {nb2} "
+                   f"(block size {bsize2})")
+        return nb2

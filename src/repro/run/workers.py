@@ -1,0 +1,154 @@
+"""Private training workers behind ``Engine.fit()``.
+
+Each worker consumes one :class:`repro.run.config.ResolvedRun` bundle
+and drives the corresponding training loop:
+
+* ``fit_eager``         — the blocked offline trainer (single-device or
+  snapshot-partition shard_map), with async checkpointing, preemption
+  guard, and straggler timing — the loop that used to live inside
+  ``trainer.train_dyngnn``;
+* ``fit_streamed``      — per-snapshot online training over the
+  graph-diff delta stream (``repro.stream.train_loop``);
+* ``fit_streamed_mesh`` — per-shard delta streams + snapshot-parallel
+  shard_map (``repro.stream.distributed``).
+
+These are the ONLY call sites of the stream training loops outside the
+deprecation shims; everything user-facing goes through the Engine.
+Compiled steps and encoded shard streams are cached on the bundle so
+repeated ``fit()`` calls (benchmark epochs, resume) reuse them.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.ckpt.checkpoint import Checkpointer
+from repro.core import models as dyn_models
+from repro.ft.elastic import PreemptionGuard
+from repro.ft.straggler import StepTimer
+from repro.optim import adamw
+from repro.run.config import ResolvedRun, RunResult
+from repro.stream import distributed as stream_dist
+from repro.stream import encoder as stream_enc
+from repro.stream import train_loop as stream_train
+from repro.train import trainer
+
+
+def _init(rr: ResolvedRun):
+    params = dyn_models.init_params(jax.random.PRNGKey(rr.seed), rr.cfg)
+    return params, adamw.init_state(params)
+
+
+def fit_eager(rr: ResolvedRun) -> RunResult:
+    plan = rr.plan
+    num_steps = plan.num_steps
+    opt_cfg = rr.opt_cfg or adamw.AdamWConfig(
+        lr=1e-2, warmup_steps=10, total_steps=num_steps, weight_decay=0.0)
+    params, opt_state = _init(rr)
+    start_step = 0
+    ckpt = Checkpointer(rr.checkpoint.directory) if rr.checkpoint else None
+    if ckpt and ckpt.latest_step() is not None:
+        s = ckpt.latest_step()
+        (params, opt_state), extra = ckpt.restore(s, (params, opt_state))
+        start_step = extra.get("train_step", s)
+        rr.log_fn(f"resumed from checkpoint step {start_step}")
+
+    frames, edges, ew, labels = rr.pipeline.blocked_arrays()
+    step_fn = rr.cache.get("eager_step")
+    if rr.mesh is not None:
+        if step_fn is None:
+            step_fn = trainer.make_dyngnn_train_step(rr.cfg, rr.mesh,
+                                                     opt_cfg)
+            rr.cache["eager_step"] = step_fn
+        args = (frames, edges, ew, labels)
+    else:
+        if step_fn is None:
+            step_fn = trainer.make_single_device_train_step(rr.cfg, opt_cfg)
+            rr.cache["eager_step"] = step_fn
+        lab = labels.reshape((-1,) + labels.shape[2:])
+        args = (rr.pipeline.batch, lab)
+
+    timer = StepTimer()
+    losses: list[float] = []
+    with PreemptionGuard() as guard:
+        for step in range(start_step, num_steps):
+            with timer:
+                params, opt_state, loss = step_fn(params, opt_state, *args)
+            losses.append(float(loss))
+            if step % rr.log_every == 0:
+                rr.log_fn(f"step {step} loss {float(loss):.4f}")
+            if ckpt and (step + 1) % rr.checkpoint.every == 0:
+                ckpt.save(step + 1, (params, opt_state),
+                          extra={"train_step": step + 1})
+            if guard.preempted:
+                rr.log_fn(f"preempted at step {step}; checkpointing and "
+                          "exiting cleanly")
+                if ckpt:
+                    ckpt.save(step + 1, (params, opt_state),
+                              extra={"train_step": step + 1},
+                              blocking=True)
+                break
+    if ckpt:
+        ckpt.wait()
+    state = trainer.TrainState(
+        params=params, opt_state=opt_state,
+        step=min(num_steps, start_step + len(losses)))
+    return RunResult(state=state, losses=losses,
+                     transfer_report=rr.pipeline.transfer_bytes())
+
+
+def fit_streamed(rr: ResolvedRun) -> RunResult:
+    plan, ds, pipe = rr.plan, rr.ds, rr.pipeline
+    opt_cfg = rr.opt_cfg or adamw.AdamWConfig(
+        lr=1e-2, warmup_steps=10,
+        total_steps=plan.num_epochs * ds.num_steps, weight_decay=0.0)
+    params, opt_state = _init(rr)
+    step_fn = rr.cache.get("stream_step")
+    if step_fn is None:
+        step_fn = stream_train.make_stream_train_step(rr.cfg, opt_cfg)
+        rr.cache["stream_step"] = step_fn
+    report = stream_enc.StreamReport()
+    st = stream_train.train_streamed(
+        rr.cfg, ds.snapshots, ds.values, np.asarray(ds.frames),
+        np.asarray(ds.labels), block_size=pipe.bsize,
+        num_epochs=plan.num_epochs, overlap=plan.overlap,
+        prefetch_depth=plan.prefetch_depth, opt_cfg=opt_cfg,
+        params=params, opt_state=opt_state, stats=pipe.stream_stats,
+        max_edges=pipe.max_edges, report=report, step_fn=step_fn,
+        log_every=rr.log_every, log_fn=rr.log_fn)
+    state = trainer.TrainState(params=st.params, opt_state=st.opt_state,
+                               step=len(st.losses))
+    return RunResult(state=state, losses=st.losses, stream_report=report,
+                     transfer_report=pipe.transfer_bytes())
+
+
+def fit_streamed_mesh(rr: ResolvedRun) -> RunResult:
+    plan, ds, pipe = rr.plan, rr.ds, rr.pipeline
+    opt_cfg = rr.opt_cfg or adamw.AdamWConfig(
+        lr=1e-2, warmup_steps=10,
+        total_steps=plan.num_epochs * ds.num_steps, weight_decay=0.0)
+    params, opt_state = _init(rr)
+    step_fn = rr.cache.get("dist_step")
+    if step_fn is None:
+        step_fn = stream_dist.make_dist_stream_step(rr.cfg, rr.mesh,
+                                                    opt_cfg, plan.mesh_axis)
+        rr.cache["dist_step"] = step_fn
+    shard_streams = rr.cache.get("shard_streams")
+    if shard_streams is None:
+        shard_streams = pipe.sharded_streams(plan.num_shards)
+        rr.cache["shard_streams"] = shard_streams
+    st = stream_dist.train_distributed_streamed(
+        rr.cfg, ds.snapshots, ds.values, np.asarray(ds.frames),
+        np.asarray(ds.labels), mesh=rr.mesh, axis=plan.mesh_axis,
+        block_size=pipe.bsize, num_epochs=plan.num_epochs,
+        overlap=plan.overlap, prefetch_depth=plan.prefetch_depth,
+        opt_cfg=opt_cfg, params=params, opt_state=opt_state,
+        stats=pipe.stream_stats, max_edges=pipe.max_edges,
+        step_fn=step_fn, shard_streams=shard_streams,
+        log_every=rr.log_every, log_fn=rr.log_fn)
+    state = trainer.TrainState(params=st.params, opt_state=st.opt_state,
+                               step=len(st.losses))
+    return RunResult(state=state, losses=st.losses,
+                     transfer_report=pipe.transfer_bytes(),
+                     per_shard_bytes=st.per_shard_bytes)

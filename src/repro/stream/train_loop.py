@@ -151,10 +151,11 @@ def make_stream_slice_step(cfg: mdl.DynGNNConfig,
 
 def host_stream(snapshots, values, frames, labels, num_nodes: int,
                 max_edges: int, block_size: int,
-                stats: enc.DeltaStats | None = None):
+                stats: enc.DeltaStats | None = None,
+                report: enc.StreamReport | None = None):
     """Host iterator of (delta item, frame_t, labels_t) per step."""
     it = enc.iter_encode_stream(snapshots, values, num_nodes, max_edges,
-                                block_size, stats)
+                                block_size, stats, report=report)
     for t, item in enumerate(it):
         yield (item, np.asarray(frames[t]), np.asarray(labels[t]))
 
@@ -188,6 +189,8 @@ def train_streamed(cfg: mdl.DynGNNConfig, snapshots, values, frames,
                    stats: enc.DeltaStats | None = None,
                    max_edges: int | None = None,
                    slice_len: int | None = None,
+                   report: enc.StreamReport | None = None,
+                   step_fn=None,
                    log_every: int = 10,
                    log_fn=None) -> StreamTrainState:
     """Stream the trace through per-snapshot training.
@@ -202,6 +205,12 @@ def train_streamed(cfg: mdl.DynGNNConfig, snapshots, values, frames,
     reference semantics of the distributed streamed trainer, which shards
     exactly this slice over its mesh).  ``slice_len`` in (None, 1) keeps
     the per-snapshot schedule unchanged.
+
+    ``step_fn`` lets callers that invoke this in a loop (the Engine's
+    streamed worker, benchmark epochs) reuse one compiled step instead of
+    re-tracing per call; it must come from ``make_stream_train_step``
+    (or ``make_stream_slice_step`` when sliced) with matching
+    (cfg, opt_cfg).
     """
     t_steps = len(snapshots)
     block_size = block_size or max(t_steps // max(cfg.checkpoint_blocks, 1),
@@ -218,10 +227,11 @@ def train_streamed(cfg: mdl.DynGNNConfig, snapshots, values, frames,
     if opt_state is None:
         opt_state = adamw.init_state(params)
     sliced = slice_len is not None and slice_len > 1
-    step_fn = (make_stream_slice_step(cfg, opt_cfg) if sliced
-               else make_stream_train_step(cfg, opt_cfg))
+    if step_fn is None:
+        step_fn = (make_stream_slice_step(cfg, opt_cfg) if sliced
+                   else make_stream_train_step(cfg, opt_cfg))
     mk_host = partial(host_stream, snapshots, values, frames, labels,
-                      cfg.num_nodes, max_edges, block_size, stats)
+                      cfg.num_nodes, max_edges, block_size, stats, report)
     if sliced and t_steps % slice_len:
         raise ValueError(f"slice_len {slice_len} must divide the trace "
                          f"length {t_steps}")

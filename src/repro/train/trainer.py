@@ -1,17 +1,24 @@
 """Training driver for the paper's dynamic-GNN workload.
 
-Composes the full production stack:
-  data pipeline (graph-diff streaming) -> snapshot-partitioned, blocked-
-  checkpoint train step (shard_map) -> AdamW -> async checkpointing ->
-  preemption guard -> straggler watchdog.
+The declarative ``repro.run`` Engine API is now the one way to train:
 
-Single-host it runs on however many host devices exist (tests/examples);
-the identical code drives a pod — only the mesh changes.
+    from repro.run import Engine, ExecutionPlan, RunConfig, SyntheticTrace
+    result = Engine(RunConfig(model=cfg, data=..., plan=...)).fit()
+
+This module keeps three things:
+
+* the jitted train-step factories (``make_dyngnn_train_step`` /
+  ``make_single_device_train_step``) the Engine's eager worker compiles;
+* ``evaluate_link_prediction`` (paper §6.4), which ``Engine.evaluate``
+  wraps;
+* the legacy entrypoints ``train_dyngnn`` / ``train_dyngnn_streamed`` as
+  DEPRECATED shims: each constructs a ``RunConfig``, warns, and
+  delegates to the Engine.  See README "Migrating to repro.run".
 """
 
 from __future__ import annotations
 
-import dataclasses
+import warnings
 from dataclasses import dataclass
 from typing import Any, Callable
 
@@ -19,12 +26,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.ckpt.checkpoint import Checkpointer
 from repro.core import models as dyn_models
 from repro.core import partition
 from repro.data.dyngnn import DTDGPipeline
-from repro.ft.elastic import PreemptionGuard
-from repro.ft.straggler import StepTimer
 from repro.optim import adamw
 
 
@@ -66,60 +70,40 @@ def make_single_device_train_step(cfg: dyn_models.DynGNNConfig,
     return train_step
 
 
+# ------------------------------------------------- deprecated shims --------
+
+def _warn_deprecated(name: str) -> None:
+    warnings.warn(
+        f"{name}() is deprecated: build a repro.run.RunConfig and call "
+        "Engine.fit() instead (see README 'Migrating to repro.run')",
+        DeprecationWarning, stacklevel=3)
+
+
 def train_dyngnn(cfg: dyn_models.DynGNNConfig, pipeline: DTDGPipeline,
                  mesh=None, num_steps: int = 100,
                  opt_cfg: adamw.AdamWConfig | None = None,
                  ckpt_dir: str | None = None, ckpt_every: int = 50,
                  log_every: int = 10,
-                 log_fn: Callable[[str], None] = print) -> TrainState:
-    """Train; returns final state.  Resumes from ckpt_dir if one exists."""
-    opt_cfg = opt_cfg or adamw.AdamWConfig(
-        lr=1e-2, warmup_steps=10, total_steps=num_steps, weight_decay=0.0)
-    params = dyn_models.init_params(jax.random.PRNGKey(0), cfg)
-    opt_state = adamw.init_state(params)
-    start_step = 0
-    ckpt = Checkpointer(ckpt_dir) if ckpt_dir else None
-    if ckpt and ckpt.latest_step() is not None:
-        s = ckpt.latest_step()
-        (params, opt_state), extra = ckpt.restore(
-            s, (params, opt_state))
-        start_step = extra.get("train_step", s)
-        log_fn(f"resumed from checkpoint step {start_step}")
+                 log_fn: Callable[[str], None] = print
+                 ) -> tuple[TrainState, list[float]]:
+    """DEPRECATED eager entrypoint; use ``repro.run.Engine``.
 
-    nb = cfg.checkpoint_blocks
-    frames, edges, ew, labels = pipeline.blocked_arrays()
-    if mesh is not None:
-        step_fn = make_dyngnn_train_step(cfg, mesh, opt_cfg)
-        args = (frames, edges, ew, labels)
-    else:
-        step_fn = make_single_device_train_step(cfg, opt_cfg)
-        lab = labels.reshape((-1,) + labels.shape[2:])
-        args = (pipeline.batch, lab)
-
-    timer = StepTimer()
-    losses = []
-    with PreemptionGuard() as guard:
-        for step in range(start_step, num_steps):
-            with timer:
-                params, opt_state, loss = step_fn(params, opt_state, *args)
-            losses.append(float(loss))
-            if step % log_every == 0:
-                log_fn(f"step {step} loss {float(loss):.4f}")
-            if ckpt and (step + 1) % ckpt_every == 0:
-                ckpt.save(step + 1, (params, opt_state),
-                          extra={"train_step": step + 1})
-            if guard.preempted:
-                log_fn(f"preempted at step {step}; checkpointing and "
-                       "exiting cleanly")
-                if ckpt:
-                    ckpt.save(step + 1, (params, opt_state),
-                              extra={"train_step": step + 1},
-                              blocking=True)
-                break
-    if ckpt:
-        ckpt.wait()
-    return TrainState(params=params, opt_state=opt_state,
-                      step=min(num_steps, start_step + len(losses))), losses
+    Returns ``(final TrainState, per-step losses)`` — the annotation the
+    old signature lied about.  Resumes from ``ckpt_dir`` if one exists.
+    """
+    _warn_deprecated("train_dyngnn")
+    from repro import run as run_api
+    plan = run_api.ExecutionPlan(mode="eager", mesh=mesh,
+                                 num_steps=num_steps)
+    rc = run_api.RunConfig(
+        model=cfg,
+        data=run_api.InMemoryDTDG(pipeline.ds, pipeline=pipeline),
+        plan=plan, optimizer=opt_cfg,
+        checkpoint=(run_api.CheckpointSpec(ckpt_dir, every=ckpt_every)
+                    if ckpt_dir else None),
+        log_every=log_every, log_fn=log_fn)
+    res = run_api.Engine(rc).fit()
+    return res.state, res.losses
 
 
 def train_dyngnn_streamed(cfg: dyn_models.DynGNNConfig,
@@ -127,43 +111,27 @@ def train_dyngnn_streamed(cfg: dyn_models.DynGNNConfig,
                           overlap: bool = True, prefetch_depth: int = 2,
                           opt_cfg: adamw.AdamWConfig | None = None,
                           mesh=None, log_every: int = 10,
-                          log_fn: Callable[[str], None] = print):
-    """Streaming training over the graph-diff delta stream.
+                          log_fn: Callable[[str], None] = print
+                          ) -> tuple[TrainState, list[float]]:
+    """DEPRECATED streaming entrypoint; use ``repro.run.Engine``.
 
-    Transfers ride the ``repro.stream`` subsystem: vectorized host encode
-    + prefetched ``device_put`` of delta k+1 overlapped with the jitted
-    ``apply_delta`` + train step of delta k (overlap=False forces the
-    synchronous reference schedule — identical losses, no overlap).
-
-    ``mesh=None`` runs the single-device per-snapshot loop.  With a mesh,
-    the trainer goes snapshot-parallel: per-shard time-slice delta streams
-    (1/P transfer volume each) feed per-device edge-buffer rings, and each
-    checkpoint block trains under the snapshot-partition shard_map — the
-    temporal stage crosses shards through two fixed-volume all-to-alls per
-    layer while the GCN stage stays communication-free.
+    Returns ``(final TrainState, per-step losses)``.  ``mesh=None`` maps
+    to ``ExecutionPlan(mode="streamed")`` (single-device per-snapshot
+    loop); a mesh maps to ``mode="streamed_mesh"`` (per-shard time-slice
+    delta streams + snapshot-parallel shard_map).
     """
-    ds = pipeline.ds
-    if mesh is not None:
-        from repro.stream import distributed as stream_dist
-        state = stream_dist.train_distributed_streamed(
-            cfg, ds.snapshots, ds.values, np.asarray(ds.frames),
-            np.asarray(ds.labels), mesh=mesh, block_size=pipeline.bsize,
-            num_epochs=num_epochs, overlap=overlap,
-            prefetch_depth=prefetch_depth, opt_cfg=opt_cfg,
-            stats=pipeline.stream_stats, max_edges=pipeline.max_edges,
-            log_every=log_every, log_fn=log_fn)
-        return TrainState(params=state.params, opt_state=state.opt_state,
-                          step=len(state.losses)), state.losses
-    from repro.stream import train_loop as stream_train
-    state = stream_train.train_streamed(
-        cfg, ds.snapshots, ds.values, np.asarray(ds.frames),
-        np.asarray(ds.labels), block_size=pipeline.bsize,
+    _warn_deprecated("train_dyngnn_streamed")
+    from repro import run as run_api
+    plan = run_api.ExecutionPlan(
+        mode="streamed" if mesh is None else "streamed_mesh", mesh=mesh,
         num_epochs=num_epochs, overlap=overlap,
-        prefetch_depth=prefetch_depth, opt_cfg=opt_cfg,
-        stats=pipeline.stream_stats, max_edges=pipeline.max_edges,
-        log_every=log_every, log_fn=log_fn)
-    return TrainState(params=state.params, opt_state=state.opt_state,
-                      step=len(state.losses)), state.losses
+        prefetch_depth=prefetch_depth)
+    rc = run_api.RunConfig(
+        model=cfg,
+        data=run_api.InMemoryDTDG(pipeline.ds, pipeline=pipeline),
+        plan=plan, optimizer=opt_cfg, log_every=log_every, log_fn=log_fn)
+    res = run_api.Engine(rc).fit()
+    return res.state, res.losses
 
 
 def evaluate_link_prediction(cfg, params, pipeline: DTDGPipeline,

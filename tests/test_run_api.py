@@ -1,0 +1,351 @@
+"""Golden tests for the declarative ``repro.run`` Engine API.
+
+``Engine.fit()`` must reproduce the legacy entrypoints' loss streams
+BIT-FOR-BIT on every schedule (eager, streamed, streamed_mesh): the
+Engine is plumbing, never math.  Plus: seed plumbing, the plan's
+auto-pad / re-block behavior, the ``EdgeListDTDG`` file round-trip, the
+deprecation contract of the shims, and checkpoint resume."""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.models import DynGNNConfig
+from repro.data.dyngnn import (DTDGPipeline, dataset_from_snapshots,
+                               synthetic_dataset)
+from repro.graph import generate
+from repro.optim import adamw
+from repro.run import (CheckpointSpec, Engine, EdgeListDTDG, ExecutionPlan,
+                       InMemoryDTDG, RunConfig, SyntheticTrace,
+                       read_edgelist, write_edgelist)
+from repro.train import trainer
+
+N, T = 48, 16
+
+
+def _silent(_msg):
+    return None
+
+
+def _cfg(model="tmgcn", n=N, t=T, nb=2):
+    return DynGNNConfig(model=model, num_nodes=n, num_steps=t, window=3,
+                        checkpoint_blocks=nb)
+
+
+def _src(model="tmgcn", n=N, t=T):
+    smooth = {"tmgcn": "mproduct", "evolvegcn": "edgelife",
+              "cdgcn": "none"}[model]
+    return SyntheticTrace(num_nodes=n, num_steps=t, density=2.0, churn=0.1,
+                          smoothing_mode=smooth, window=3)
+
+
+def _engine(cfg, data, plan, **kw):
+    kw.setdefault("log_fn", _silent)
+    return Engine(RunConfig(model=cfg, data=data, plan=plan, **kw))
+
+
+# ------------------------------------------------ golden equivalence -------
+
+def test_eager_single_device_matches_manual_loop():
+    """Engine eager (1 device) == a hand-rolled loop over the legacy step
+    factory with the legacy defaults (PRNGKey(0), default AdamW)."""
+    cfg = _cfg()
+    ds = _src().build()
+    num_steps = 12
+    got = _engine(cfg, InMemoryDTDG(ds),
+                  ExecutionPlan(mode="eager", num_steps=num_steps)).fit()
+
+    pipe = DTDGPipeline(ds, nb=cfg.checkpoint_blocks)
+    opt_cfg = adamw.AdamWConfig(lr=1e-2, warmup_steps=10,
+                                total_steps=num_steps, weight_decay=0.0)
+    params = trainer.dyn_models.init_params(jax.random.PRNGKey(0), cfg)
+    opt_state = adamw.init_state(params)
+    step_fn = trainer.make_single_device_train_step(cfg, opt_cfg)
+    lab = jnp.asarray(ds.labels)
+    want = []
+    for _ in range(num_steps):
+        params, opt_state, loss = step_fn(params, opt_state, pipe.batch,
+                                          lab)
+        want.append(float(loss))
+    assert got.losses == want
+    assert got.state.step == num_steps
+
+
+@pytest.mark.parametrize("model", ["tmgcn", "cdgcn", "evolvegcn"])
+def test_streamed_matches_train_streamed(model):
+    """Engine streamed == the stream loop called the way the legacy shim
+    called it (pipeline-derived block size / stats / max_edges)."""
+    from repro.stream import train_loop as stream_train
+    cfg = _cfg(model, t=8)
+    ds = _src(model, t=8).build()
+    pipe = DTDGPipeline(ds, nb=cfg.checkpoint_blocks)
+    got = _engine(cfg, InMemoryDTDG(ds, pipeline=pipe),
+                  ExecutionPlan(mode="streamed", num_epochs=2)).fit()
+    ref = stream_train.train_streamed(
+        cfg, ds.snapshots, ds.values, np.asarray(ds.frames),
+        np.asarray(ds.labels), block_size=pipe.bsize, num_epochs=2,
+        stats=pipe.stream_stats, max_edges=pipe.max_edges)
+    assert got.losses == ref.losses
+    for a, b in zip(jax.tree.leaves(got.state.params),
+                    jax.tree.leaves(ref.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert got.stream_report is not None
+    assert got.transfer_report["graph_diff"] > 0
+
+
+@pytest.mark.skipif(len(jax.devices()) < 4, reason="needs 4 host devices")
+def test_streamed_mesh_matches_distributed_loop():
+    """Engine streamed_mesh == train_distributed_streamed on the same
+    trace, and overlap stays a pure schedule change through the Engine."""
+    from repro.launch.mesh import make_host_mesh
+    from repro.stream import distributed as dist
+    cfg = _cfg()
+    ds = _src().build()
+    pipe = DTDGPipeline(ds, nb=cfg.checkpoint_blocks)
+    got = _engine(cfg, InMemoryDTDG(ds, pipeline=pipe),
+                  ExecutionPlan(mode="streamed_mesh", shards=4,
+                                num_epochs=2)).fit()
+    ref = dist.train_distributed_streamed(
+        cfg, ds.snapshots, ds.values, np.asarray(ds.frames),
+        np.asarray(ds.labels), mesh=make_host_mesh(data=4, model=1),
+        num_epochs=2, stats=pipe.stream_stats, max_edges=pipe.max_edges)
+    assert got.losses == ref.losses
+    assert got.per_shard_bytes == ref.per_shard_bytes
+    for a, b in zip(jax.tree.leaves(got.state.params),
+                    jax.tree.leaves(ref.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    sync = _engine(cfg, InMemoryDTDG(ds, pipeline=pipe),
+                   ExecutionPlan(mode="streamed_mesh", shards=4,
+                                 num_epochs=2, overlap=False)).fit()
+    assert sync.losses == got.losses
+
+
+@pytest.mark.skipif(len(jax.devices()) < 4, reason="needs 4 host devices")
+def test_eager_mesh_matches_legacy_shim():
+    """The deprecated entrypoint and the Engine agree under a mesh (the
+    shim IS a RunConfig constructor — this pins its plumbing)."""
+    from repro.launch.mesh import make_host_mesh
+    cfg = _cfg()
+    ds = _src().build()
+    pipe = DTDGPipeline(ds, nb=cfg.checkpoint_blocks)
+    mesh = make_host_mesh(data=4, model=1)
+    with pytest.warns(DeprecationWarning, match="train_dyngnn"):
+        state, losses = trainer.train_dyngnn(cfg, pipe, mesh=mesh,
+                                             num_steps=6,
+                                             log_fn=_silent)
+    got = _engine(cfg, InMemoryDTDG(ds, pipeline=pipe),
+                  ExecutionPlan(mode="eager", mesh=mesh,
+                                num_steps=6)).fit()
+    assert got.losses == losses
+    assert got.state.step == state.step
+
+
+def test_legacy_streamed_shim_warns_and_matches():
+    cfg = _cfg(t=8)
+    ds = _src(t=8).build()
+    pipe = DTDGPipeline(ds, nb=cfg.checkpoint_blocks)
+    with pytest.warns(DeprecationWarning, match="train_dyngnn_streamed"):
+        state, losses = trainer.train_dyngnn_streamed(cfg, pipe,
+                                                      log_fn=_silent)
+    got = _engine(cfg, InMemoryDTDG(ds, pipeline=pipe),
+                  ExecutionPlan(mode="streamed")).fit()
+    assert got.losses == losses
+    assert isinstance(losses, list) and isinstance(state.step, int)
+
+
+# ------------------------------------------------------ seed / plan --------
+
+def test_seed_is_plumbed():
+    """RunConfig.seed reaches param init (no more hard-coded PRNGKey(0))."""
+    cfg = _cfg(t=8)
+    ds = _src(t=8).build()
+    runs = {}
+    for seed in (0, 1):
+        runs[seed] = _engine(cfg, InMemoryDTDG(ds),
+                             ExecutionPlan(mode="eager", num_steps=4),
+                             seed=seed).fit()
+    assert runs[0].losses != runs[1].losses
+    # seed=0 reproduces the legacy PRNGKey(0) stream
+    again = _engine(cfg, InMemoryDTDG(ds),
+                    ExecutionPlan(mode="eager", num_steps=4), seed=0).fit()
+    assert again.losses == runs[0].losses
+
+
+@pytest.mark.skipif(len(jax.devices()) < 4, reason="needs 4 host devices")
+def test_plan_auto_pads_num_nodes_and_logs():
+    """50 nodes over 4 shards: the plan pads to 52 instead of dying."""
+    msgs = []
+    cfg = _cfg(n=50)
+    eng = _engine(cfg, _src(n=50),
+                  ExecutionPlan(mode="streamed_mesh", shards=4),
+                  log_fn=msgs.append)
+    rr = eng.resolve()
+    assert rr.cfg.num_nodes == 52
+    assert rr.padded_from == 50
+    assert any("auto-padding num_nodes 50 -> 52" in m for m in msgs)
+    res = eng.fit()
+    assert len(res.losses) == T // rr.pipeline.bsize
+    assert np.isfinite(res.losses).all()
+
+
+@pytest.mark.skipif(len(jax.devices()) < 4, reason="needs 4 host devices")
+def test_plan_reblocks_timeline_for_mesh():
+    """nb=8 gives block size 2, not divisible over 4 shards: the plan
+    re-blocks (largest legal block <= requested) instead of raising."""
+    msgs = []
+    cfg = _cfg(nb=8)
+    eng = _engine(cfg, _src(), ExecutionPlan(mode="streamed_mesh",
+                                             shards=4),
+                  log_fn=msgs.append)
+    rr = eng.resolve()
+    assert rr.cfg.checkpoint_blocks == 4          # bsize 4 == P
+    assert rr.pipeline.bsize % 4 == 0
+    assert any("re-blocking" in m for m in msgs)
+    res = eng.fit()
+    assert len(res.losses) == 4
+
+
+def test_plan_validation():
+    with pytest.raises(ValueError, match="plan.mode"):
+        ExecutionPlan(mode="magic").validate()
+    with pytest.raises(ValueError, match="single-device"):
+        ExecutionPlan(mode="streamed", shards=4).validate()
+
+
+# ------------------------------------------------ edge-list round-trip -----
+
+@pytest.mark.parametrize("ext", ["tsv", "npz"])
+def test_edgelist_roundtrip_matches_in_memory(tmp_path, ext):
+    """write trace -> load -> identical dataset AND identical losses."""
+    snaps = generate.evolving_dynamic_graph(N, 8, density=2.0, churn=0.2,
+                                            seed=3)
+    path = tmp_path / f"trace.{ext}"
+    write_edgelist(path, snaps)
+    loaded_snaps, n_seen = read_edgelist(path)
+    assert len(loaded_snaps) == len(snaps)
+    for a, b in zip(loaded_snaps, snaps):
+        assert np.array_equal(a, b)
+    assert n_seen <= N
+
+    mem = dataset_from_snapshots(snaps, N, smoothing_mode="mproduct",
+                                 window=3)
+    src = EdgeListDTDG(str(path), num_nodes=N, smoothing_mode="mproduct",
+                       window=3)
+    loaded = src.build()
+    assert loaded.num_nodes == mem.num_nodes
+    for a, b in zip(loaded.snapshots, mem.snapshots):
+        assert np.array_equal(a, b)
+    np.testing.assert_array_equal(loaded.frames, mem.frames)
+    np.testing.assert_array_equal(loaded.labels, mem.labels)
+
+    cfg = _cfg(t=8)
+    plan = ExecutionPlan(mode="streamed")
+    from_file = _engine(cfg, src, plan).fit()
+    from_mem = _engine(cfg, InMemoryDTDG(mem), plan).fit()
+    assert from_file.losses == from_mem.losses
+
+
+@pytest.mark.parametrize("ext", ["tsv", "npz"])
+def test_edgelist_preserves_empty_boundary_snapshots(tmp_path, ext):
+    """The num_steps marker keeps empty leading/trailing snapshots, so
+    write -> load never silently shortens the trace."""
+    core = generate.evolving_dynamic_graph(16, 4, density=2.0, seed=1)
+    empty = np.zeros((0, 2), dtype=np.int32)
+    snaps = [empty] + core + [empty]
+    path = tmp_path / f"trace.{ext}"
+    write_edgelist(path, snaps)
+    loaded, _ = read_edgelist(path)
+    assert len(loaded) == len(snaps) == 6
+    for a, b in zip(loaded, snaps):
+        assert np.array_equal(a, b)
+
+
+def test_synthetic_trace_padding_pads_not_regenerates():
+    """A num_nodes override appends isolated vertices to the NOMINAL
+    trace — same graph, same labels — never a new random graph."""
+    src = _src(n=50)
+    nominal = src.build()
+    padded = src.build(num_nodes=52)
+    assert padded.num_nodes == 52
+    for a, b in zip(padded.snapshots, nominal.snapshots):
+        assert np.array_equal(a, b)
+    np.testing.assert_array_equal(padded.frames[:, :50], nominal.frames)
+    np.testing.assert_array_equal(padded.labels[:, :50], nominal.labels)
+    assert not padded.frames[:, 50:].any()
+    with pytest.raises(ValueError, match="shrink"):
+        src.build(num_nodes=40)
+
+
+def test_edgelist_padding_keeps_real_labels(tmp_path):
+    """Padding an edge-list source appends isolated vertices AFTER label
+    derivation — pad nodes can never shift the real nodes' label median."""
+    snaps = generate.evolving_dynamic_graph(30, 4, density=2.0, seed=5)
+    p = tmp_path / "t.tsv"
+    write_edgelist(p, snaps)
+    src = EdgeListDTDG(str(p), num_nodes=30)
+    base = src.build()
+    padded = src.build(num_nodes=32)
+    assert padded.num_nodes == 32
+    np.testing.assert_array_equal(padded.labels[:, :30], base.labels)
+    np.testing.assert_array_equal(padded.frames[:, :30], base.frames)
+    assert not padded.frames[:, 30:].any()
+
+
+def test_checkpoint_rejected_on_streamed_plans():
+    """No silent checkpoint drops: a CheckpointSpec on a streamed plan
+    fails loudly at resolve time."""
+    cfg = _cfg(t=8)
+    eng = _engine(cfg, _src(t=8), ExecutionPlan(mode="streamed"),
+                  checkpoint=CheckpointSpec("/tmp/never-used"))
+    with pytest.raises(ValueError, match="only wired for plan.mode"):
+        eng.resolve()
+
+
+def test_edgelist_rejects_bad_shapes(tmp_path):
+    p = tmp_path / "bad.tsv"
+    p.write_text("# src dst\n0\t1\n2\t3\n")
+    with pytest.raises(ValueError, match="columns"):
+        read_edgelist(p)
+    with pytest.raises(ValueError, match="node ids up to"):
+        snaps = [np.array([[0, 5]], dtype=np.int32)]
+        q = tmp_path / "big.tsv"
+        write_edgelist(q, snaps)
+        EdgeListDTDG(str(q), num_nodes=3).build()
+
+
+# --------------------------------------------------- resume / evaluate -----
+
+def test_engine_resume_roundtrip(tmp_path):
+    cfg = _cfg(model="cdgcn")
+    data = _src("cdgcn")
+    ck = CheckpointSpec(str(tmp_path / "ck"), every=5)
+    first = _engine(cfg, data, ExecutionPlan(mode="eager", num_steps=10),
+                    checkpoint=ck).fit()
+    assert first.state.step == 10
+    eng2 = _engine(cfg, data, ExecutionPlan(mode="eager", num_steps=15),
+                   checkpoint=ck)
+    res = eng2.resume()
+    assert res.state.step == 15
+    assert len(res.losses) == 5               # only steps 10..14 re-run
+
+    with pytest.raises(ValueError, match="RunConfig.checkpoint"):
+        _engine(cfg, data, ExecutionPlan(mode="eager", num_steps=5)
+                ).resume()
+    with pytest.raises(FileNotFoundError):
+        _engine(cfg, data, ExecutionPlan(mode="eager", num_steps=5),
+                checkpoint=CheckpointSpec(str(tmp_path / "empty"))
+                ).resume()
+
+
+def test_engine_evaluate_needs_fit_or_state():
+    cfg = _cfg(t=8)
+    eng = _engine(cfg, _src(t=8), ExecutionPlan(mode="eager", num_steps=2))
+    with pytest.raises(ValueError, match="before fit"):
+        eng.evaluate()
+    res = eng.fit()
+    acc = eng.evaluate(res)
+    assert 0.0 <= acc <= 1.0
