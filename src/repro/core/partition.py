@@ -180,12 +180,15 @@ def snapshot_partition_forward(cfg: mdl.DynGNNConfig, mesh: Mesh,
 
 
 def snapshot_partition_loss(cfg: mdl.DynGNNConfig, mesh: Mesh, axis="data",
-                            comm_dtype=None, fuse_final: bool = False):
+                            comm_dtype=None, fuse_final: bool = False,
+                            a2a_chunks: int = 1):
     """Sharded scalar loss: mean CE over all (t, u).
 
     fuse_final (beyond-paper): labels ride VERTEX-sharded (nb, bsize, N/P)
     and the final N->T all-to-all is elided; comm_dtype casts the remaining
-    redistributions (see _sp_block_body).  Both default off = the
+    redistributions (see _sp_block_body); a2a_chunks splits every
+    redistribution into that many feature-sliced all-to-alls (the §6.5
+    overlap schedule; math-identical).  All default off = the
     paper-faithful execution.
     """
     num_procs = _axis_size(mesh, axis)
@@ -200,7 +203,8 @@ def snapshot_partition_loss(cfg: mdl.DynGNNConfig, mesh: Mesh, axis="data",
         t0s = jnp.arange(nb, dtype=jnp.int32) * (bsl * num_procs)
         body = jax.checkpoint(
             partial(_sp_block_body, cfg, params, axis, num_procs,
-                    comm_dtype=comm_dtype, fused_labels=fuse),
+                    comm_dtype=comm_dtype, fused_labels=fuse,
+                    a2a_chunks=a2a_chunks),
             prevent_cse=True)
         if fuse:
             _, nll_sums = jax.lax.scan(

@@ -7,9 +7,13 @@ all-to-alls exposes independent chains the latency-hiding scheduler can
 run concurrently with compute; the math is unchanged (verified exactly in
 tests/test_partitioning.py).
 
-``overlap_time_model`` is the standard pipelining bound used by the
-benchmark: with C chunks the non-dominant phase hides behind the dominant
-one except for one chunk's worth of fill/drain.
+``overlap_time_model`` is the standard two-phase pipelining bound: with C
+chunks the non-dominant phase hides behind the dominant one except for
+one chunk's worth of fill/drain.  ``round_time_model`` extends it to the
+four phases of one distributed STREAMED round (transfer, spatial, a2a,
+temporal) with both the chunked-a2a and the round-level pipelining knob;
+``benchmarks/overlap_bench.py`` and ``benchmarks/scaling_bench.py``
+report its prediction against the measured pipelined round time.
 """
 
 from __future__ import annotations
@@ -29,6 +33,47 @@ def overlap_time_model(t_comp: float, t_comm: float, chunks: int) -> dict:
     return {"serial_s": serial, "pipelined_s": pipelined,
             "speedup": serial / pipelined if pipelined > 0 else 1.0,
             "chunks": chunks}
+
+
+def round_time_model(t_transfer: float, t_spatial: float, t_a2a: float,
+                     t_temporal: float, chunks: int = 1,
+                     pipeline_rounds: bool = False) -> dict:
+    """Steady-state time of ONE distributed streamed round with C chunks.
+
+    The round has four phases (the serial schedule runs them back to
+    back — ``stream.distributed``'s default loop):
+
+      transfer   host->device delta staging + delta-apply reconstruction
+      spatial    communication-free GCN stage on the local snapshots
+      a2a        the two per-layer fixed-volume all-to-alls
+      temporal   temporal stage in the vertex-sharded domain
+
+    Two levels of pipelining, matching the execution knobs:
+
+    * ``chunks=C`` (``a2a_chunks``): within the round, the a2a phase is
+      split into C feature-sliced collectives that overlap the adjacent
+      compute (spatial + temporal), so the inner round time is the
+      standard bound ``max(comp, a2a) + min(comp, a2a) / C``;
+    * ``pipeline_rounds``: round r+1's transfer phase runs concurrently
+      with round r's compute + collectives, so in steady state the
+      per-round time is ``max(transfer, inner)``.
+
+    Degenerate cases are exact: C=1 and no round pipelining reproduce the
+    serial sum; the model is monotone non-increasing in C.
+    """
+    chunks = max(int(chunks), 1)
+    comp = t_spatial + t_temporal
+    serial = t_transfer + comp + t_a2a
+    # C=1 degenerates exactly: max + min/1 == comp + t_a2a
+    inner = max(comp, t_a2a) + min(comp, t_a2a) / chunks
+    pipelined = max(t_transfer, inner) if pipeline_rounds \
+        else t_transfer + inner
+    return {"serial_s": serial, "pipelined_s": pipelined,
+            "inner_s": inner,
+            "speedup": serial / pipelined if pipelined > 0 else 1.0,
+            "chunks": chunks, "pipeline_rounds": pipeline_rounds,
+            "phases_s": {"transfer": t_transfer, "spatial": t_spatial,
+                         "a2a": t_a2a, "temporal": t_temporal}}
 
 
 def snapshot_partition_forward_overlapped(cfg, mesh, num_chunks: int = 2,

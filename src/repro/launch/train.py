@@ -41,6 +41,16 @@ def main() -> None:
                          "device gets only its own time-slice delta "
                          "stream and blocks train under shard_map "
                          "(0 = single-device streaming)")
+    ap.add_argument("--a2a-chunks", type=int, default=1,
+                    help="mesh schedules: split each all-to-all "
+                         "redistribution into this many feature-sliced "
+                         "chunks the scheduler can overlap with compute "
+                         "(losses unchanged)")
+    ap.add_argument("--pipeline-rounds", action="store_true",
+                    help="with --stream --mesh: dispatch round r+1's "
+                         "delta-apply/staging before forcing round r's "
+                         "loss (double-buffered edge rings; losses "
+                         "unchanged)")
     args = ap.parse_args()
 
     from repro.configs import registry
@@ -63,11 +73,16 @@ def main() -> None:
                               churn=0.1, smoothing_mode=smooth,
                               window=cfg.window)
         if args.stream:
-            # non-divisible num_nodes auto-pads inside the plan (logged)
+            # non-divisible num_nodes auto-pads inside the plan (logged);
+            # the pipelining flags pass through VERBATIM so a combination
+            # the plan cannot honor (e.g. --a2a-chunks without --mesh)
+            # fails loudly below instead of silently running a no-op
             plan = ExecutionPlan(
                 mode="streamed_mesh" if args.mesh > 1 else "streamed",
                 shards=max(args.mesh, 1), num_epochs=args.epochs,
-                overlap=not args.no_overlap)
+                overlap=not args.no_overlap,
+                a2a_chunks=args.a2a_chunks,
+                pipeline_rounds=args.pipeline_rounds)
             if args.ckpt_dir:
                 print("note: --ckpt-dir is ignored with --stream "
                       "(checkpointing is wired for the eager schedule "
@@ -75,14 +90,17 @@ def main() -> None:
             ckpt = None
         else:
             plan = ExecutionPlan(mode="eager", shards=dp,
-                                 num_steps=args.steps)
+                                 num_steps=args.steps,
+                                 a2a_chunks=args.a2a_chunks,
+                                 pipeline_rounds=args.pipeline_rounds)
             ckpt = (CheckpointSpec(args.ckpt_dir)
                     if args.ckpt_dir else None)
-        engine = Engine(RunConfig(model=cfg, data=data, plan=plan,
-                                  checkpoint=ckpt))
         try:
             # surface plan/config contradictions (e.g. a trace length the
-            # shards cannot slice) as a one-line CLI error, not a traceback
+            # shards cannot slice, a bad --a2a-chunks) as a one-line CLI
+            # error, not a traceback
+            engine = Engine(RunConfig(model=cfg, data=data, plan=plan,
+                                      checkpoint=ckpt))
             engine.resolve()
         except ValueError as e:
             raise SystemExit(f"invalid run configuration: {e}") from None

@@ -17,6 +17,13 @@ snapshot-partitioned shard_map training):
 The legacy entrypoints (``trainer.train_dyngnn`` /
 ``trainer.train_dyngnn_streamed``) remain as deprecation shims that
 construct a ``RunConfig`` and call the Engine.
+
+Full reference with runnable examples: ``docs/run_api.md`` (executed by
+CI, so it cannot drift from this package); subsystem map and the
+pipelined-round data flow: ``docs/architecture.md``.  The
+``ExecutionPlan`` overlap knobs (``overlap`` / ``prefetch_depth`` /
+``a2a_chunks`` / ``pipeline_rounds``) are pure schedule knobs — they
+never change losses.
 """
 
 from repro.run.config import (CheckpointSpec, ResolvedRun, RunConfig,

@@ -87,6 +87,9 @@ class RunResult:
     ``transfer_report`` is the graph-diff byte accounting
     (``DTDGPipeline.transfer_bytes()``); ``per_shard_bytes`` the
     per-device stream payloads of the streamed_mesh schedule.
+    ``a2a_chunks`` / ``pipeline_rounds`` echo the overlap knobs the run
+    actually executed with (pure schedule knobs — two results that
+    differ only here carry identical ``losses``).
     """
 
     state: TrainState
@@ -94,3 +97,5 @@ class RunResult:
     stream_report: StreamReport | None = None
     transfer_report: dict | None = None
     per_shard_bytes: list[int] | None = None
+    a2a_chunks: int = 1
+    pipeline_rounds: bool = False

@@ -31,9 +31,21 @@ class ExecutionPlan:
     ``shards`` is the snapshot-parallel width (data axis of the mesh);
     ``mesh`` may inject a prebuilt mesh instead (``shards`` is then
     ignored and read off the mesh).  ``num_steps`` drives the eager
-    schedule, ``num_epochs`` the streamed ones; ``overlap`` /
-    ``prefetch_depth`` control the transfer-compute overlap of the
-    stream subsystem and never change losses (pure schedule knobs).
+    schedule, ``num_epochs`` the streamed ones.
+
+    Overlap / pipelining knobs (all pure schedule knobs — they never
+    change losses; see docs/run_api.md "Overlap & pipelining"):
+
+    * ``overlap`` / ``prefetch_depth`` — host->device transfer overlap of
+      the stream subsystem (background-thread encode + device_put);
+    * ``a2a_chunks`` — chunk every shard_map redistribution into that
+      many feature-sliced all-to-alls so the scheduler can overlap chunk
+      c's transfer with chunk c-1's consumer compute (mesh schedules
+      only; math-identical to the unchunked collective);
+    * ``pipeline_rounds`` — streamed_mesh only: double-buffer the
+      per-shard edge rings and dispatch round r+1's delta-apply +
+      staging while round r's temporal-stage collectives execute
+      (one round in flight; losses pinned to the serial schedule).
     """
 
     mode: str = "eager"             # eager | streamed | streamed_mesh
@@ -44,6 +56,8 @@ class ExecutionPlan:
     num_epochs: int = 1             # streamed passes over the trace
     overlap: bool = True
     prefetch_depth: int = 2
+    a2a_chunks: int = 1             # chunked all-to-alls (mesh schedules)
+    pipeline_rounds: bool = False   # round-level pipelining (streamed_mesh)
     auto_pad: bool = True
 
     def validate(self) -> None:
@@ -54,11 +68,24 @@ class ExecutionPlan:
             raise ValueError(f"plan.shards must be >= 1, got {self.shards}")
         if self.prefetch_depth < 1:
             raise ValueError("plan.prefetch_depth must be >= 1")
+        if self.a2a_chunks < 1:
+            raise ValueError(f"plan.a2a_chunks must be >= 1, "
+                             f"got {self.a2a_chunks}")
         if self.mode == "streamed" and (self.shards > 1
                                         or self.mesh is not None):
             raise ValueError("mode='streamed' is single-device; use "
                              "mode='streamed_mesh' for snapshot-parallel "
                              "streaming")
+        if self.a2a_chunks > 1 and not self.wants_mesh:
+            raise ValueError("plan.a2a_chunks chunks the shard_map "
+                             "all-to-alls; this plan runs without a mesh "
+                             f"(mode={self.mode!r}, shards="
+                             f"{self.num_shards}) so there are none — "
+                             "use a mesh schedule")
+        if self.pipeline_rounds and self.mode != "streamed_mesh":
+            raise ValueError("plan.pipeline_rounds pipelines the "
+                             "distributed streamed round loop; it requires "
+                             "mode='streamed_mesh'")
 
     @property
     def num_shards(self) -> int:

@@ -58,8 +58,8 @@ def fit_eager(rr: ResolvedRun) -> RunResult:
     step_fn = rr.cache.get("eager_step")
     if rr.mesh is not None:
         if step_fn is None:
-            step_fn = trainer.make_dyngnn_train_step(rr.cfg, rr.mesh,
-                                                     opt_cfg)
+            step_fn = trainer.make_dyngnn_train_step(
+                rr.cfg, rr.mesh, opt_cfg, a2a_chunks=plan.a2a_chunks)
             rr.cache["eager_step"] = step_fn
         args = (frames, edges, ew, labels)
     else:
@@ -95,7 +95,8 @@ def fit_eager(rr: ResolvedRun) -> RunResult:
         params=params, opt_state=opt_state,
         step=min(num_steps, start_step + len(losses)))
     return RunResult(state=state, losses=losses,
-                     transfer_report=rr.pipeline.transfer_bytes())
+                     transfer_report=rr.pipeline.transfer_bytes(),
+                     a2a_chunks=plan.a2a_chunks)
 
 
 def fit_streamed(rr: ResolvedRun) -> RunResult:
@@ -131,8 +132,9 @@ def fit_streamed_mesh(rr: ResolvedRun) -> RunResult:
     params, opt_state = _init(rr)
     step_fn = rr.cache.get("dist_step")
     if step_fn is None:
-        step_fn = stream_dist.make_dist_stream_step(rr.cfg, rr.mesh,
-                                                    opt_cfg, plan.mesh_axis)
+        step_fn = stream_dist.make_dist_stream_step(
+            rr.cfg, rr.mesh, opt_cfg, plan.mesh_axis,
+            a2a_chunks=plan.a2a_chunks)
         rr.cache["dist_step"] = step_fn
     shard_streams = rr.cache.get("shard_streams")
     if shard_streams is None:
@@ -143,6 +145,7 @@ def fit_streamed_mesh(rr: ResolvedRun) -> RunResult:
         np.asarray(ds.labels), mesh=rr.mesh, axis=plan.mesh_axis,
         block_size=pipe.bsize, num_epochs=plan.num_epochs,
         overlap=plan.overlap, prefetch_depth=plan.prefetch_depth,
+        a2a_chunks=plan.a2a_chunks, pipeline_rounds=plan.pipeline_rounds,
         opt_cfg=opt_cfg, params=params, opt_state=opt_state,
         stats=pipe.stream_stats, max_edges=pipe.max_edges,
         step_fn=step_fn, shard_streams=shard_streams,
@@ -151,4 +154,6 @@ def fit_streamed_mesh(rr: ResolvedRun) -> RunResult:
                                step=len(st.losses))
     return RunResult(state=state, losses=st.losses,
                      transfer_report=pipe.transfer_bytes(),
-                     per_shard_bytes=st.per_shard_bytes)
+                     per_shard_bytes=st.per_shard_bytes,
+                     a2a_chunks=plan.a2a_chunks,
+                     pipeline_rounds=plan.pipeline_rounds)

@@ -21,6 +21,19 @@ distribution the paper benchmarks:
 Loss semantics match ``train_loop.train_streamed(slice_len=win)`` exactly
 (same slice, same mean CE, same AdamW cadence); the equivalence is pinned
 to <= 1e-5 relative in ``tests/test_dist_stream.py``.
+
+Two further schedule knobs pipeline the round itself (losses unchanged —
+the pinned tests cover every combination; see docs/architecture.md for
+the round diagram):
+
+* ``a2a_chunks=C`` chunks each of the two per-layer redistributions into
+  C feature-sliced all-to-alls (``partition.snapshot_block_body``), so
+  chunk c's transfer can overlap chunk c-1's consumer compute;
+* ``pipeline_rounds=True`` double-buffers the per-shard edge rings and
+  keeps ONE round in flight: round r+1's delta-apply + staging is
+  dispatched before round r's loss is forced to the host, so the
+  reconstruction work runs concurrently with round r's temporal-stage
+  collectives.
 """
 
 from __future__ import annotations
@@ -55,7 +68,8 @@ class DistStreamState:
 
 
 def make_dist_stream_step(cfg: mdl.DynGNNConfig, mesh,
-                          opt_cfg: adamw.AdamWConfig, axis: str = "data"):
+                          opt_cfg: adamw.AdamWConfig, axis: str = "data",
+                          a2a_chunks: int = 1):
     """Jitted per-round step: time-sharded reconstructed snapshots ->
     Laplacian weights on each shard -> snapshot-parallel block body
     (2 all-to-alls per layer) -> replicated mean CE -> AdamW update.
@@ -64,7 +78,13 @@ def make_dist_stream_step(cfg: mdl.DynGNNConfig, mesh,
     carries stay vertex-sharded on the mesh between calls (they live in
     the N-sharded domain the temporal stage runs in), EvolveGCN's weight
     carry stays replicated.
+
+    ``a2a_chunks=C`` splits each redistribution into C feature-sliced
+    all-to-alls (the §6.5 overlap schedule) — math-identical, so the
+    loss stream is pinned to the C=1 reference.
     """
+    if a2a_chunks < 1:
+        raise ValueError(f"a2a_chunks must be >= 1, got {a2a_chunks}")
     num_procs = mesh.shape[axis]
     n = cfg.num_nodes
     if n % num_procs:
@@ -84,7 +104,7 @@ def make_dist_stream_step(cfg: mdl.DynGNNConfig, mesh,
             n, loop_edges, loop_ones, edges, mask, values)
         new_carries, h = partition.snapshot_block_body(
             cfg, params, axis, num_procs, carries,
-            (frames, e_full, w_full, t0))
+            (frames, e_full, w_full, t0), a2a_chunks=a2a_chunks)
         nll = tl.slice_nll(params, h, labels)
         total = jax.lax.psum(jnp.sum(nll), axis)
         count = jnp.asarray(bsl * num_procs * n, jnp.float32)
@@ -152,6 +172,28 @@ def make_round_stage_fn(mesh, axis: str = "data"):
     return stage
 
 
+def consume_round(items, appliers, stackers):
+    """Drive one round's staged per-shard delta items through the shard
+    rings: ``appliers[s]`` applies shard s's deltas, ``stackers[s]``
+    copies each reconstructed slot out of the donated ring.  Returns the
+    per-shard ``(edges, mask, values)`` blocks, dispatch-only (nothing
+    blocks on device execution).
+
+    This is THE per-round reconstruction protocol — the trainer below
+    and the benchmarks that time the transfer phase
+    (``benchmarks/overlap_bench.pipelined_round``,
+    ``benchmarks/scaling_bench._round_transfer_time``) all call it, so
+    the measured phase can never drift from what the trainer overlaps.
+    """
+    blocks = []
+    for s, shard_items in enumerate(items):
+        for j, item in enumerate(shard_items):
+            e, m, v = appliers[s].consume(item)
+            stackers[s].put(j, e, m, v)
+        blocks.append(stackers[s].arrays())
+    return blocks
+
+
 def _assemble(mesh, spec, shard_blocks, global_shape):
     """Per-shard device blocks -> one global time-sharded jax.Array
     (zero host round-trip: the blocks already live on their devices)."""
@@ -164,6 +206,8 @@ def train_distributed_streamed(cfg: mdl.DynGNNConfig, snapshots, values,
                                block_size: int | None = None,
                                num_epochs: int = 1, overlap: bool = True,
                                prefetch_depth: int = 2,
+                               a2a_chunks: int = 1,
+                               pipeline_rounds: bool = False,
                                opt_cfg: adamw.AdamWConfig | None = None,
                                params: dict | None = None, opt_state=None,
                                stats: enc.DeltaStats | None = None,
@@ -181,11 +225,20 @@ def train_distributed_streamed(cfg: mdl.DynGNNConfig, snapshots, values,
     r+1's per-shard deltas while round r trains; both schedules produce
     identical losses.
 
+    ``a2a_chunks`` / ``pipeline_rounds`` are the chunked-round pipelining
+    knobs (see the module docstring): pure schedule changes whose loss
+    streams are pinned to the serial (C=1, unpipelined) reference.  With
+    ``pipeline_rounds=True`` each shard alternates between two
+    ``DeltaApplier`` rings, so round r+1's delta-applies never wait on
+    the retirement of buffers round r's assembly still reads, and the
+    host forces round r's loss only after round r+1 is fully dispatched.
+
     ``step_fn`` / ``shard_streams`` let callers that invoke this in a loop
     (benchmark epochs, repeated timing runs) reuse one compiled step and
     one encoded stream set instead of re-tracing and re-encoding per call;
     both must come from ``make_dist_stream_step`` /
-    ``sharded.encode_time_sliced`` with matching (cfg, mesh, block) args.
+    ``sharded.encode_time_sliced`` with matching (cfg, mesh, block,
+    a2a_chunks) args.
     """
     t_steps = len(snapshots)
     num_procs = mesh.shape[axis]
@@ -221,9 +274,35 @@ def train_distributed_streamed(cfg: mdl.DynGNNConfig, snapshots, values,
     devices = shardlib.shard_devices(mesh, axis)
     b = shardlib.stream_batch_specs(axis)
     if step_fn is None:
-        step_fn = make_dist_stream_step(cfg, mesh, opt_cfg, axis)
+        step_fn = make_dist_stream_step(cfg, mesh, opt_cfg, axis,
+                                        a2a_chunks=a2a_chunks)
     stage_fn = make_round_stage_fn(mesh, axis)
     e_pad = max_edges
+    # pipeline_rounds double-buffers the per-shard rings: round r uses
+    # buffer r%2, so round r+1's delta-applies (and their donations) are
+    # fully independent of the ring round r's assembly was built from.
+    nbuf = 2 if pipeline_rounds else 1
+
+    def reconstruct_round(r, items, appliers, stackers):
+        """Per-shard delta-apply + slot stacking -> assembled global
+        (edges, mask, values) for one round, on round r's ring buffer."""
+        buf = r % nbuf
+        blocks = consume_round(items, [a[buf] for a in appliers],
+                               [st[buf] for st in stackers])
+        return (_assemble(mesh, b["edges"], (e for e, _, _ in blocks),
+                          (win, e_pad, 2)),
+                _assemble(mesh, b["mask"], (m for _, m, _ in blocks),
+                          (win, e_pad)),
+                _assemble(mesh, b["values"], (v for _, _, v in blocks),
+                          (win, e_pad)))
+
+    def emit(loss_value):
+        losses.append(float(loss_value))
+        if log_fn is not None and (len(losses) - 1) % log_every == 0:
+            log_fn(f"dist stream round {len(losses) - 1} "
+                   f"loss {losses[-1]:.4f} "
+                   f"(P={num_procs}, win={win}, C={a2a_chunks}, "
+                   f"pipelined={pipeline_rounds})")
 
     losses: list[float] = []
     for _ in range(num_epochs):
@@ -233,34 +312,29 @@ def train_distributed_streamed(cfg: mdl.DynGNNConfig, snapshots, values,
                                       depth=prefetch_depth)
         else:
             rounds = (stage_fn(x) for x in host)
-        appliers = [DeltaApplier(e_pad, device=d) for d in devices]
-        stackers = [SlotStacker(bsl) for _ in devices]
+        appliers = [[DeltaApplier(e_pad, device=d) for _ in range(nbuf)]
+                    for d in devices]
+        stackers = [[SlotStacker(bsl) for _ in range(nbuf)]
+                    for _ in devices]
         carries = init_sharded_carries(cfg, params, mesh, axis)
+        in_flight = None        # round r-1's device loss (pipeline_rounds)
         try:
             for r, (items, fr_g, lab_g) in enumerate(rounds):
-                blocks = []
-                for s in range(num_procs):
-                    for j, item in enumerate(items[s]):
-                        e, m, v = appliers[s].consume(item)
-                        stackers[s].put(j, e, m, v)
-                    blocks.append(stackers[s].arrays())
-                edges_g = _assemble(mesh, b["edges"],
-                                    (e for e, _, _ in blocks),
-                                    (win, e_pad, 2))
-                mask_g = _assemble(mesh, b["mask"],
-                                   (m for _, m, _ in blocks),
-                                   (win, e_pad))
-                values_g = _assemble(mesh, b["values"],
-                                     (v for _, _, v in blocks),
-                                     (win, e_pad))
+                assembled = reconstruct_round(r, items, appliers, stackers)
                 params, opt_state, carries, loss = step_fn(
-                    params, opt_state, carries, fr_g, edges_g, mask_g,
-                    values_g, lab_g, jnp.int32(r * win))
-                losses.append(float(loss))
-                if log_fn is not None and (len(losses) - 1) % log_every == 0:
-                    log_fn(f"dist stream round {len(losses) - 1} "
-                           f"loss {losses[-1]:.4f} "
-                           f"(P={num_procs}, win={win})")
+                    params, opt_state, carries, fr_g, *assembled, lab_g,
+                    jnp.int32(r * win))
+                if pipeline_rounds:
+                    # force the PREVIOUS round only now: round r's
+                    # delta-applies and step are already dispatched, so
+                    # they execute while the host blocks on loss r-1.
+                    if in_flight is not None:
+                        emit(in_flight)
+                    in_flight = loss
+                else:
+                    emit(loss)
+            if in_flight is not None:   # drain the pipelined epoch tail
+                emit(in_flight)
         finally:
             if isinstance(rounds, PrefetchIterator):
                 rounds.close()

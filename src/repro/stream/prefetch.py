@@ -135,6 +135,14 @@ def stage_item(item: Any, device=None) -> Any:
     return put(item)
 
 
+# One jitted apply_delta per donation mode, SHARED by every DeltaApplier:
+# a fresh jax.jit wrapper per ring would re-trace/re-compile per instance,
+# which the distributed trainer would pay P (double-buffered: 2P) times
+# per epoch.  Device placement still follows the committed inputs.
+_APPLY_DONATING = jax.jit(graphdiff.apply_delta, donate_argnums=(0, 1))
+_APPLY_PLAIN = jax.jit(graphdiff.apply_delta)
+
+
 class DeltaApplier:
     """Device-resident (edges, mask) buffer ring.
 
@@ -154,8 +162,7 @@ class DeltaApplier:
             # shard rings run truly independent per-device streams.
             self.edges = jax.device_put(self.edges, device)
             self.mask = jax.device_put(self.mask, device)
-        self._apply = jax.jit(graphdiff.apply_delta,
-                              donate_argnums=(0, 1) if donate else ())
+        self._apply = _APPLY_DONATING if donate else _APPLY_PLAIN
 
     def consume(self, item: FullSnapshot | SnapshotDelta
                 ) -> tuple[jax.Array, jax.Array, jax.Array]:

@@ -40,8 +40,15 @@ class TrainState:
 
 
 def make_dyngnn_train_step(cfg: dyn_models.DynGNNConfig, mesh,
-                           opt_cfg: adamw.AdamWConfig, axis="data"):
-    loss_fn = partition.snapshot_partition_loss(cfg, mesh, axis=axis)
+                           opt_cfg: adamw.AdamWConfig, axis="data",
+                           a2a_chunks: int = 1):
+    """Jitted eager train step under the snapshot-partition shard_map.
+
+    ``a2a_chunks`` chunks the per-layer redistributions into that many
+    feature-sliced all-to-alls (overlap schedule; math-identical).
+    """
+    loss_fn = partition.snapshot_partition_loss(cfg, mesh, axis=axis,
+                                                a2a_chunks=a2a_chunks)
 
     @jax.jit
     def train_step(params, opt_state, frames, edges, ew, labels):

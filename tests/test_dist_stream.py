@@ -16,6 +16,7 @@ from repro.core.models import DynGNNConfig
 from repro.data.dyngnn import synthetic_dataset
 from repro.dist import sharding as shardlib
 from repro.launch.mesh import make_host_mesh
+from repro.optim import adamw
 from repro.stream import distributed as dist
 from repro.stream import train_loop as stream_train
 
@@ -52,6 +53,48 @@ def test_distributed_matches_single_device_reference(model):
                     jax.tree.leaves(got.params)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    atol=1e-6)
+
+
+@pytest.mark.skipif(len(jax.devices()) < 8, reason="needs 8 host devices")
+@pytest.mark.parametrize("pipeline", [False, True])
+@pytest.mark.parametrize("chunks", [1, 2, 4])
+def test_pipelined_chunked_round_matches_serial(chunks, pipeline,
+                                                _serial_ref_p8):
+    """The chunked-round pipelining knobs are pure schedule changes: on
+    the 8-device host mesh every (a2a_chunks, pipeline_rounds) combination
+    reproduces the serial (C=1, unpipelined) loss stream at <= 1e-5
+    relative — and so do the final params."""
+    cfg, ds, frames, labels, mesh, ref = _serial_ref_p8
+    got = dist.train_distributed_streamed(
+        cfg, ds.snapshots, ds.values, frames, labels, mesh=mesh,
+        num_epochs=2, a2a_chunks=chunks, pipeline_rounds=pipeline)
+    assert len(got.losses) == len(ref.losses) == 2 * NB
+    np.testing.assert_allclose(got.losses, ref.losses, rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(ref.params),
+                    jax.tree.leaves(got.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-6)
+
+
+@pytest.fixture(scope="module")
+def _serial_ref_p8():
+    """Serial (a2a_chunks=1, pipeline_rounds=False) reference on the
+    8-device mesh, computed once for the pipelined-equivalence matrix."""
+    cfg, ds, frames, labels = _ds("tmgcn")
+    mesh = make_host_mesh(data=8, model=1)
+    ref = dist.train_distributed_streamed(
+        cfg, ds.snapshots, ds.values, frames, labels, mesh=mesh,
+        num_epochs=2)
+    return cfg, ds, frames, labels, mesh, ref
+
+
+def test_pipelined_round_rejects_bad_chunks():
+    cfg, ds, frames, labels = _ds("tmgcn")
+    mesh = make_host_mesh(data=4, model=1)
+    with pytest.raises(ValueError, match="a2a_chunks"):
+        dist.make_dist_stream_step(
+            cfg, mesh, adamw.AdamWConfig(lr=1e-2, total_steps=1),
+            a2a_chunks=0)
 
 
 def test_distributed_overlap_is_pure_schedule_change():
@@ -119,15 +162,16 @@ def test_round_staging_pins_shards_to_their_devices():
 def test_step_crosses_shards_via_all_to_all_only():
     """Structural: the compiled sharded loss contains all-to-alls (the two
     redistributions per GCN layer) and no all-gather on the feature path;
-    EvolveGCN compiles with NO feature collectives at all (§5.5)."""
+    EvolveGCN compiles with NO feature collectives at all (§5.5); chunking
+    multiplies the all-to-all count (the schedule the overlap exploits)."""
     mesh = make_host_mesh(data=4, model=1)
 
-    def hlo_for(model):
+    def hlo_for(model, a2a_chunks=1):
         cfg, ds, frames, labels = _ds(model)
         from repro.core import models as mdl
-        from repro.optim import adamw
         step = dist.make_dist_stream_step(
-            cfg, mesh, adamw.AdamWConfig(lr=1e-2, total_steps=10))
+            cfg, mesh, adamw.AdamWConfig(lr=1e-2, total_steps=10),
+            a2a_chunks=a2a_chunks)
         params = mdl.init_params(jax.random.PRNGKey(0), cfg)
         opt_state = adamw.init_state(params)
         carries = dist.init_sharded_carries(cfg, params, mesh)
@@ -141,6 +185,8 @@ def test_step_crosses_shards_via_all_to_all_only():
 
     txt = hlo_for("tmgcn")
     assert txt.count("all-to-all") >= 2     # T->N and N->T redistributions
+    chunked = hlo_for("tmgcn", a2a_chunks=2)
+    assert chunked.count("all-to-all") > txt.count("all-to-all")
     evolve = hlo_for("evolvegcn")
     assert "all-to-all" not in evolve       # weights evolve locally (§5.5)
 

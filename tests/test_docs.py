@@ -1,0 +1,27 @@
+"""The documentation cannot rot: markdown links must resolve and the
+``docs/run_api.md`` examples must execute (the same checks CI's docs job
+runs via ``tools/check_docs.py``)."""
+
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "tools"))
+
+import check_docs  # noqa: E402
+
+
+def test_docs_exist():
+    assert (ROOT / "docs" / "architecture.md").exists()
+    assert (ROOT / "docs" / "run_api.md").exists()
+
+
+def test_markdown_links_resolve():
+    problems = check_docs.check_links()
+    assert problems == []
+
+
+def test_run_api_examples_execute():
+    """Every ```python fence in docs/run_api.md runs, in order, in one
+    shared namespace (conftest already forces 8 host devices)."""
+    check_docs.run_examples(verbose=False)

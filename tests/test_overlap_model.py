@@ -1,0 +1,76 @@
+"""Unit tests for the overlap/pipelining time models (repro.dist.overlap).
+
+These are the analytic bounds the benchmarks report predictions from
+(``benchmarks/overlap_bench.py`` ``pipelined_round``,
+``benchmarks/scaling_bench.py`` ``streamed_scaling``): the degenerate
+configurations must reproduce the serial schedule EXACTLY and the
+chunked bound must be monotone, or predicted-vs-measured rows would lie.
+"""
+
+import pytest
+
+from repro.dist.overlap import overlap_time_model, round_time_model
+
+
+def test_round_model_degenerate_c1_equals_serial():
+    """C=1 with no round pipelining IS the serial schedule, exactly."""
+    m = round_time_model(1.0, 2.0, 3.0, 4.0, chunks=1,
+                         pipeline_rounds=False)
+    assert m["pipelined_s"] == m["serial_s"] == 1.0 + 2.0 + 3.0 + 4.0
+    assert m["speedup"] == 1.0
+    assert m["chunks"] == 1
+    assert m["phases_s"] == {"transfer": 1.0, "spatial": 2.0, "a2a": 3.0,
+                             "temporal": 4.0}
+
+
+def test_round_model_monotone_in_chunks():
+    """More chunks never slow the round; strictly faster while the
+    non-dominant inner phase still has fill/drain to shave."""
+    times = [round_time_model(0.5, 1.0, 2.0, 1.0, chunks=c)["pipelined_s"]
+             for c in (1, 2, 4, 8, 16)]
+    for a, b in zip(times, times[1:]):
+        assert b < a                       # comp=2, a2a=2 -> min > 0
+    # floor: dominant phase + transfer (no round pipelining here)
+    assert times[-1] > 0.5 + max(2.0, 2.0)
+
+
+def test_round_model_pipeline_rounds_hides_transfer():
+    """Round-level pipelining turns transfer+inner into max(transfer,
+    inner) — transfer fully hides when compute dominates."""
+    kw = dict(t_spatial=2.0, t_a2a=1.0, t_temporal=2.0, chunks=4)
+    serial = round_time_model(t_transfer=1.5, pipeline_rounds=False, **kw)
+    piped = round_time_model(t_transfer=1.5, pipeline_rounds=True, **kw)
+    assert piped["pipelined_s"] == serial["pipelined_s"] - 1.5
+    assert piped["speedup"] > serial["speedup"]
+    # transfer-bound regime: the round degenerates to the transfer time
+    bound = round_time_model(t_transfer=100.0, pipeline_rounds=True, **kw)
+    assert bound["pipelined_s"] == 100.0
+
+
+def test_round_model_never_beats_dominant_phase():
+    """The bound is physical: no schedule beats the dominant phase."""
+    for c in (1, 2, 4, 64):
+        for pr in (False, True):
+            m = round_time_model(0.3, 1.0, 5.0, 0.5, chunks=c,
+                                 pipeline_rounds=pr)
+            assert m["pipelined_s"] >= 5.0
+            assert m["pipelined_s"] <= m["serial_s"]
+
+
+@pytest.mark.parametrize("chunks", [0, -3])
+def test_round_model_clamps_chunks(chunks):
+    """Nonpositive chunk counts clamp to the serial C=1 schedule (the
+    models are report helpers, not validators)."""
+    m = round_time_model(1.0, 1.0, 1.0, 1.0, chunks=chunks)
+    assert m["chunks"] == 1
+    assert m["pipelined_s"] == m["serial_s"]
+
+
+def test_two_phase_model_consistency():
+    """round_time_model with zero transfer+one fused compute phase
+    reduces to the original two-phase overlap_time_model."""
+    for c in (1, 2, 4):
+        two = overlap_time_model(3.0, 2.0, c)
+        four = round_time_model(0.0, 3.0, 2.0, 0.0, chunks=c)
+        assert four["pipelined_s"] == two["pipelined_s"]
+        assert four["serial_s"] == two["serial_s"]

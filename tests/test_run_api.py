@@ -214,6 +214,59 @@ def test_plan_validation():
         ExecutionPlan(mode="magic").validate()
     with pytest.raises(ValueError, match="single-device"):
         ExecutionPlan(mode="streamed", shards=4).validate()
+    with pytest.raises(ValueError, match="a2a_chunks must be"):
+        ExecutionPlan(a2a_chunks=0).validate()
+    with pytest.raises(ValueError, match="a2a_chunks"):
+        ExecutionPlan(mode="streamed", a2a_chunks=2).validate()
+    # meshless eager has no all-to-alls either: chunking must fail
+    # loudly, not silently no-op (RunResult echoes the knob as executed)
+    with pytest.raises(ValueError, match="without a mesh"):
+        ExecutionPlan(mode="eager", shards=1, a2a_chunks=2).validate()
+    with pytest.raises(ValueError, match="pipeline_rounds"):
+        ExecutionPlan(mode="eager", pipeline_rounds=True).validate()
+    # mesh schedules accept both knobs
+    ExecutionPlan(mode="streamed_mesh", shards=4, a2a_chunks=4,
+                  pipeline_rounds=True).validate()
+    ExecutionPlan(mode="eager", shards=4, a2a_chunks=2).validate()
+
+
+@pytest.mark.skipif(len(jax.devices()) < 8, reason="needs 8 host devices")
+def test_streamed_mesh_pipelined_matches_serial_through_engine():
+    """The acceptance bar of the chunked-round pipeline: a2a_chunks=4 +
+    pipeline_rounds=True on the 8-device host mesh reproduces the serial
+    plan's loss stream at <= 1e-5 relative, and the RunResult echoes the
+    knobs it ran with."""
+    cfg = _cfg()
+    ds = _src().build()
+    pipe = DTDGPipeline(ds, nb=cfg.checkpoint_blocks)
+    serial = _engine(cfg, InMemoryDTDG(ds, pipeline=pipe),
+                     ExecutionPlan(mode="streamed_mesh", shards=8,
+                                   num_epochs=2)).fit()
+    piped = _engine(cfg, InMemoryDTDG(ds, pipeline=pipe),
+                    ExecutionPlan(mode="streamed_mesh", shards=8,
+                                  num_epochs=2, a2a_chunks=4,
+                                  pipeline_rounds=True)).fit()
+    assert len(piped.losses) == len(serial.losses)
+    np.testing.assert_allclose(piped.losses, serial.losses, rtol=1e-5)
+    assert piped.a2a_chunks == 4 and piped.pipeline_rounds is True
+    assert serial.a2a_chunks == 1 and serial.pipeline_rounds is False
+    assert piped.per_shard_bytes == serial.per_shard_bytes
+
+
+@pytest.mark.skipif(len(jax.devices()) < 4, reason="needs 4 host devices")
+def test_eager_mesh_chunked_a2a_matches_serial():
+    """a2a_chunks also threads through the eager shard_map schedule
+    (snapshot_partition_loss) without changing the loss stream."""
+    cfg = _cfg()
+    ds = _src().build()
+    plain = _engine(cfg, InMemoryDTDG(ds),
+                    ExecutionPlan(mode="eager", shards=4,
+                                  num_steps=6)).fit()
+    chunked = _engine(cfg, InMemoryDTDG(ds),
+                      ExecutionPlan(mode="eager", shards=4, num_steps=6,
+                                    a2a_chunks=2)).fit()
+    np.testing.assert_allclose(chunked.losses, plain.losses, rtol=1e-5)
+    assert chunked.a2a_chunks == 2
 
 
 # ------------------------------------------------ edge-list round-trip -----

@@ -1,0 +1,116 @@
+#!/usr/bin/env python
+"""Docs checker: markdown link integrity + executable examples.
+
+Two jobs, both run by CI (the ``docs`` job) and by
+``tests/test_docs.py`` so the documentation cannot rot:
+
+* **link check** — every relative markdown link in README.md and
+  docs/*.md must point at a file that exists in the repo (anchors into
+  markdown targets are checked against the target's headings with
+  GitHub's slug rules).  Links that resolve outside the repo root are
+  web-relative (e.g. the CI badge) and skipped, as are absolute URLs.
+* **example run** — every ```python fence in docs/run_api.md executes,
+  in file order, in ONE shared interpreter namespace (later blocks may
+  use earlier blocks' variables).  The blocks are written tiny so the
+  whole file trains in seconds.
+
+Usage: python tools/check_docs.py [--no-run]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+FENCE_RE = re.compile(r"^```python\n(.*?)^```", re.MULTILINE | re.DOTALL)
+
+
+def doc_files() -> list[Path]:
+    return [REPO / "README.md"] + sorted((REPO / "docs").glob("*.md"))
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's heading -> anchor slug (enough of it for our docs)."""
+    s = re.sub(r"`([^`]*)`", r"\1", heading.strip()).lower()
+    s = re.sub(r"[^\w\- ]", "", s)
+    return s.replace(" ", "-")
+
+
+def check_links(files: list[Path] | None = None) -> list[str]:
+    """-> list of 'file: broken link' problems (empty = all good)."""
+    problems: list[str] = []
+    for md in files or doc_files():
+        text = md.read_text()
+        for target in LINK_RE.findall(text):
+            if re.match(r"^[a-z][a-z0-9+.-]*:", target):   # http:, mailto:
+                continue
+            path_part, _, fragment = target.partition("#")
+            if not path_part:                  # same-file anchor
+                dest = md
+            else:
+                dest = (md.parent / path_part).resolve()
+                if REPO not in dest.parents and dest != REPO:
+                    continue                   # web-relative (CI badge)
+                if not dest.exists():
+                    problems.append(f"{md.relative_to(REPO)}: broken link "
+                                    f"-> {target}")
+                    continue
+            if fragment and dest.suffix == ".md":
+                slugs = {github_slug(h)
+                         for h in HEADING_RE.findall(dest.read_text())}
+                if fragment not in slugs:
+                    problems.append(f"{md.relative_to(REPO)}: missing "
+                                    f"anchor -> {target}")
+    return problems
+
+
+def python_blocks(md: Path) -> list[str]:
+    return FENCE_RE.findall(md.read_text())
+
+
+def run_examples(md: Path | None = None, verbose: bool = True) -> None:
+    """Execute the ```python blocks of docs/run_api.md in one shared
+    namespace; raises on the first failing block."""
+    md = md or REPO / "docs" / "run_api.md"
+    blocks = python_blocks(md)
+    if not blocks:
+        raise AssertionError(f"{md}: no python examples found")
+    ns: dict = {"__name__": "__docs__"}
+    for i, block in enumerate(blocks):
+        if verbose:
+            head = block.strip().splitlines()[0]
+            print(f"[check_docs] {md.name} block {i + 1}/{len(blocks)}: "
+                  f"{head}")
+        exec(compile(block, f"{md.name}#block{i + 1}", "exec"), ns)  # noqa: S102
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--no-run", action="store_true",
+                    help="link check only, skip executing the examples")
+    args = ap.parse_args()
+    problems = check_links()
+    for p in problems:
+        print(f"[check_docs] FAIL {p}")
+    if problems:
+        return 1
+    print(f"[check_docs] links OK across "
+          f"{', '.join(f.name for f in doc_files())}")
+    if not args.no_run:
+        # the distributed example in run_api.md wants host devices; set
+        # the flag before the first jax import
+        os.environ.setdefault("XLA_FLAGS",
+                              "--xla_force_host_platform_device_count=8")
+        run_examples()
+        print("[check_docs] examples OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
