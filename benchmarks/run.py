@@ -4,6 +4,8 @@ Emits ``name,us_per_call,derived`` CSV rows:
   * graphdiff_bench      — Fig. 4 (graph-difference transfer + encoder
                            throughput + sharded streaming)
   * scaling_bench        — Fig. 5 strong scaling + Fig. 7 weak scaling
+                           (+ the elastic ``rescale`` smoke row: re-shard
+                           payload bytes + time-to-recompose)
   * partition_compare    — Table 2 (snapshot vs hypergraph vertex part.)
   * checkpoint_bench     — §3.1/§6.2 (memory/time vs nb)
   * kernel_bench         — hot-spot op microbenchmarks
@@ -38,6 +40,8 @@ def main() -> None:
         ("graphdiff", lambda: graphdiff_bench.run(
             **({"n": 256, "t": 12} if smoke else {}))),
         ("scaling", scaling_bench.run),
+        ("rescale", lambda: scaling_bench.rescale_smoke(
+            **({"n": 32, "t": 8} if smoke else {}))),
         ("partition_compare", partition_compare.run),
         ("checkpoint", lambda: checkpoint_bench.run(
             **({"n": 128, "t": 16} if smoke else {}))),

@@ -261,6 +261,55 @@ def streamed_scaling(model: str = "tmgcn", n: int = 128, t0: int = 8,
                    f"{us_sync / max(us_pipe, 1e-9):.2f}")
 
 
+def rescale_smoke(model: str = "tmgcn", n: int = 64, t: int = 16) -> None:
+    """Elastic rescale cost row: re-shard payload bytes + measured
+    time-to-recompose at one P_old -> P_new block boundary.
+
+    The payload (carries + grown replicas, ``cv.rescale_payload``) is
+    O(model state); the recompose time covers the state re-shard AND the
+    re-slice of the remaining per-shard delta streams — both paid once
+    per realized event, never per round.  Needs >= 2 host devices
+    (records a skipped row otherwise).
+    """
+    from repro.data.dyngnn import DTDGPipeline
+
+    n_dev = len(jax.devices())
+    nb = 2
+    win = t // nb
+    # largest grow target that slices the block and fits the devices
+    candidates = [p for p in (2, 4, 8) if p <= n_dev and win % p == 0]
+    if n_dev < 2 or not candidates:
+        record(f"rescale_smoke/{model}/skipped", 0.0,
+               f"no width in (2,4,8) divides win={win} on {n_dev} "
+               "devices")
+        return
+    p1 = max(candidates)
+    p0 = p1 // 2
+    smooth = {"tmgcn": "mproduct", "cdgcn": "none",
+              "evolvegcn": "edgelife"}[model]
+    ds = synthetic_dataset(n, t, density=3.0, churn=0.1,
+                           smoothing_mode=smooth, seed=0)
+    pipe = DTDGPipeline(ds, nb=nb)
+    cfg = models.DynGNNConfig(model=model, num_nodes=n, num_steps=t,
+                              window=3, checkpoint_blocks=nb)
+    engine = Engine(RunConfig(
+        model=cfg, data=InMemoryDTDG(ds, pipeline=pipe),
+        plan=ExecutionPlan(mode="streamed_mesh", shards=p0, num_epochs=1,
+                           rescale=((1, p1),)),
+        optimizer=adamw.AdamWConfig(lr=1e-2, total_steps=100),
+        log_fn=_SILENT))
+    # one COLD fit: the recompose cost of a new (width, boundary) pair is
+    # exactly what the elastic runtime pays at the boundary (repeat fits
+    # would hit the stream/step caches and report ~0)
+    res = engine.fit()
+    ev = res.rescale_report.events[0]
+    grew = max(p1 - p0, 0)
+    record(f"rescale_smoke/{model}/P{p0}->P{p1}/recompose",
+           ev.recompose_s * 1e6,
+           f"payload_bytes={ev.payload_bytes} block={ev.block} "
+           f"grew_replicas={grew} rounds={len(res.losses)}")
+
+
 def modeled_weak_scaling(model: str = "tmgcn") -> None:
     """Fig. 7 setting: T=256, f=3, N doubling from 2^14 with P."""
     t, f_den, feat, layers = 256, 3.0, 6, 2
@@ -289,6 +338,7 @@ def run() -> None:
         modeled_strong_scaling(m)
     measured_strong_scaling("tmgcn")
     streamed_scaling("tmgcn")
+    rescale_smoke("tmgcn")
     for m in ("tmgcn", "evolvegcn"):
         modeled_weak_scaling(m)
 

@@ -68,6 +68,29 @@ def streamed_shard_volume(num_steps: int, p: int, block_size: int,
     return fulls * bytes_full + max(owned - fulls, 0.0) * bytes_delta
 
 
+def rescale_payload(carry_bytes: float, state_bytes: float, old_p: int,
+                    new_p: int) -> float:
+    """Bytes crossing the links at ONE elastic rescale P_old -> P_new
+    (``repro.elastic``): the vertex-sharded temporal carries are re-laid
+    out over the new mesh (one gather/scatter of the full carry tree),
+    and — only when the mesh GROWS — the replicated train state (params +
+    optimizer) is shipped once to each newly added device.  Shrinking
+    moves no replicas: the surviving devices already hold them.
+
+    The total is O(model state + block-boundary carries), independent of
+    T and of the stream volume — the reason elasticity is cheap under
+    fixed-volume snapshot partitioning: changing P re-blocks the
+    timeline and re-slices the delta streams, but the O(T*N) transfer
+    volume itself is the same at any P, so only boundary state moves.
+    """
+    if old_p < 1 or new_p < 1:
+        raise ValueError(f"processor counts must be >= 1, got "
+                         f"{old_p} -> {new_p}")
+    if old_p == new_p:
+        return 0.0
+    return float(carry_bytes) + max(new_p - old_p, 0) * float(state_bytes)
+
+
 def allgather_vertex_volume(t: int, n: int, feat: int, layers: int,
                             p: int) -> float:
     """Regular-pattern vertex baseline: per layer & snapshot every

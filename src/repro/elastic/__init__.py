@@ -1,0 +1,44 @@
+"""``repro.elastic`` — rescale the distributed stream mid-run.
+
+The paper's fixed-volume snapshot distribution makes elasticity cheap:
+communication stays O(T*N) at ANY snapshot-parallel width P, so changing
+P mid-fit only requires re-blocking the timeline at the next
+checkpoint-block boundary and moving the boundary state.  This package
+turns that observation into a subsystem:
+
+* :class:`~repro.elastic.controller.RescaleController` — consumes resize
+  events (a scripted ``(block, new_p)`` schedule and/or a
+  ``PreemptionGuard``-driven shrink) and defers every change to the next
+  block boundary;
+* :mod:`~repro.elastic.reshard` — the one gather/scatter that moves
+  carries + train state onto the new mesh, with byte accounting that
+  matches ``dist.comm_volume.rescale_payload``;
+* :func:`~repro.elastic.train.train_elastic_streamed` — the segment loop
+  that re-slices the per-shard delta streams from the boundary
+  (``stream.sharded.encode_time_sliced(start_step=...)``), rebuilds the
+  prefetch rings on the new mesh, and records every event on a
+  :class:`~repro.elastic.controller.RescaleReport`;
+* round-granular checkpoint/resume: a run checkpointed at one width
+  restores onto any other legal width.
+
+Engine surface: ``ExecutionPlan(rescale=((block, new_p), ...),
+rescale_on_preempt=w)`` and ``RunResult.rescale_report`` — see
+``docs/run_api.md`` and the "Elasticity" section of
+``docs/architecture.md``.  Losses are invariant under any rescale
+trajectory (``tests/test_elastic.py`` pins P=4 -> 8 -> 2 against the
+serial single-device reference).
+"""
+
+from repro.elastic.controller import (RescaleController, RescaleEvent,
+                                      RescaleReport)
+from repro.elastic.reshard import (replicate_on, rescale_payload_bytes,
+                                   reshard_carries, tree_bytes)
+from repro.elastic.train import (ElasticRuntime, ElasticStreamState,
+                                 train_elastic_streamed, validate_widths)
+
+__all__ = [
+    "ElasticRuntime", "ElasticStreamState", "RescaleController",
+    "RescaleEvent", "RescaleReport", "replicate_on",
+    "rescale_payload_bytes", "reshard_carries", "train_elastic_streamed",
+    "tree_bytes", "validate_widths",
+]

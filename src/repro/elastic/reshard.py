@@ -1,0 +1,71 @@
+"""One gather/scatter moves a live run onto a new mesh.
+
+The entire data-movement cost of an elastic rescale lives in this
+module, and it is O(model state), independent of the trace length:
+
+* **temporal carries** — the only block-boundary activations (paper
+  §3.1's ``pi_b``).  They live vertex-sharded on the old mesh; one
+  ``jax.device_put`` per leaf onto the new mesh's
+  ``stream_carry_specs`` sharding re-lays them out (XLA lowers the
+  cross-mesh placement to a single gather/scatter per array);
+* **train state** — params + optimizer moments are replicated, so a
+  GROWING mesh ships one replica to each newly added device and a
+  shrinking mesh moves nothing (survivors already hold replicas).
+
+``rescale_payload_bytes`` is the measured-tree instantiation of the
+analytic ``repro.dist.comm_volume.rescale_payload`` — the trainer's
+:class:`~repro.elastic.controller.RescaleEvent` records exactly what the
+analytic model predicts, so the benchmark rows and the report can never
+drift apart.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.dist import comm_volume as cv
+from repro.dist import sharding as shardlib
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes of every array leaf in ``tree`` (0 for None)."""
+    if tree is None:
+        return 0
+    return int(sum(x.nbytes for x in jax.tree.leaves(tree)))
+
+
+def replicate_on(mesh, tree):
+    """Commit every leaf of ``tree`` replicated over ``mesh``.
+
+    Used for params/optimizer state at a width change: arrays committed
+    to the OLD mesh's devices must be re-committed before the new mesh's
+    jitted step may consume them.
+    """
+    sh = NamedSharding(mesh, PartitionSpec())
+    return jax.tree.map(lambda x: jax.device_put(x, sh), tree)
+
+
+def reshard_carries(cfg, carries, mesh, axis: str = "data"):
+    """Temporal carries -> their stream shardings on ``mesh``.
+
+    Accepts carries committed to any previous mesh OR host arrays (a
+    restored checkpoint): either way each leaf lands with the
+    vertex-sharded/replicated layout ``dist.sharding.stream_carry_specs``
+    prescribes for the snapshot-parallel streamed step.
+    """
+    shardings = shardlib.named(mesh, shardlib.stream_carry_specs(cfg, axis))
+    return jax.tree.map(jax.device_put, carries, shardings)
+
+
+def rescale_payload_bytes(params, opt_state, carries, old_p: int,
+                          new_p: int) -> int:
+    """Bytes one P_old -> P_new rescale moves, from the live trees.
+
+    Same quantity as ``comm_volume.rescale_payload`` — this just
+    measures ``carry_bytes`` / ``state_bytes`` off the actual pytrees
+    instead of taking them as arguments.
+    """
+    carry_b = tree_bytes(carries)
+    state_b = tree_bytes(params) + tree_bytes(opt_state)
+    return int(cv.rescale_payload(carry_b, state_b, old_p, new_p))

@@ -1,0 +1,288 @@
+"""Mid-run recomposition of the distributed stream (the elastic loop).
+
+``train_elastic_streamed`` drives the same per-round protocol as
+``stream.distributed.train_distributed_streamed`` but in SEGMENTS of
+constant snapshot-parallel width.  At every checkpoint-block boundary it
+asks the :class:`~repro.elastic.controller.RescaleController` what width
+the next block should train under; when the answer changes it
+
+1. re-commits params + optimizer state onto the new mesh and re-shards
+   the temporal carries with one gather/scatter
+   (``repro.elastic.reshard``, bytes accounted by
+   ``dist.comm_volume.rescale_payload``),
+2. re-slices the REMAINING per-shard delta streams for the new width
+   from that boundary (``stream.sharded.encode_time_sliced(start_step)``
+   — legal because every block slice opens with a self-contained
+   ``FullSnapshot``),
+3. rebuilds prefetch rings / ``DeltaApplier`` buffers on the new mesh
+   (the segment call constructs them per mesh), and
+4. records a :class:`RescaleEvent` on the run's ``RescaleReport``.
+
+The hard invariant: rescaling is SCHEDULE, not math.  Each block is one
+mean-CE AdamW step over ``win`` snapshots whatever P computes it, and
+carries cross boundaries by placement change only — so the loss stream
+under any rescale trajectory stays pinned to the serial single-device
+reference at block granularity (``tests/test_elastic.py``), pipelined or
+not.
+
+Checkpointing rides on the same boundaries: every ``ckpt_every`` rounds
+(and on an unabsorbed SIGTERM) the loop saves params/opt/carries plus
+the data cursor, and a restored run continues from that cursor — on ANY
+legal width, since the checkpoint is mesh-agnostic (``repro.ckpt``).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+
+from repro.core import models as mdl
+from repro.elastic import reshard
+from repro.elastic.controller import (RescaleController, RescaleEvent,
+                                      RescaleReport)
+from repro.optim import adamw
+from repro.stream import distributed as sdist
+from repro.stream import encoder as enc
+from repro.stream import sharded as stream_sharded
+from repro.stream import train_loop as tl
+
+
+class ElasticRuntime:
+    """Caches that survive rescale events and repeated fits.
+
+    Meshes and compiled steps are keyed by width (a width that comes
+    back reuses its executable); encoded per-shard streams are keyed by
+    width alone and encoded ONCE from block 0 — a from-boundary request
+    is served by slicing that encoding (see ``shard_streams``), so only
+    the first appearance of a width pays the encode, measured into
+    ``RescaleEvent.recompose_s``.
+    """
+
+    def __init__(self, cfg, opt_cfg, axis: str = "data",
+                 a2a_chunks: int = 1):
+        self.cfg, self.opt_cfg, self.axis = cfg, opt_cfg, axis
+        self.a2a_chunks = a2a_chunks
+        self.meshes: dict = {}
+        self.steps: dict = {}
+        self.streams: dict = {}
+
+    def mesh(self, p: int):
+        if p not in self.meshes:
+            from repro.launch.mesh import make_host_mesh
+            self.meshes[p] = make_host_mesh(data=p, model=1)
+        return self.meshes[p]
+
+    def step(self, p: int):
+        if p not in self.steps:
+            self.steps[p] = sdist.make_dist_stream_step(
+                self.cfg, self.mesh(p), self.opt_cfg, self.axis,
+                a2a_chunks=self.a2a_chunks)
+        return self.steps[p]
+
+    def shard_streams(self, p: int, start_block: int, snapshots, values,
+                      max_edges: int, win: int, stats):
+        """Per-shard streams for width ``p`` from ``start_block`` on.
+
+        The from-boundary encoding equals the tail of the from-zero
+        encoding (every block slice opens with a self-contained
+        ``FullSnapshot``; pinned by ``tests/test_elastic.py``), so a
+        boundary request is a LIST SLICE of the cached per-width
+        encoding — checkpoint ticks and repeated boundaries cost no
+        re-encode and no extra retained memory.
+        """
+        if p not in self.streams:
+            self.streams[p] = stream_sharded.encode_time_sliced(
+                snapshots, values, self.cfg.num_nodes, max_edges, win, p,
+                stats)
+        if start_block == 0:
+            return self.streams[p]
+        bsl = win // p
+        return [s[start_block * bsl:] for s in self.streams[p]]
+
+
+@dataclass
+class ElasticStreamState:
+    """What the elastic loop hands back to the Engine worker."""
+
+    params: dict
+    opt_state: dict
+    losses: list
+    report: RescaleReport
+    cursor: int             # global rounds completed == resume point
+    completed: bool         # False = preempted (checkpointed, resumable)
+    carries: object = field(default=None, repr=False)
+
+
+def validate_widths(widths, win: int, num_nodes: int,
+                    num_devices: int) -> None:
+    """Every width a rescale policy can ask for must be realizable: fit
+    the attached devices, divide the block (each round is sliced over
+    the shards) and the vertex axis (N-sharded temporal stage).  The one
+    rule set — ``Engine.resolve`` and the elastic loop both call it."""
+    for p in widths:
+        if p < 1:
+            raise ValueError(f"rescale width must be >= 1, got {p}")
+        if p > num_devices:
+            raise ValueError(f"rescale width {p} exceeds the {num_devices} "
+                             "attached devices")
+        if win % p:
+            raise ValueError(f"rescale width {p} does not divide the "
+                             f"checkpoint block size {win}")
+        if num_nodes % p:
+            raise ValueError(f"rescale width {p} does not divide num_nodes "
+                             f"{num_nodes} (vertex-sharded temporal "
+                             "stage); pad the vertex axis")
+
+
+def _ckpt_tree(cfg, params, opt_state, carries):
+    # carries is None exactly at epoch boundaries; the restore side
+    # ignores the values there, but the pytree structure must match.
+    if carries is None:
+        carries = mdl.init_carries(cfg, params)
+    return {"params": params, "opt": opt_state, "carries": carries}
+
+
+def train_elastic_streamed(cfg, snapshots, values, frames, labels, *,
+                           controller: RescaleController,
+                           axis: str = "data",
+                           block_size: int | None = None,
+                           num_epochs: int = 1, overlap: bool = True,
+                           prefetch_depth: int = 2, a2a_chunks: int = 1,
+                           pipeline_rounds: bool = False,
+                           opt_cfg: adamw.AdamWConfig | None = None,
+                           params: dict | None = None, opt_state=None,
+                           stats: enc.DeltaStats | None = None,
+                           max_edges: int | None = None,
+                           runtime: ElasticRuntime | None = None,
+                           ckpt=None, ckpt_every: int = 0,
+                           start_cursor: int = 0, carries=None,
+                           log_every: int = 10,
+                           log_fn=None) -> ElasticStreamState:
+    """Distributed streamed training whose width P may change mid-run.
+
+    Semantics are those of ``train_distributed_streamed`` round for
+    round; the controller only decides WHICH mesh computes each block.
+    ``start_cursor``/``carries`` resume a checkpointed run (global round
+    cursor; carries may come host-gathered from the checkpoint — they
+    are re-placed onto the current mesh here).  ``ckpt``/``ckpt_every``
+    enable round-granular checkpointing (a ``repro.ckpt.Checkpointer``;
+    0 = only on preemption).
+    """
+    t_steps = len(snapshots)
+    win = block_size or max(t_steps // max(cfg.checkpoint_blocks, 1), 1)
+    if t_steps % win:
+        raise ValueError(f"trace length {t_steps} must be a multiple of "
+                         f"block_size {win}")
+    rpe = t_steps // win                    # rounds (blocks) per epoch
+    total = num_epochs * rpe
+    if not 0 <= start_cursor <= total:
+        raise ValueError(f"start_cursor {start_cursor} outside the run's "
+                         f"{total} rounds")
+    max_edges = max_edges or tl.default_max_edges(snapshots)
+    if stats is None:
+        stats = enc.measure_stats(snapshots, cfg.num_nodes, win, max_edges)
+    opt_cfg = opt_cfg or adamw.AdamWConfig(
+        lr=1e-2, warmup_steps=10, total_steps=num_epochs * t_steps,
+        weight_decay=0.0)
+    if params is None:
+        params = mdl.init_params(jax.random.PRNGKey(0), cfg)
+    if opt_state is None:
+        opt_state = adamw.init_state(params)
+    rt = runtime or ElasticRuntime(cfg, opt_cfg, axis, a2a_chunks)
+    validate_widths(set(controller.widths), win, cfg.num_nodes,
+                    len(jax.devices()))
+
+    report = RescaleReport(resumed_from=start_cursor or None)
+    losses: list[float] = []
+    completed = True
+    p = controller.initial_p
+    r = start_cursor
+
+    def save(blocking=False):
+        if ckpt is not None:
+            ckpt.save(r, _ckpt_tree(cfg, params, opt_state, carries),
+                      extra={"cursor": r, "p": p,
+                             "rounds_per_epoch": rpe},
+                      blocking=blocking)
+
+    while r < total:
+        epoch, rb = divmod(r, rpe)
+        if rb == 0 and r != start_cursor:
+            carries = None                  # epoch boundary: fresh carries
+        new_p, cause = controller.width_at(r, p)
+        if new_p != p:
+            t0 = time.perf_counter()
+            mesh2 = rt.mesh(new_p)
+            payload = reshard.rescale_payload_bytes(params, opt_state,
+                                                    carries, p, new_p)
+            params = reshard.replicate_on(mesh2, params)
+            opt_state = reshard.replicate_on(mesh2, opt_state)
+            if carries is not None:
+                carries = reshard.reshard_carries(cfg, carries, mesh2, axis)
+            # stream recompose is part of the same boundary: re-slice the
+            # remaining timeline for the new width so the measured
+            # recompose time covers re-encode + re-shard
+            rt.shard_streams(new_p, rb, snapshots, values, max_edges, win,
+                             stats)
+            dt = time.perf_counter() - t0
+            report.events.append(RescaleEvent(
+                block=r, old_p=p, new_p=new_p, payload_bytes=payload,
+                recompose_s=dt, cause=cause))
+            if log_fn is not None:
+                log_fn(f"elastic: rescale P {p} -> {new_p} at block {r} "
+                       f"({cause}; payload {payload} B, recompose "
+                       f"{dt * 1e3:.1f} ms)")
+            p = new_p
+        elif carries is not None:
+            # resume path: host-gathered checkpoint carries need their
+            # mesh placement (no-op for carries already on this mesh)
+            carries = reshard.reshard_carries(cfg, carries, rt.mesh(p),
+                                              axis)
+
+        # segment end: next scripted boundary / epoch end / ckpt tick
+        seg_end = (epoch + 1) * rpe
+        nxt = controller.next_boundary(r)
+        if nxt is not None:
+            seg_end = min(seg_end, nxt)
+        if ckpt is not None and ckpt_every:
+            seg_end = min(seg_end, ((r // ckpt_every) + 1) * ckpt_every)
+
+        bsl = win // p
+        streams_full = rt.shard_streams(p, rb, snapshots, values,
+                                        max_edges, win, stats)
+        seg_streams = [s[:(seg_end - r) * bsl] for s in streams_full]
+        report.segments.append(
+            (r, p, [sum(i.payload_bytes for i in s) for s in seg_streams]))
+        st = sdist.train_distributed_streamed(
+            cfg, snapshots, values, frames, labels, mesh=rt.mesh(p),
+            axis=axis, block_size=win, num_epochs=1, overlap=overlap,
+            prefetch_depth=prefetch_depth, a2a_chunks=a2a_chunks,
+            pipeline_rounds=pipeline_rounds, opt_cfg=opt_cfg,
+            params=params, opt_state=opt_state, stats=stats,
+            max_edges=max_edges, step_fn=rt.step(p),
+            shard_streams=seg_streams, start_round=rb, carries=carries,
+            stop_fn=(lambda _blk: controller.interrupt())
+            if controller.guard is not None else None,
+            log_every=log_every, log_fn=log_fn)
+        params, opt_state, carries = st.params, st.opt_state, st.carries
+        losses.extend(st.losses)
+        r += len(st.losses)
+
+        if controller.should_stop(p):
+            save(blocking=True)
+            completed = False
+            report.preempted = True
+            if log_fn is not None:
+                log_fn(f"elastic: preempted at block {r}; "
+                       + ("checkpointed, " if ckpt is not None else "")
+                       + "exiting cleanly")
+            break
+        if (ckpt is not None and ckpt_every and r % ckpt_every == 0):
+            save()
+    if ckpt is not None:
+        ckpt.wait()
+    return ElasticStreamState(params=params, opt_state=opt_state,
+                              losses=losses, report=report, cursor=r,
+                              completed=completed, carries=carries)

@@ -16,6 +16,9 @@ answer (exercised in tests with host devices):
   * **Preemption.**  ``PreemptionGuard`` converts SIGTERM into a flag the
     train loop polls; on preemption it saves a final checkpoint and exits
     cleanly (restart resumes from the data cursor in ckpt extra).
+
+The live mid-run recomposition built on these pieces — changing the
+snapshot-parallel width P without restarting — lives in ``repro.elastic``.
 """
 
 from __future__ import annotations
@@ -52,7 +55,21 @@ def dyngnn_elastic_blocks(num_steps: int, num_procs: int,
                           target_bsize: int) -> tuple[int, int]:
     """(nb, bsize) for a new processor count: bsize must be a multiple of P
     and divide T; prefer the largest bsize <= target (fewer blocks = less
-    recompute + better GD benefit ratio (bsize-P)/bsize, §6.2)."""
+    recompute + better GD benefit ratio (bsize-P)/bsize, §6.2).
+
+    Raises when no legal blocking exists (``num_steps % num_procs != 0``):
+    every returned ``(nb, bsize)`` satisfies ``nb * bsize == num_steps``,
+    so callers never receive a blocking that does not tile the timeline —
+    pad the trace or change P instead.
+    """
+    if num_steps < 1 or num_procs < 1:
+        raise ValueError(f"num_steps ({num_steps}) and num_procs "
+                         f"({num_procs}) must be >= 1")
+    if num_steps % num_procs:
+        raise ValueError(
+            f"timeline of {num_steps} steps cannot be tiled into blocks "
+            f"divisible by {num_procs} processors (num_steps % num_procs "
+            "!= 0); pad the trace or pick a P that divides it")
     best = None
     for nb in range(1, num_steps + 1):
         if num_steps % nb:
@@ -64,26 +81,53 @@ def dyngnn_elastic_blocks(num_steps: int, num_procs: int,
             best = (nb, bsize)
             break
     if best is None:
-        # fall back to bsize == P (minimum legal block)
+        # fall back to bsize == P (minimum legal block; tiles exactly
+        # because num_procs divides num_steps)
         nb = num_steps // num_procs
         return nb, num_procs
     return best
 
 
-class PreemptionGuard:
-    """SIGTERM -> graceful checkpoint-and-exit flag."""
+def _chainable(prev) -> bool:
+    """A previous handler worth forwarding to: a real Python callable,
+    not the SIG_DFL/SIG_IGN sentinels and not the default SIGINT handler
+    (chaining that one would re-raise KeyboardInterrupt — exactly the
+    hard kill the guard exists to absorb)."""
+    return (callable(prev)
+            and prev not in (signal.SIG_DFL, signal.SIG_IGN,
+                             signal.default_int_handler))
 
-    def __init__(self):
+
+class PreemptionGuard:
+    """SIGTERM (and optionally SIGINT) -> graceful checkpoint-and-exit flag.
+
+    Composes instead of clobbering: a previously installed handler still
+    runs after the flag is set, so nested guards all observe the signal
+    and wrapping launchers keep their own cleanup hooks.  ``__exit__``
+    restores exactly the handlers it replaced, so nested guards unwind
+    in LIFO order.
+    """
+
+    def __init__(self, catch_sigint: bool = False):
         self.preempted = False
-        self._orig = None
+        self._signals = (signal.SIGTERM,) + (
+            (signal.SIGINT,) if catch_sigint else ())
+        self._orig: dict = {}
 
     def __enter__(self):
-        def handler(signum, frame):
-            self.preempted = True
+        for sig in self._signals:
+            prev = signal.getsignal(sig)
 
-        self._orig = signal.signal(signal.SIGTERM, handler)
+            def handler(signum, frame, _prev=prev):
+                self.preempted = True
+                if _chainable(_prev):
+                    _prev(signum, frame)
+
+            self._orig[sig] = signal.signal(sig, handler)
         return self
 
     def __exit__(self, *exc):
-        signal.signal(signal.SIGTERM, self._orig)
+        for sig, orig in self._orig.items():
+            signal.signal(sig, orig)
+        self._orig.clear()
         return False

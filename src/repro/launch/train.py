@@ -19,6 +19,17 @@ import jax
 import numpy as np
 
 
+def _parse_rescale(spec: str) -> tuple[int, int]:
+    """'BLOCK:P' -> (block, new_p) for the plan's rescale schedule."""
+    try:
+        block, p = spec.split(":")
+        return int(block), int(p)
+    except ValueError:
+        raise SystemExit(
+            f"--rescale-at expects BLOCK:P (e.g. 2:8), got {spec!r}"
+        ) from None
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -51,7 +62,25 @@ def main() -> None:
                          "delta-apply/staging before forcing round r's "
                          "loss (double-buffered edge rings; losses "
                          "unchanged)")
+    ap.add_argument("--rescale-at", action="append", default=[],
+                    metavar="BLOCK:P",
+                    help="with --stream --mesh: elastically rescale the "
+                         "snapshot-parallel width to P at global round "
+                         "BLOCK (repeatable; realized at the "
+                         "checkpoint-block boundary; losses unchanged)")
+    ap.add_argument("--rescale-on-preempt", type=int, default=0,
+                    metavar="P",
+                    help="with --stream --mesh: absorb SIGTERM by "
+                         "shrinking to width P at the next block "
+                         "boundary instead of stopping")
     args = ap.parse_args()
+    if (args.rescale_at or args.rescale_on_preempt) and not args.stream:
+        # fail loudly, never drop the flags: the eager branch has no
+        # rescale plumbing, so a typo'd command would otherwise run a
+        # plain fixed-width schedule without a word
+        raise SystemExit("--rescale-at/--rescale-on-preempt recompose the "
+                         "distributed stream; they require "
+                         "--stream --mesh P")
 
     from repro.configs import registry
     from repro.launch.mesh import make_host_mesh
@@ -74,20 +103,29 @@ def main() -> None:
                               window=cfg.window)
         if args.stream:
             # non-divisible num_nodes auto-pads inside the plan (logged);
-            # the pipelining flags pass through VERBATIM so a combination
-            # the plan cannot honor (e.g. --a2a-chunks without --mesh)
-            # fails loudly below instead of silently running a no-op
+            # the pipelining/rescale flags pass through VERBATIM so a
+            # combination the plan cannot honor (e.g. --a2a-chunks or
+            # --rescale-at without --mesh) fails loudly below instead of
+            # silently running a no-op
             plan = ExecutionPlan(
                 mode="streamed_mesh" if args.mesh > 1 else "streamed",
                 shards=max(args.mesh, 1), num_epochs=args.epochs,
                 overlap=not args.no_overlap,
                 a2a_chunks=args.a2a_chunks,
-                pipeline_rounds=args.pipeline_rounds)
-            if args.ckpt_dir:
-                print("note: --ckpt-dir is ignored with --stream "
-                      "(checkpointing is wired for the eager schedule "
-                      "only)")
+                pipeline_rounds=args.pipeline_rounds,
+                rescale=tuple(_parse_rescale(s) for s in args.rescale_at),
+                rescale_on_preempt=args.rescale_on_preempt)
             ckpt = None
+            if args.ckpt_dir:
+                if plan.mode == "streamed_mesh":
+                    # round-granular mesh-agnostic checkpoints: SIGTERM
+                    # saves the data cursor; a rerun resumes it, on any
+                    # legal --mesh width
+                    ckpt = CheckpointSpec(args.ckpt_dir)
+                else:
+                    print("note: --ckpt-dir is ignored with single-device "
+                          "--stream (checkpointing is wired for the eager "
+                          "and streamed --mesh schedules)")
         else:
             plan = ExecutionPlan(mode="eager", shards=dp,
                                  num_steps=args.steps,
@@ -109,6 +147,25 @@ def main() -> None:
         if args.stream:
             final = (f"{result.losses[-1]:.4f}" if result.losses else "n/a")
             if plan.mode == "streamed_mesh":
+                rsc = result.rescale_report
+                if rsc is not None and (rsc.events or rsc.preempted
+                                        or rsc.resumed_from is not None):
+                    # elastic summary: the width trajectory, not a single
+                    # per-device figure (each segment has its own P)
+                    evs = ", ".join(
+                        f"{e.old_p}->{e.new_p}@block{e.block}"
+                        f" ({e.cause}, {e.payload_bytes} B)"
+                        for e in rsc.events) or "none realized"
+                    if not rsc.preempted:
+                        state_txt = "completed"
+                    elif ckpt is not None:
+                        state_txt = "preempted+checkpointed"
+                    else:       # no --ckpt-dir: progress was NOT saved
+                        state_txt = "preempted (no checkpoint configured)"
+                    print(f"streamed {result.state.step} block rounds "
+                          f"elastically ({state_txt}), final loss "
+                          f"{final}, rescales: {evs}")
+                    return
                 # report what actually crossed the links: the per-shard
                 # time-sliced streams (extra slice-boundary fulls), not
                 # the single-device global stream

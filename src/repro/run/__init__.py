@@ -23,9 +23,13 @@ CI, so it cannot drift from this package); subsystem map and the
 pipelined-round data flow: ``docs/architecture.md``.  The
 ``ExecutionPlan`` overlap knobs (``overlap`` / ``prefetch_depth`` /
 ``a2a_chunks`` / ``pipeline_rounds``) are pure schedule knobs — they
-never change losses.
+never change losses; so is the elastic rescale policy (``rescale`` /
+``rescale_on_preempt`` — the snapshot-parallel width changes at
+checkpoint-block boundaries, executed by ``repro.elastic`` and recorded
+on ``RunResult.rescale_report``).
 """
 
+from repro.elastic.controller import RescaleEvent, RescaleReport
 from repro.run.config import (CheckpointSpec, ResolvedRun, RunConfig,
                               RunResult)
 from repro.run.data import (DataSource, EdgeListDTDG, InMemoryDTDG,
@@ -36,7 +40,7 @@ from repro.run.plan import ExecutionPlan
 
 __all__ = [
     "CheckpointSpec", "DataSource", "EdgeListDTDG", "Engine",
-    "ExecutionPlan", "InMemoryDTDG", "ResolvedRun", "RunConfig",
-    "RunResult", "SyntheticTrace", "pad_dataset", "read_edgelist",
-    "write_edgelist",
+    "ExecutionPlan", "InMemoryDTDG", "RescaleEvent", "RescaleReport",
+    "ResolvedRun", "RunConfig", "RunResult", "SyntheticTrace",
+    "pad_dataset", "read_edgelist", "write_edgelist",
 ]

@@ -24,6 +24,7 @@ from typing import Any, Callable
 
 from repro.core.models import DynGNNConfig
 from repro.data.dyngnn import DTDGDataset, DTDGPipeline
+from repro.elastic.controller import RescaleReport
 from repro.optim.adamw import AdamWConfig
 from repro.run.data import DataSource
 from repro.run.plan import ExecutionPlan
@@ -33,7 +34,13 @@ from repro.train.trainer import TrainState
 
 @dataclass(frozen=True)
 class CheckpointSpec:
-    """Where/how often to checkpoint (eager schedule only, for now)."""
+    """Where/how often to checkpoint.
+
+    ``every`` counts eager steps on the eager schedule and rounds
+    (= checkpoint blocks) on the streamed_mesh schedule; streamed_mesh
+    checkpoints are mesh-agnostic, so a run saved at one width resumes
+    onto any legal width (``repro.elastic``).
+    """
 
     directory: str
     every: int = 50
@@ -89,7 +96,11 @@ class RunResult:
     per-device stream payloads of the streamed_mesh schedule.
     ``a2a_chunks`` / ``pipeline_rounds`` echo the overlap knobs the run
     actually executed with (pure schedule knobs — two results that
-    differ only here carry identical ``losses``).
+    differ only here carry identical ``losses``).  ``rescale_report``
+    records the elastic events of a rescaled/checkpointed streamed_mesh
+    run (realized width changes, per-segment stream bytes, preemption /
+    resume cursors); rescaling is also pure schedule — the losses match
+    the fixed-width run.
     """
 
     state: TrainState
@@ -99,3 +110,4 @@ class RunResult:
     per_shard_bytes: list[int] | None = None
     a2a_chunks: int = 1
     pipeline_rounds: bool = False
+    rescale_report: RescaleReport | None = None

@@ -45,11 +45,13 @@ class Engine:
             return self._resolved
         c = self.config
         plan = c.plan
-        if c.checkpoint is not None and plan.mode != "eager":
+        if (c.checkpoint is not None
+                and plan.mode not in ("eager", "streamed_mesh")):
             raise ValueError(
                 "RunConfig.checkpoint is only wired for plan.mode='eager' "
-                f"(got {plan.mode!r}); the streamed schedules do not "
-                "checkpoint yet — drop the CheckpointSpec or switch modes")
+                f"and 'streamed_mesh' (got {plan.mode!r}); the "
+                "single-device streamed schedule does not checkpoint yet "
+                "— drop the CheckpointSpec or switch modes")
 
         nominal = c.data.num_nodes
         ds = None
@@ -64,6 +66,15 @@ class Engine:
 
         nb = plan.resolved_blocks(ds.num_steps, c.model.checkpoint_blocks,
                                   log_fn=c.log_fn)
+        if plan.is_elastic:
+            # every width the rescale policy can switch to must slice the
+            # resolved block and the (possibly lcm-padded) vertex axis —
+            # fail at resolve time, not three segments into the run
+            import jax as _jax
+            from repro.elastic.train import validate_widths
+            validate_widths(plan.rescale_widths, win=ds.num_steps // nb,
+                            num_nodes=ds.num_nodes,
+                            num_devices=len(_jax.devices()))
         cfg = c.model
         if (cfg.num_nodes != ds.num_nodes or cfg.num_steps != ds.num_steps
                 or cfg.checkpoint_blocks != nb):
@@ -94,13 +105,21 @@ class Engine:
         return self._last
 
     def resume(self) -> RunResult:
-        """Explicit restart from the configured checkpoint directory."""
+        """Explicit restart from the configured checkpoint directory.
+
+        streamed_mesh checkpoints are mesh-agnostic: the resuming plan
+        may use a DIFFERENT snapshot-parallel width than the one the
+        checkpoint was written at — the worker re-shards the restored
+        carries onto the current mesh and re-slices the remaining delta
+        streams from the saved cursor (``repro.elastic``).
+        """
         rr = self.resolve()
         if rr.checkpoint is None:
             raise ValueError("resume() needs RunConfig.checkpoint")
-        if rr.plan.mode != "eager":
+        if rr.plan.mode not in ("eager", "streamed_mesh"):
             raise NotImplementedError("checkpoint resume is only wired for "
-                                      "the eager schedule")
+                                      "the eager and streamed_mesh "
+                                      "schedules")
         from repro.ckpt.checkpoint import Checkpointer
         if Checkpointer(rr.checkpoint.directory).latest_step() is None:
             raise FileNotFoundError(

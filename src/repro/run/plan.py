@@ -13,11 +13,15 @@ to hard-code in ``if args.stream / if mesh is not None`` branches:
   with ``SystemExit`` the plan auto-pads ``num_nodes`` up to the next
   multiple of the mesh and re-blocks the timeline
   (``repro.ft.elastic.dyngnn_elastic_blocks``) when the checkpoint block
-  does not divide over the shards, logging both adjustments.
+  does not divide over the shards, logging both adjustments;
+* the elastic rescale policy (``rescale`` / ``rescale_on_preempt``) —
+  WHEN the snapshot-parallel width changes mid-run; executed by
+  ``repro.elastic`` at checkpoint-block boundaries.
 """
 
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 from typing import Any, Callable
 
@@ -46,6 +50,17 @@ class ExecutionPlan:
       per-shard edge rings and dispatch round r+1's delta-apply +
       staging while round r's temporal-stage collectives execute
       (one round in flight; losses pinned to the serial schedule).
+
+    Elastic rescale policy (streamed_mesh; executed by ``repro.elastic``,
+    also pure schedule — losses stay pinned to the serial reference):
+
+    * ``rescale`` — scripted ``((block, new_p), ...)`` events: the
+      snapshot-parallel width changes to ``new_p`` at global round
+      (= checkpoint-block) boundary ``block``;
+    * ``rescale_on_preempt`` — shrink-to width: a SIGTERM mid-fit is
+      absorbed by rescaling down to this width at the next boundary
+      instead of stopping (0 = off; with a ``checkpoint`` configured and
+      this off, SIGTERM checkpoints the cursor and exits cleanly).
     """
 
     mode: str = "eager"             # eager | streamed | streamed_mesh
@@ -59,6 +74,8 @@ class ExecutionPlan:
     a2a_chunks: int = 1             # chunked all-to-alls (mesh schedules)
     pipeline_rounds: bool = False   # round-level pipelining (streamed_mesh)
     auto_pad: bool = True
+    rescale: tuple = ()             # ((block, new_p), ...) resize script
+    rescale_on_preempt: int = 0     # SIGTERM shrink-to width (0 = off)
 
     def validate(self) -> None:
         if self.mode not in MODES:
@@ -86,6 +103,32 @@ class ExecutionPlan:
             raise ValueError("plan.pipeline_rounds pipelines the "
                              "distributed streamed round loop; it requires "
                              "mode='streamed_mesh'")
+        if self.rescale_on_preempt < 0:
+            raise ValueError("plan.rescale_on_preempt is a shrink-to "
+                             "width (0 = off); it cannot be negative")
+        if ((self.rescale or self.rescale_on_preempt)
+                and self.mode != "streamed_mesh"):
+            raise ValueError("plan.rescale/rescale_on_preempt recompose "
+                             "the distributed stream at checkpoint-block "
+                             "boundaries; they require "
+                             "mode='streamed_mesh'")
+        if self.rescale:
+            # the one schedule rule set, shared with RescaleController
+            from repro.elastic.controller import validate_schedule
+            validate_schedule(self.rescale)
+
+    @property
+    def rescale_widths(self) -> tuple:
+        """Every width the elastic policy can switch to."""
+        ws = tuple(int(p) for _, p in self.rescale)
+        if self.rescale_on_preempt:
+            ws += (self.rescale_on_preempt,)
+        return ws
+
+    @property
+    def is_elastic(self) -> bool:
+        """True when this plan can change width mid-run."""
+        return bool(self.rescale) or self.rescale_on_preempt > 0
 
     @property
     def num_shards(self) -> int:
@@ -117,8 +160,12 @@ class ExecutionPlan:
         The vertex-sharded temporal stage needs N % P == 0; rather than
         refusing to run (the old launcher raised ``SystemExit``) the plan
         pads the vertex axis with isolated nodes and logs the padding.
+        An elastic plan pads to the lcm of EVERY width its rescale policy
+        can switch to, so the vertex axis stays divisible mid-run.
         """
         p = self.num_shards
+        for w in self.rescale_widths:
+            p = math.lcm(p, w)
         if not self.wants_mesh or num_nodes % p == 0:
             return num_nodes
         if not self.auto_pad:

@@ -10,7 +10,11 @@ and drives the corresponding training loop:
 * ``fit_streamed``      — per-snapshot online training over the
   graph-diff delta stream (``repro.stream.train_loop``);
 * ``fit_streamed_mesh`` — per-shard delta streams + snapshot-parallel
-  shard_map (``repro.stream.distributed``).
+  shard_map (``repro.stream.distributed``); when the plan is elastic
+  (``rescale`` / ``rescale_on_preempt``) or a checkpoint is configured
+  it routes through ``repro.elastic.train_elastic_streamed`` — the
+  segment loop that can change the snapshot-parallel width at
+  checkpoint-block boundaries and checkpoint/resume the data cursor.
 
 These are the ONLY call sites of the stream training loops outside the
 deprecation shims; everything user-facing goes through the Engine.
@@ -129,6 +133,8 @@ def fit_streamed_mesh(rr: ResolvedRun) -> RunResult:
     opt_cfg = rr.opt_cfg or adamw.AdamWConfig(
         lr=1e-2, warmup_steps=10,
         total_steps=plan.num_epochs * ds.num_steps, weight_decay=0.0)
+    if plan.is_elastic or rr.checkpoint is not None:
+        return _fit_streamed_mesh_elastic(rr, opt_cfg)
     params, opt_state = _init(rr)
     step_fn = rr.cache.get("dist_step")
     if step_fn is None:
@@ -157,3 +163,98 @@ def fit_streamed_mesh(rr: ResolvedRun) -> RunResult:
                      per_shard_bytes=st.per_shard_bytes,
                      a2a_chunks=plan.a2a_chunks,
                      pipeline_rounds=plan.pipeline_rounds)
+
+
+def _fit_streamed_mesh_elastic(rr: ResolvedRun,
+                               opt_cfg: adamw.AdamWConfig) -> RunResult:
+    """Elastic / checkpointed variant of the streamed_mesh schedule.
+
+    Same round protocol, driven in constant-width segments by
+    ``repro.elastic.train_elastic_streamed``: scripted rescales and
+    SIGTERM shrinks recompose the stream at block boundaries, and a
+    configured ``CheckpointSpec`` enables round-granular save + resume
+    (onto any legal width — the checkpoint is mesh-agnostic).
+    """
+    from repro import elastic as el
+
+    plan, ds, pipe = rr.plan, rr.ds, rr.pipeline
+    params, opt_state = _init(rr)
+    rt = rr.cache.get("elastic_runtime")
+    if rt is None or rt.a2a_chunks != plan.a2a_chunks:
+        rt = el.ElasticRuntime(rr.cfg, opt_cfg, plan.mesh_axis,
+                               a2a_chunks=plan.a2a_chunks)
+        rt.meshes.setdefault(plan.num_shards, rr.mesh)
+        rr.cache["elastic_runtime"] = rt
+
+    ckpt = Checkpointer(rr.checkpoint.directory) if rr.checkpoint else None
+    rpe = ds.num_steps // pipe.bsize
+    start, carries = 0, None
+    if ckpt is not None and ckpt.latest_step() is not None:
+        like = {"params": params, "opt": opt_state,
+                "carries": dyn_models.init_carries(rr.cfg, params)}
+        tree, extra = ckpt.restore(ckpt.latest_step(), like)
+        start = int(extra.get("cursor", 0))
+        saved_rpe = int(extra.get("rounds_per_epoch", rpe))
+        if saved_rpe != rpe:
+            # the cursor counts rounds of the ORIGINAL block size; under
+            # a plan that re-blocks the timeline it would land mid-block
+            # and silently skip (or repeat) snapshots
+            raise ValueError(
+                f"checkpoint under {rr.checkpoint.directory} was written "
+                f"with {saved_rpe} rounds per epoch but this plan blocks "
+                f"the timeline into {rpe}; resume with a shard width that "
+                "preserves the checkpoint block size")
+        params, opt_state = tree["params"], tree["opt"]
+        # carries only matter mid-epoch; at an epoch boundary the loop
+        # re-initializes them (the uninterrupted-run semantics)
+        carries = tree["carries"] if start % rpe else None
+        rr.log_fn(f"resumed streamed_mesh run at round {start} "
+                  f"(checkpoint written at P={extra.get('p', '?')}, "
+                  f"resuming on P={plan.num_shards})")
+
+    # scripted boundaries BEFORE the resume cursor are history — realized
+    # (and recorded) by the run that wrote the checkpoint; replaying them
+    # would double-count the payload.  A boundary AT the cursor is still
+    # pending: events realize at the top of the iteration for their
+    # block, and checkpoints are written with cursor == segment end,
+    # i.e. before that iteration ran.
+    schedule = tuple((b, p) for b, p in plan.rescale if int(b) >= start)
+    with PreemptionGuard() as guard:
+        controller = el.RescaleController(
+            initial_p=plan.num_shards, schedule=schedule, guard=guard,
+            shrink_to=plan.rescale_on_preempt or None)
+        st = el.train_elastic_streamed(
+            rr.cfg, ds.snapshots, ds.values, np.asarray(ds.frames),
+            np.asarray(ds.labels), controller=controller,
+            axis=plan.mesh_axis, block_size=pipe.bsize,
+            num_epochs=plan.num_epochs, overlap=plan.overlap,
+            prefetch_depth=plan.prefetch_depth,
+            a2a_chunks=plan.a2a_chunks,
+            pipeline_rounds=plan.pipeline_rounds, opt_cfg=opt_cfg,
+            params=params, opt_state=opt_state, stats=pipe.stream_stats,
+            max_edges=pipe.max_edges, runtime=rt, ckpt=ckpt,
+            ckpt_every=(rr.checkpoint.every if rr.checkpoint else 0),
+            start_cursor=start, carries=carries, log_every=rr.log_every,
+            log_fn=rr.log_fn)
+
+    # a COMPLETED run that never changed width has one well-defined
+    # per-shard byte accounting: the first epoch's segments sum to
+    # exactly the encoded stream (epochs replay the same streams, so —
+    # like the fixed-width path — the stream is counted once, not per
+    # epoch).  Rescaled, resumed, or preempted runs report per-segment
+    # PLANNED payloads on the rescale_report instead (a preempted
+    # segment's tail never actually streamed).
+    per_shard = None
+    if (st.completed and not st.report.events
+            and st.report.resumed_from is None and st.report.segments):
+        first_epoch = [seg for seg in st.report.segments if seg[0] < rpe]
+        per_shard = [sum(seg[2][s] for seg in first_epoch)
+                     for s in range(len(first_epoch[0][2]))]
+    state = trainer.TrainState(params=st.params, opt_state=st.opt_state,
+                               step=st.cursor)
+    return RunResult(state=state, losses=st.losses,
+                     transfer_report=pipe.transfer_bytes(),
+                     per_shard_bytes=per_shard,
+                     a2a_chunks=plan.a2a_chunks,
+                     pipeline_rounds=plan.pipeline_rounds,
+                     rescale_report=st.report)

@@ -65,6 +65,7 @@ class DistStreamState:
     opt_state: dict
     losses: list
     per_shard_bytes: list = field(default_factory=list)
+    carries: object = None          # final temporal carries (mesh-sharded)
 
 
 def make_dist_stream_step(cfg: mdl.DynGNNConfig, mesh,
@@ -138,16 +139,23 @@ def init_sharded_carries(cfg: mdl.DynGNNConfig, params: dict, mesh,
     return jax.tree.map(jax.device_put, carries, shardings)
 
 
-def dist_round_stream(shard_streams, frames, labels, win: int, bsl: int):
+def dist_round_stream(shard_streams, frames, labels, win: int, bsl: int,
+                      start_round: int = 0):
     """Host iterator of one round's payloads: (per-shard delta items,
-    frames (win, N, F), labels (win, N))."""
+    frames (win, N, F), labels (win, N)).
+
+    ``start_round`` resumes mid-epoch: the given ``shard_streams`` begin
+    at that round's checkpoint-block boundary (see
+    ``sharded.encode_time_sliced(start_step=...)``), while frames/labels
+    stay globally indexed.
+    """
     num_shards = len(shard_streams)
     rounds = len(shard_streams[0]) // bsl
     for r in range(rounds):
         items = tuple(
             tuple(shard_streams[s][r * bsl + j] for j in range(bsl))
             for s in range(num_shards))
-        t0 = r * win
+        t0 = (start_round + r) * win
         yield (items, np.asarray(frames[t0:t0 + win]),
                np.asarray(labels[t0:t0 + win]))
 
@@ -213,6 +221,8 @@ def train_distributed_streamed(cfg: mdl.DynGNNConfig, snapshots, values,
                                stats: enc.DeltaStats | None = None,
                                max_edges: int | None = None,
                                step_fn=None, shard_streams=None,
+                               start_round: int = 0, carries=None,
+                               stop_fn=None,
                                log_every: int = 10,
                                log_fn=None) -> DistStreamState:
     """Stream the trace through snapshot-parallel distributed training.
@@ -239,6 +249,17 @@ def train_distributed_streamed(cfg: mdl.DynGNNConfig, snapshots, values,
     both must come from ``make_dist_stream_step`` /
     ``sharded.encode_time_sliced`` with matching (cfg, mesh, block,
     a2a_chunks) args.
+
+    ``start_round`` / ``carries`` / ``stop_fn`` are the resumable-from-
+    block entry the elastic rescale subsystem (``repro.elastic``) drives
+    segments through: run the rounds of ONE epoch from checkpoint-block
+    boundary ``start_round`` with explicit initial ``carries`` (None =
+    fresh zeros, the epoch-start semantics), and stop cleanly at the
+    next boundary when ``stop_fn(global_round)`` returns True (SIGTERM,
+    scheduled resize).  The final carries ride back on
+    ``DistStreamState.carries`` so the caller can re-shard them onto a
+    different mesh and continue — these knobs never change the losses of
+    the rounds that do run.
     """
     t_steps = len(snapshots)
     num_procs = mesh.shape[axis]
@@ -249,6 +270,10 @@ def train_distributed_streamed(cfg: mdl.DynGNNConfig, snapshots, values,
     if t_steps % win:
         raise ValueError(f"trace length {t_steps} must be a multiple of "
                          f"block_size {win}")
+    if (start_round or carries is not None) and num_epochs != 1:
+        raise ValueError(
+            "start_round/carries resume one epoch segment; run with "
+            "num_epochs=1 and loop epochs in the caller (repro.elastic)")
     bsl = win // num_procs
     max_edges = max_edges or tl.default_max_edges(snapshots)
     if stats is None and shard_streams is None:
@@ -267,7 +292,7 @@ def train_distributed_streamed(cfg: mdl.DynGNNConfig, snapshots, values,
     if shard_streams is None:
         shard_streams = stream_sharded.encode_time_sliced(
             snapshots, values, cfg.num_nodes, max_edges, win, num_procs,
-            stats)
+            stats, start_step=start_round * win)
     per_shard_bytes = [sum(i.payload_bytes for i in s)
                        for s in shard_streams]
 
@@ -305,8 +330,11 @@ def train_distributed_streamed(cfg: mdl.DynGNNConfig, snapshots, values,
                    f"pipelined={pipeline_rounds})")
 
     losses: list[float] = []
+    initial_carries = carries
+    stopped = False
     for _ in range(num_epochs):
-        host = dist_round_stream(shard_streams, frames, labels, win, bsl)
+        host = dist_round_stream(shard_streams, frames, labels, win, bsl,
+                                 start_round=start_round)
         if overlap:
             rounds = PrefetchIterator(host, stage_fn=stage_fn,
                                       depth=prefetch_depth)
@@ -316,14 +344,16 @@ def train_distributed_streamed(cfg: mdl.DynGNNConfig, snapshots, values,
                     for d in devices]
         stackers = [[SlotStacker(bsl) for _ in range(nbuf)]
                     for _ in devices]
-        carries = init_sharded_carries(cfg, params, mesh, axis)
+        carries = (initial_carries if initial_carries is not None
+                   else init_sharded_carries(cfg, params, mesh, axis))
+        initial_carries = None           # later epochs start fresh
         in_flight = None        # round r-1's device loss (pipeline_rounds)
         try:
             for r, (items, fr_g, lab_g) in enumerate(rounds):
                 assembled = reconstruct_round(r, items, appliers, stackers)
                 params, opt_state, carries, loss = step_fn(
                     params, opt_state, carries, fr_g, *assembled, lab_g,
-                    jnp.int32(r * win))
+                    jnp.int32((start_round + r) * win))
                 if pipeline_rounds:
                     # force the PREVIOUS round only now: round r's
                     # delta-applies and step are already dispatched, so
@@ -333,10 +363,16 @@ def train_distributed_streamed(cfg: mdl.DynGNNConfig, snapshots, values,
                     in_flight = loss
                 else:
                     emit(loss)
+                if stop_fn is not None and stop_fn(start_round + r):
+                    stopped = True
+                    break
             if in_flight is not None:   # drain the pipelined epoch tail
                 emit(in_flight)
         finally:
             if isinstance(rounds, PrefetchIterator):
                 rounds.close()
+        if stopped:
+            break
     return DistStreamState(params=params, opt_state=opt_state,
-                           losses=losses, per_shard_bytes=per_shard_bytes)
+                           losses=losses, per_shard_bytes=per_shard_bytes,
+                           carries=carries)

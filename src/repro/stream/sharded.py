@@ -39,7 +39,8 @@ def encode_time_sliced(snapshots: list[np.ndarray],
                        values: list[np.ndarray] | None,
                        num_nodes: int, max_edges: int, block_size: int,
                        num_shards: int,
-                       stats: enc.DeltaStats | None = None
+                       stats: enc.DeltaStats | None = None,
+                       start_step: int = 0
                        ) -> list[list[FullSnapshot | SnapshotDelta]]:
     """Per-shard streams: ``out[s][i]`` transfers shard s's i-th owned step.
 
@@ -48,7 +49,21 @@ def encode_time_sliced(snapshots: list[np.ndarray],
     from an empty device buffer.  Deltas within a slice reuse the global
     stats pads — churn between consecutive owned steps equals global
     consecutive-step churn because slices are contiguous.
+
+    ``start_step`` (a checkpoint-block boundary) starts the streams
+    mid-timeline: the elastic rescale subsystem (``repro.elastic``)
+    re-slices the remaining trace for a NEW shard count from the next
+    block boundary.  This is legal at exactly block granularity because
+    every slice opens with a self-contained ``FullSnapshot`` — no shard
+    ever needs decoder state from before the boundary, so the re-sliced
+    tail is identical to the tail of a from-zero encoding.
     """
+    if start_step % block_size:
+        raise ValueError(f"start_step {start_step} must be a checkpoint-"
+                         f"block boundary (multiple of {block_size})")
+    if start_step:
+        snapshots = snapshots[start_step:]
+        values = values[start_step:] if values is not None else None
     bsl = block_size // num_shards
     if stats is None:
         stats = enc.measure_stats(snapshots, num_nodes, block_size,

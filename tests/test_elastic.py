@@ -1,0 +1,475 @@
+"""Elastic rescale subsystem (``repro.elastic``) acceptance suite.
+
+The hard invariant: rescaling is SCHEDULE, never math.  A scripted
+mid-run rescale (P=4 -> 8 -> 2 on the 8-host-device mesh), a SIGTERM
+shrink, and a preempt -> checkpoint -> resume-on-a-different-P sequence
+must all reproduce the serial single-device slice reference at block
+granularity (<= 1e-5 relative).  Plus: the ``RescaleReport`` byte
+accounting matches ``dist.comm_volume.rescale_payload``, the stream
+recomposer's from-boundary re-slices equal the tail of a from-zero
+encoding, and the plan/controller validation rejects unrealizable
+policies loudly.
+"""
+
+import os
+import signal
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+
+from repro import elastic as el
+from repro.core import models as mdl
+from repro.core.graphdiff import FullSnapshot
+from repro.core.models import DynGNNConfig
+from repro.data.dyngnn import DTDGPipeline, synthetic_dataset
+from repro.dist import comm_volume as cv
+from repro.optim import adamw
+from repro.run import (CheckpointSpec, Engine, ExecutionPlan, InMemoryDTDG,
+                       RunConfig)
+from repro.stream import encoder as enc
+from repro.stream import sharded as stream_sharded
+from repro.stream import train_loop as stream_train
+
+N, T, NB = 48, 16, 2
+WIN = T // NB                      # 8 snapshots per round; rpe = 2
+
+
+def _silent(_msg):
+    return None
+
+
+@pytest.fixture(scope="module")
+def _trace():
+    ds = synthetic_dataset(N, T, density=2.0, churn=0.1,
+                           smoothing_mode="mproduct", window=3, seed=0)
+    cfg = DynGNNConfig(model="tmgcn", num_nodes=N, num_steps=T, window=3,
+                       checkpoint_blocks=NB)
+    return cfg, ds, DTDGPipeline(ds, nb=NB)
+
+
+@pytest.fixture(scope="module")
+def _serial_ref(_trace):
+    """Single-device slice-granularity reference over 2 epochs."""
+    cfg, ds, _ = _trace
+    st = stream_train.train_streamed(
+        cfg, ds.snapshots, ds.values, np.asarray(ds.frames),
+        np.asarray(ds.labels), num_epochs=2, overlap=False, slice_len=WIN)
+    return st.losses
+
+
+def _engine(cfg, ds, pipe, plan, **kw):
+    kw.setdefault("log_fn", _silent)
+    return Engine(RunConfig(model=cfg, data=InMemoryDTDG(ds, pipeline=pipe),
+                            plan=plan, **kw))
+
+
+def _expected_bytes():
+    """Carry/state byte totals of the test model, computed independently
+    of the run (the report must match comm_volume.rescale_payload on
+    exactly these)."""
+    cfg = DynGNNConfig(model="tmgcn", num_nodes=N, num_steps=T, window=3,
+                       checkpoint_blocks=NB)
+    params = mdl.init_params(jax.random.PRNGKey(0), cfg)
+    carry_b = el.tree_bytes(mdl.init_carries(cfg, params))
+    state_b = el.tree_bytes(params) + el.tree_bytes(
+        adamw.init_state(params))
+    return carry_b, state_b
+
+
+# ------------------------------------------------ acceptance: equivalence --
+
+@pytest.mark.skipif(len(jax.devices()) < 8, reason="needs 8 host devices")
+@pytest.mark.parametrize("pipeline", [False, True])
+def test_scripted_rescale_4_8_2_matches_serial_reference(_trace,
+                                                         _serial_ref,
+                                                         pipeline):
+    """The acceptance bar: P=4 -> 8 -> 2 mid-run (boundaries at global
+    rounds 1 and 3, both mid-epoch), with and without the chunked-round
+    pipeline, reproduces the serial reference loss stream at <= 1e-5
+    relative, and the RunResult's RescaleReport records every event with
+    re-shard bytes matching dist.comm_volume.rescale_payload."""
+    cfg, ds, pipe = _trace
+    res = _engine(cfg, ds, pipe, ExecutionPlan(
+        mode="streamed_mesh", shards=4, num_epochs=2,
+        rescale=((1, 8), (3, 2)),
+        a2a_chunks=2 if pipeline else 1,
+        pipeline_rounds=pipeline)).fit()
+    assert len(res.losses) == len(_serial_ref) == 2 * NB
+    np.testing.assert_allclose(res.losses, _serial_ref, rtol=1e-5)
+
+    rep = res.rescale_report
+    assert [(e.block, e.old_p, e.new_p) for e in rep.events] == \
+        [(1, 4, 8), (3, 8, 2)]
+    assert rep.widths == [4, 8, 2]
+    carry_b, state_b = _expected_bytes()
+    assert rep.events[0].payload_bytes == int(
+        cv.rescale_payload(carry_b, state_b, 4, 8))
+    assert rep.events[1].payload_bytes == int(
+        cv.rescale_payload(carry_b, state_b, 8, 2))
+    assert all(e.recompose_s >= 0 for e in rep.events)
+    # per-segment stream accounting: one entry per constant-width stretch
+    assert [(s[0], s[1]) for s in rep.segments] == \
+        [(0, 4), (1, 8), (2, 8), (3, 2)]
+    for start, p, per_shard in rep.segments:
+        assert len(per_shard) == p and all(b > 0 for b in per_shard)
+
+
+@pytest.mark.skipif(len(jax.devices()) < 4, reason="needs 4 host devices")
+def test_direct_elastic_loop_matches_reference(_trace, _serial_ref):
+    """train_elastic_streamed driven directly (no Engine): same
+    invariant, and the final params match a fixed-width run's shapes."""
+    cfg, ds, _ = _trace
+    ctrl = el.RescaleController(initial_p=2, schedule=((2, 4),))
+    st = el.train_elastic_streamed(
+        cfg, ds.snapshots, ds.values, np.asarray(ds.frames),
+        np.asarray(ds.labels), controller=ctrl, num_epochs=2)
+    assert st.completed and st.cursor == 4
+    np.testing.assert_allclose(st.losses, _serial_ref, rtol=1e-5)
+    assert [(e.old_p, e.new_p) for e in st.report.events] == [(2, 4)]
+
+
+# ------------------------------------------- preemption: shrink and stop ---
+
+@pytest.mark.skipif(len(jax.devices()) < 4, reason="needs 4 host devices")
+def test_preemption_shrink_continues_at_lower_width(_trace, _serial_ref):
+    """SIGTERM with rescale_on_preempt set: the run absorbs the capacity
+    loss at the next block boundary and completes — losses unchanged."""
+    cfg, ds, pipe = _trace
+    sent = []
+
+    def killer(msg):
+        if "dist stream round" in msg and not sent:
+            sent.append(1)
+            os.kill(os.getpid(), signal.SIGTERM)
+
+    res = _engine(cfg, ds, pipe,
+                  ExecutionPlan(mode="streamed_mesh", shards=4,
+                                num_epochs=2, rescale_on_preempt=2),
+                  log_fn=killer, log_every=1).fit()
+    np.testing.assert_allclose(res.losses, _serial_ref, rtol=1e-5)
+    rep = res.rescale_report
+    assert not rep.preempted                  # absorbed, not stopped
+    assert len(rep.events) == 1
+    ev = rep.events[0]
+    assert ev.cause == "preemption" and ev.new_p == 2 and ev.old_p == 4
+
+
+@pytest.mark.skipif(len(jax.devices()) < 8, reason="needs 8 host devices")
+def test_preempt_checkpoint_resume_onto_larger_mesh(_trace, _serial_ref):
+    """The end-to-end fault-tolerance path: SIGTERM mid-fit saves a
+    checkpoint with the data cursor; Engine.resume restores it onto a
+    DIFFERENT width (P=4 checkpoint -> P=8 mesh) and the concatenated
+    loss stream equals the uninterrupted run's."""
+    cfg, ds, pipe = _trace
+    tmp = tempfile.mkdtemp()
+    sent = []
+
+    def killer(msg):
+        if "dist stream round" in msg and not sent:
+            sent.append(1)
+            os.kill(os.getpid(), signal.SIGTERM)
+
+    first = _engine(cfg, ds, pipe,
+                    ExecutionPlan(mode="streamed_mesh", shards=4,
+                                  num_epochs=2),
+                    checkpoint=CheckpointSpec(tmp, every=100),
+                    log_fn=killer, log_every=1).fit()
+    assert first.rescale_report.preempted
+    assert 0 < len(first.losses) < 2 * NB
+    assert first.state.step == len(first.losses)
+
+    resumed = _engine(cfg, ds, pipe,
+                      ExecutionPlan(mode="streamed_mesh", shards=8,
+                                    num_epochs=2),
+                      checkpoint=CheckpointSpec(tmp, every=100)).resume()
+    assert resumed.rescale_report.resumed_from == first.state.step
+    assert resumed.state.step == 2 * NB
+    np.testing.assert_allclose(first.losses + resumed.losses, _serial_ref,
+                               rtol=1e-5)
+
+
+@pytest.mark.skipif(len(jax.devices()) < 4, reason="needs 4 host devices")
+def test_checkpointed_run_matches_plain_and_periodic_saves(_trace):
+    """A CheckpointSpec on a fixed-width streamed_mesh plan is pure
+    schedule: losses identical to the uncheckpointed run, per-shard byte
+    accounting intact, and every round boundary saved (every=1)."""
+    from repro.ckpt.checkpoint import Checkpointer
+    cfg, ds, pipe = _trace
+    plain = _engine(cfg, ds, pipe,
+                    ExecutionPlan(mode="streamed_mesh", shards=4,
+                                  num_epochs=2)).fit()
+    assert plain.rescale_report is None       # legacy path untouched
+    tmp = tempfile.mkdtemp()
+    ck = _engine(cfg, ds, pipe,
+                 ExecutionPlan(mode="streamed_mesh", shards=4,
+                               num_epochs=2),
+                 checkpoint=CheckpointSpec(tmp, every=1)).fit()
+    assert ck.losses == plain.losses
+    assert ck.per_shard_bytes is not None
+    assert sum(ck.per_shard_bytes) == sum(plain.per_shard_bytes)
+    assert Checkpointer(tmp).latest_step() == 2 * NB
+
+    # resuming a COMPLETE run trains zero new rounds (eager semantics)
+    done = _engine(cfg, ds, pipe,
+                   ExecutionPlan(mode="streamed_mesh", shards=4,
+                                 num_epochs=2),
+                   checkpoint=CheckpointSpec(tmp, every=1)).resume()
+    assert done.losses == [] and done.state.step == 2 * NB
+
+
+@pytest.mark.skipif(len(jax.devices()) < 8, reason="needs 8 host devices")
+def test_resume_rejects_reblocked_cursor(_trace):
+    """Regression: a checkpoint cursor counts rounds of the ORIGINAL
+    block size; resuming under a plan that re-blocks the timeline must
+    raise instead of silently skipping snapshots."""
+    cfg, ds, _ = _trace
+    import dataclasses
+    cfg4 = dataclasses.replace(cfg, checkpoint_blocks=4)   # win=4, rpe=4
+    ds4 = InMemoryDTDG(ds, pipeline=DTDGPipeline(ds, nb=4))
+    tmp = tempfile.mkdtemp()
+    sent = []
+
+    def killer(msg):
+        if "dist stream round" in msg and not sent:
+            sent.append(1)
+            os.kill(os.getpid(), signal.SIGTERM)
+
+    Engine(RunConfig(model=cfg4, data=ds4,
+                     plan=ExecutionPlan(mode="streamed_mesh", shards=4,
+                                        num_epochs=1),
+                     checkpoint=CheckpointSpec(tmp, every=100),
+                     log_fn=killer, log_every=1)).fit()
+    # shards=8 cannot slice win=4 -> the plan re-blocks to win=8, rpe=2:
+    # the saved cursor is meaningless there and must be refused
+    with pytest.raises(ValueError, match="rounds per epoch"):
+        Engine(RunConfig(model=cfg4, data=ds4,
+                         plan=ExecutionPlan(mode="streamed_mesh",
+                                            shards=8, num_epochs=1),
+                         checkpoint=CheckpointSpec(tmp, every=100),
+                         log_fn=_silent)).resume()
+
+
+@pytest.mark.skipif(len(jax.devices()) < 8, reason="needs 8 host devices")
+def test_resume_does_not_replay_realized_rescales(_trace, _serial_ref):
+    """Regression: rerunning the SAME elastic command after a preemption
+    must not re-record (and re-charge) scripted events the first run
+    already realized — only boundaries after the cursor may fire."""
+    cfg, ds, pipe = _trace
+    tmp = tempfile.mkdtemp()
+    killed = []
+
+    def killer(msg):
+        # preempt AFTER the block-1 rescale has been realized
+        if "dist stream round" in msg and "P=8" in msg and not killed:
+            killed.append(1)
+            os.kill(os.getpid(), signal.SIGTERM)
+
+    plan = ExecutionPlan(mode="streamed_mesh", shards=4, num_epochs=2,
+                         rescale=((1, 8),))
+    first = _engine(cfg, ds, pipe, plan,
+                    checkpoint=CheckpointSpec(tmp, every=100),
+                    log_fn=killer, log_every=1).fit()
+    assert first.rescale_report.preempted
+    assert [(e.block, e.new_p) for e in first.rescale_report.events] == \
+        [(1, 8)]
+    cursor = first.state.step
+    assert cursor > 1
+
+    resumed = _engine(cfg, ds, pipe, plan,
+                      checkpoint=CheckpointSpec(tmp, every=100)).resume()
+    # the block-1 event is history: not replayed, not double-counted
+    assert resumed.rescale_report.events == []
+    np.testing.assert_allclose(first.losses + resumed.losses, _serial_ref,
+                               rtol=1e-5)
+
+
+@pytest.mark.skipif(len(jax.devices()) < 8, reason="needs 8 host devices")
+def test_resume_realizes_event_scheduled_at_the_cursor(_trace,
+                                                       _serial_ref):
+    """Regression: a checkpoint written with cursor == a scripted
+    boundary means the event there has NOT been realized yet (events
+    fire at the top of their block's iteration) — resume must still
+    fire it, not filter it as history."""
+    cfg, ds, pipe = _trace
+    tmp = tempfile.mkdtemp()
+    sent = []
+
+    def killer(msg):
+        # SIGTERM during round 1: the segment stops at cursor=2, the
+        # exact block the scripted event is scheduled at
+        if "dist stream round" in msg and "P=4" in msg \
+                and len(sent) == 1:
+            os.kill(os.getpid(), signal.SIGTERM)
+        sent.append(1)
+
+    plan = ExecutionPlan(mode="streamed_mesh", shards=4, num_epochs=2,
+                         rescale=((2, 8),))
+    first = _engine(cfg, ds, pipe, plan,
+                    checkpoint=CheckpointSpec(tmp, every=100),
+                    log_fn=killer, log_every=1).fit()
+    assert first.rescale_report.preempted
+    assert first.state.step == 2                  # cursor == boundary
+    assert first.rescale_report.events == []      # not realized yet
+    # preempted run reports no per-shard total (its segment tail never
+    # streamed); the planned accounting lives on the report
+    assert first.per_shard_bytes is None
+
+    resumed = _engine(cfg, ds, pipe, plan,
+                      checkpoint=CheckpointSpec(tmp, every=100)).resume()
+    assert [(e.block, e.old_p, e.new_p)
+            for e in resumed.rescale_report.events] == [(2, 4, 8)]
+    np.testing.assert_allclose(first.losses + resumed.losses, _serial_ref,
+                               rtol=1e-5)
+
+
+# ----------------------------------------------- stream recompose ----------
+
+def test_encode_time_sliced_from_boundary_equals_tail(_trace):
+    """Re-slicing the remaining trace from a block boundary produces
+    exactly the tail of the from-zero encoding — the property that makes
+    block-granular recomposition legal."""
+    cfg, ds, pipe = _trace
+    p = 4
+    stats = pipe.stream_stats
+    full = stream_sharded.encode_time_sliced(
+        ds.snapshots, ds.values, N, pipe.max_edges, WIN, p, stats)
+    tail = stream_sharded.encode_time_sliced(
+        ds.snapshots, ds.values, N, pipe.max_edges, WIN, p, stats,
+        start_step=WIN)
+    bsl = WIN // p
+    for s in range(p):
+        want = full[s][bsl:]
+        got = tail[s]
+        assert len(got) == len(want)
+        assert isinstance(got[0], FullSnapshot)   # slice boundary full
+        for a, b in zip(got, want):
+            assert type(a) is type(b)
+            assert a.payload_bytes == b.payload_bytes
+            for fld in ("edges", "mask", "values", "drop_pos", "drop_mask",
+                        "add_edges", "add_mask"):
+                if hasattr(a, fld):
+                    np.testing.assert_array_equal(
+                        np.asarray(getattr(a, fld)),
+                        np.asarray(getattr(b, fld)))
+    with pytest.raises(ValueError, match="block boundary"):
+        stream_sharded.encode_time_sliced(
+            ds.snapshots, ds.values, N, pipe.max_edges, WIN, p, stats,
+            start_step=3)
+
+
+# ---------------------------------------------- policy / validation --------
+
+def test_controller_schedule_and_preemption_logic():
+    ctrl = el.RescaleController(initial_p=4, schedule=((1, 8), (3, 2)))
+    assert ctrl.scripted_width(0) == 4
+    assert ctrl.scripted_width(1) == 8
+    assert ctrl.scripted_width(2) == 8
+    assert ctrl.scripted_width(5) == 2
+    assert ctrl.next_boundary(0) == 1
+    assert ctrl.next_boundary(1) == 3
+    assert ctrl.next_boundary(3) is None
+    assert ctrl.widths == (4, 8, 2)
+    assert not ctrl.interrupt() and not ctrl.should_stop()
+
+    from repro.ft.elastic import PreemptionGuard
+    with PreemptionGuard() as g:
+        shrink = el.RescaleController(initial_p=4, guard=g, shrink_to=2)
+        stop = el.RescaleController(initial_p=4, guard=g)
+        os.kill(os.getpid(), signal.SIGTERM)
+        assert shrink.interrupt() and not shrink.should_stop()
+        assert stop.interrupt() and stop.should_stop()
+        # realizing the shrink absorbs the signal; it then sticks
+        assert shrink.width_at(2, 4) == (2, "preemption")
+        assert not shrink.interrupt()
+        assert shrink.width_at(3, 2) == (2, "preemption")
+        # a SECOND SIGTERM re-arms the guard: the one shrink is spent,
+        # so the only graceful answer left is checkpoint-and-exit
+        os.kill(os.getpid(), signal.SIGTERM)
+        assert shrink.interrupt() and shrink.should_stop()
+
+    with PreemptionGuard() as g2:
+        # a shrink target at/above the current width can only no-op:
+        # the signal must NOT be silently swallowed — it stops the run
+        noop = el.RescaleController(initial_p=4, guard=g2, shrink_to=4)
+        os.kill(os.getpid(), signal.SIGTERM)
+        assert noop.should_stop(4)
+        assert noop.width_at(1, 4) == (4, "scheduled")   # no absorb
+        assert noop.interrupt()                          # flag kept
+
+
+def test_controller_rejects_bad_schedules():
+    with pytest.raises(ValueError, match="strictly increasing"):
+        el.RescaleController(4, schedule=((2, 8), (2, 2)))
+    with pytest.raises(ValueError, match="block 1"):
+        el.RescaleController(4, schedule=((0, 8),))
+    with pytest.raises(ValueError, match="width must be >= 1"):
+        el.RescaleController(4, schedule=((1, 0),))
+    with pytest.raises(ValueError, match="pairs"):
+        el.RescaleController(4, schedule=(8,))
+
+
+def test_plan_rescale_validation():
+    with pytest.raises(ValueError, match="streamed_mesh"):
+        ExecutionPlan(mode="eager", rescale=((1, 2),)).validate()
+    with pytest.raises(ValueError, match="streamed_mesh"):
+        ExecutionPlan(mode="streamed", rescale_on_preempt=2).validate()
+    with pytest.raises(ValueError, match="strictly increasing"):
+        ExecutionPlan(mode="streamed_mesh", shards=2,
+                      rescale=((2, 4), (1, 2))).validate()
+    with pytest.raises(ValueError, match="block 0"):
+        ExecutionPlan(mode="streamed_mesh", shards=2,
+                      rescale=((0, 4),)).validate()
+    with pytest.raises(ValueError, match="pairs"):
+        ExecutionPlan(mode="streamed_mesh", shards=2,
+                      rescale=(4,)).validate()
+    ExecutionPlan(mode="streamed_mesh", shards=2, rescale=((1, 4),),
+                  rescale_on_preempt=1).validate()
+    plan = ExecutionPlan(mode="streamed_mesh", shards=2,
+                         rescale=((1, 4), (2, 8)), rescale_on_preempt=1)
+    assert plan.rescale_widths == (4, 8, 1)
+    assert plan.is_elastic
+    assert not ExecutionPlan(mode="streamed_mesh", shards=2).is_elastic
+
+
+@pytest.mark.skipif(len(jax.devices()) < 4, reason="needs 4 host devices")
+def test_resolve_rejects_unrealizable_widths(_trace):
+    cfg, ds, pipe = _trace
+    with pytest.raises(ValueError, match="does not divide the checkpoint"):
+        _engine(cfg, ds, pipe,
+                ExecutionPlan(mode="streamed_mesh", shards=4,
+                              rescale=((1, 3),))).resolve()
+    with pytest.raises(ValueError, match="exceeds the"):
+        _engine(cfg, ds, pipe,
+                ExecutionPlan(mode="streamed_mesh", shards=4,
+                              rescale=((1, 512),))).resolve()
+
+
+def test_plan_pads_vertex_axis_to_lcm_of_widths():
+    """An elastic plan pads num_nodes so EVERY width in the policy can
+    vertex-shard it — not just the initial one."""
+    plan = ExecutionPlan(mode="streamed_mesh", shards=2,
+                         rescale=((1, 8),))
+    assert plan.padded_num_nodes(50) == 56          # lcm(2, 8) = 8
+    assert plan.padded_num_nodes(48) == 48
+    fixed = ExecutionPlan(mode="streamed_mesh", shards=2)
+    assert fixed.padded_num_nodes(50) == 50         # unchanged behavior
+
+
+def test_validate_widths_direct():
+    el.validate_widths({1, 2, 4}, win=8, num_nodes=N, num_devices=8)
+    with pytest.raises(ValueError, match="does not divide the checkpoint"):
+        el.validate_widths({3}, win=8, num_nodes=N, num_devices=8)
+    with pytest.raises(ValueError, match="exceeds"):
+        el.validate_widths({16}, win=16, num_nodes=N, num_devices=8)
+    with pytest.raises(ValueError, match="num_nodes"):
+        el.validate_widths({5}, win=5, num_nodes=N, num_devices=8)
+
+
+def test_rescale_payload_model():
+    assert cv.rescale_payload(100.0, 10.0, 4, 4) == 0.0
+    assert cv.rescale_payload(100.0, 10.0, 4, 8) == 100.0 + 4 * 10.0
+    assert cv.rescale_payload(100.0, 10.0, 8, 2) == 100.0   # shrink: carries only
+    with pytest.raises(ValueError, match=">= 1"):
+        cv.rescale_payload(1.0, 1.0, 0, 4)

@@ -79,11 +79,74 @@ def test_dyngnn_elastic_blocks():
     assert bsize2 % 32 == 0
 
 
+@pytest.mark.parametrize("t,p", [(10, 3), (7, 2), (100, 16)])
+def test_dyngnn_elastic_blocks_always_tiles_or_raises(t, p):
+    """Regression: the old fallback returned (T//P, P) even when P does
+    not divide T — an illegal blocking with nb*bsize != T.  Now every
+    return tiles the timeline exactly, and the untileable case raises."""
+    if t % p:
+        with pytest.raises(ValueError, match="cannot be tiled"):
+            elastic.dyngnn_elastic_blocks(t, p, target_bsize=4)
+    else:
+        nb, bsize = elastic.dyngnn_elastic_blocks(t, p, target_bsize=4)
+        assert nb * bsize == t and bsize % p == 0
+    with pytest.raises(ValueError, match=">= 1"):
+        elastic.dyngnn_elastic_blocks(0, 1, target_bsize=4)
+    with pytest.raises(ValueError, match=">= 1"):
+        elastic.dyngnn_elastic_blocks(8, 0, target_bsize=4)
+
+
 def test_preemption_guard():
     with elastic.PreemptionGuard() as g:
         assert not g.preempted
         os.kill(os.getpid(), signal.SIGTERM)
         assert g.preempted   # handler flips the flag instead of killing us
+
+
+def test_preemption_guard_chains_previous_handler():
+    """An already-installed SIGTERM handler still runs (the guard chains,
+    never clobbers), and __exit__ restores it exactly."""
+    calls = []
+
+    def prev(signum, frame):
+        calls.append(signum)
+
+    before = signal.signal(signal.SIGTERM, prev)
+    try:
+        with elastic.PreemptionGuard() as g:
+            os.kill(os.getpid(), signal.SIGTERM)
+            assert g.preempted
+            assert calls == [signal.SIGTERM]      # chained through
+        assert signal.getsignal(signal.SIGTERM) is prev
+    finally:
+        signal.signal(signal.SIGTERM, before)
+
+
+def test_preemption_guard_nested_guards_restore_in_order():
+    """Nested guards: the inner handler chains to the outer one (both
+    flags flip on one signal) and each __exit__ restores the handler it
+    replaced — LIFO unwind leaves the process handler untouched."""
+    base = signal.getsignal(signal.SIGTERM)
+    with elastic.PreemptionGuard() as outer:
+        mid = signal.getsignal(signal.SIGTERM)
+        with elastic.PreemptionGuard() as inner:
+            os.kill(os.getpid(), signal.SIGTERM)
+            assert inner.preempted and outer.preempted
+        assert signal.getsignal(signal.SIGTERM) is mid
+    assert signal.getsignal(signal.SIGTERM) is base
+
+
+def test_preemption_guard_sigint_opt_in():
+    """catch_sigint=True converts SIGINT into the flag (no
+    KeyboardInterrupt); the default guard leaves SIGINT alone."""
+    default_int = signal.getsignal(signal.SIGINT)
+    with elastic.PreemptionGuard(catch_sigint=True) as g:
+        os.kill(os.getpid(), signal.SIGINT)   # would raise if unhandled
+        assert g.preempted
+    assert signal.getsignal(signal.SIGINT) is default_int
+    with elastic.PreemptionGuard() as g2:
+        assert signal.getsignal(signal.SIGINT) is default_int
+        assert not g2.preempted
 
 
 def test_straggler_timer_flags_outliers():
