@@ -10,6 +10,9 @@ Emits ``name,us_per_call,derived`` CSV rows:
   * checkpoint_bench     — §3.1/§6.2 (memory/time vs nb)
   * kernel_bench         — hot-spot op microbenchmarks
   * overlap_bench        — §6.5 compute/comm + stream transfer overlap
+  * serve_bench          — online serving: warm vs cold query latency
+                           (p50/p95 at batch 1/8/64) + live-ingest
+                           events/s
 
 ``--smoke`` runs tiny shapes (the CI smoke job); ``--only a,b`` restricts
 to named sections.
@@ -34,7 +37,8 @@ def main() -> None:
 
     header()
     from benchmarks import (checkpoint_bench, graphdiff_bench, kernel_bench,
-                            overlap_bench, partition_compare, scaling_bench)
+                            overlap_bench, partition_compare, scaling_bench,
+                            serve_bench)
     smoke = args.smoke
     sections = [
         ("graphdiff", lambda: graphdiff_bench.run(
@@ -47,6 +51,9 @@ def main() -> None:
             **({"n": 128, "t": 16} if smoke else {}))),
         ("kernels", kernel_bench.run),
         ("overlap", lambda: overlap_bench.run(smoke=smoke)),
+        ("serve", lambda: serve_bench.run(
+            **({"n": 96, "windows": 12, "events": 1200,
+                "batches": (1, 8), "iters": 4} if smoke else {}))),
     ]
     only = {s.strip() for s in args.only.split(",") if s.strip()}
     if only:

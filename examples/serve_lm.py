@@ -1,17 +1,13 @@
-"""Serve a small LM with batched requests: prefill + batched greedy decode
-through the KV cache (the serve_step the decode_* dry-run cells lower).
+"""Serve a small LM through the declarative surface: one ServeConfig,
+prefill + batched greedy decode through the KV cache behind
+``ServeEngine.generate()``.
 
   python examples/serve_lm.py --arch yi-6b --tokens 32
 """
 
 import argparse
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs import registry
-from repro.models import lm
+from repro.serve import ServeConfig, ServeEngine
 
 
 def main() -> None:
@@ -22,30 +18,15 @@ def main() -> None:
     ap.add_argument("--tokens", type=int, default=32)
     args = ap.parse_args()
 
-    cfg = registry.get_arch(args.arch).make_smoke_config()
-    params = lm.init_lm_params(jax.random.PRNGKey(0), cfg)
-    rng = np.random.default_rng(0)
-    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size,
-                                       (args.batch, args.prompt_len)),
-                          jnp.int32)
+    eng = ServeEngine(ServeConfig(
+        arch=args.arch, batch_sizes=(args.batch,),
+        prompt_len=args.prompt_len, max_tokens=args.tokens))
+    gen = eng.generate(batch_size=args.batch)
 
-    max_len = args.prompt_len + args.tokens
-    prefill = jax.jit(lambda p, t: lm.prefill(cfg, p, t, max_len=max_len))
-    decode = jax.jit(lambda p, c, t: lm.decode_step(cfg, p, c, t))
-
-    logits, cache = prefill(params, prompts)
-    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    out = [tok]
-    for _ in range(args.tokens - 1):
-        logits, cache = decode(params, cache, tok)
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        out.append(tok)
-    gen = np.stack([np.asarray(t) for t in out], axis=1)
     print(f"arch={args.arch} (smoke config) batch={args.batch}")
     for b in range(args.batch):
         print(f"  request {b}: generated {gen[b][:12].tolist()} ...")
-    print(f"served {args.batch}x{args.tokens} tokens; cache len "
-          f"{int(cache['len'][0])}")
+    print(eng.result().summary())
 
 
 if __name__ == "__main__":

@@ -1,21 +1,29 @@
-"""Serving launcher: ``python -m repro.launch.serve --arch <id>``.
+"""DEPRECATED serving launcher — use ``repro.serve``.
 
-Drives the serve_step path (prefill + batched decode through a KV cache)
-for the LM architectures, or batched CTR scoring for DIN — the same step
-functions the decode/serve dry-run cells validate at pod scale.
+``python -m repro.launch.serve`` remains as a thin shim over the
+declarative surface::
+
+    from repro.serve import ServeConfig, ServeEngine
+    eng = ServeEngine(ServeConfig(arch="yi-6b", prompt_len=32,
+                                  max_tokens=64, batch_sizes=(8,)))
+    eng.generate()
+
+See README "Migrating to repro.serve" for the flag mapping and
+``docs/serve_api.md`` for the full surface (including the dyngnn online
+path, which this legacy CLI never had).
 """
 
 from __future__ import annotations
 
 import argparse
-import time
-
-import jax
-import jax.numpy as jnp
-import numpy as np
+import warnings
 
 
-def main() -> None:
+def main(argv: list[str] | None = None) -> None:
+    warnings.warn(
+        "repro.launch.serve is deprecated: build a repro.serve.ServeConfig "
+        "and use ServeEngine instead (see README 'Migrating to "
+        "repro.serve')", DeprecationWarning, stacklevel=2)
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi-6b")
     ap.add_argument("--batch", type=int, default=8)
@@ -23,63 +31,19 @@ def main() -> None:
     ap.add_argument("--tokens", type=int, default=64)
     ap.add_argument("--requests", type=int, default=3,
                     help="number of batched request waves")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
-    from repro.configs import registry
-    arch = registry.get_arch(args.arch)
-
-    if arch.family == "recsys":
-        from repro.models import din as din_mod
-        cfg = arch.make_smoke_config()
-        params = din_mod.init_params(jax.random.PRNGKey(0), cfg)
-        rng = np.random.default_rng(0)
-        fwd = jax.jit(din_mod.forward)
-        for wave in range(args.requests):
-            b = args.batch
-            batch = {
-                "user_id": jnp.asarray(
-                    rng.integers(0, cfg.user_vocab, (b,)), jnp.int32),
-                "hist_items": jnp.asarray(
-                    rng.integers(0, cfg.item_vocab, (b, cfg.seq_len)),
-                    jnp.int32),
-                "hist_cates": jnp.asarray(
-                    rng.integers(0, cfg.cate_vocab, (b, cfg.seq_len)),
-                    jnp.int32),
-                "hist_mask": jnp.ones((b, cfg.seq_len), jnp.float32),
-                "target_item": jnp.asarray(
-                    rng.integers(0, cfg.item_vocab, (b,)), jnp.int32),
-                "target_cate": jnp.asarray(
-                    rng.integers(0, cfg.cate_vocab, (b,)), jnp.int32),
-            }
-            t0 = time.perf_counter()
-            logits = jax.block_until_ready(fwd(params, batch))
-            print(f"wave {wave}: scored {b} requests in "
-                  f"{(time.perf_counter() - t0) * 1e3:.1f} ms")
-        return
-
-    from repro.models import lm
-    cfg = arch.make_smoke_config()
-    params = lm.init_lm_params(jax.random.PRNGKey(0), cfg)
-    rng = np.random.default_rng(0)
-    max_len = args.prompt_len + args.tokens
-    prefill = jax.jit(lambda p, t: lm.prefill(cfg, p, t, max_len=max_len))
-    decode = jax.jit(lambda p, c, t: lm.decode_step(cfg, p, c, t))
+    from repro.serve import ServeConfig, ServeEngine
+    eng = ServeEngine(ServeConfig(
+        arch=args.arch, batch_sizes=(args.batch,),
+        prompt_len=args.prompt_len, max_tokens=args.tokens))
     for wave in range(args.requests):
-        prompts = jnp.asarray(
-            rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)),
-            jnp.int32)
-        t0 = time.perf_counter()
-        logits, cache = prefill(params, prompts)
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        n_gen = 1
-        for _ in range(args.tokens - 1):
-            logits, cache = decode(params, cache, tok)
-            tok = jnp.argmax(logits, -1).astype(jnp.int32)
-            n_gen += 1
-        jax.block_until_ready(tok)
-        dt = time.perf_counter() - t0
-        print(f"wave {wave}: {args.batch} x {n_gen} tokens in {dt:.2f} s "
-              f"({args.batch * n_gen / dt:.0f} tok/s)")
+        if eng.family == "recsys":
+            eng.score(batch_size=args.batch)
+        else:
+            eng.generate(batch_size=args.batch)
+        r = eng.result()
+        print(f"wave {wave}: {r.summary()}")
 
 
 if __name__ == "__main__":

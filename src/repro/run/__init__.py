@@ -18,6 +18,12 @@ The legacy entrypoints (``trainer.train_dyngnn`` /
 ``trainer.train_dyngnn_streamed``) remain as deprecation shims that
 construct a ``RunConfig`` and call the Engine.
 
+The ONLINE half of the surface is re-exported here too:
+``ServeConfig -> ServeEngine`` (from ``repro.serve``) mirrors
+``RunConfig -> Engine.fit()`` for inference against resident temporal
+state — ``Engine.fit()`` trains the params, ``ServeEngine`` serves
+them (``docs/serve_api.md``).
+
 Full reference with runnable examples: ``docs/run_api.md`` (executed by
 CI, so it cannot drift from this package); subsystem map and the
 pipelined-round data flow: ``docs/architecture.md``.  The
@@ -37,10 +43,15 @@ from repro.run.data import (DataSource, EdgeListDTDG, InMemoryDTDG,
                             write_edgelist)
 from repro.run.engine import Engine
 from repro.run.plan import ExecutionPlan
+# The serving counterpart of the training surface:
+# ServeConfig -> ServeEngine mirrors RunConfig -> Engine.fit()
+# (resident-state online inference; see docs/serve_api.md).
+from repro.serve import IngestSpec, ServeConfig, ServeEngine, ServeResult
 
 __all__ = [
     "CheckpointSpec", "DataSource", "EdgeListDTDG", "Engine",
-    "ExecutionPlan", "InMemoryDTDG", "RescaleEvent", "RescaleReport",
-    "ResolvedRun", "RunConfig", "RunResult", "SyntheticTrace",
+    "ExecutionPlan", "InMemoryDTDG", "IngestSpec", "RescaleEvent",
+    "RescaleReport", "ResolvedRun", "RunConfig", "RunResult",
+    "ServeConfig", "ServeEngine", "ServeResult", "SyntheticTrace",
     "pad_dataset", "read_edgelist", "write_edgelist",
 ]

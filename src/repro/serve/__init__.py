@@ -1,0 +1,36 @@
+"""``repro.serve`` — online inference against resident temporal state.
+
+The serving counterpart of ``repro.run``: a declarative
+``ServeConfig -> ServeEngine`` surface over the paper's streaming
+machinery.  For dyngnn, live CTDG events ingest incrementally
+(``OnlineIngester`` -> the graph-diff delta stream), one donated jitted
+state-advance per closed window rolls the temporal carries forward, and
+queries are micro-batched reads against the warm on-device embedding
+cache.  The lm and recsys serve paths (formerly ``repro.launch.serve``)
+live behind the same surface.
+
+    from repro.serve import IngestSpec, ServeConfig, ServeEngine
+
+    eng = ServeEngine(ServeConfig(
+        arch="paper_dyngnn",
+        ingest=IngestSpec(num_windows=16, time_range=(0.0, 1.0))))
+    eng.ingest(events)                 # live CTDG pushes
+    eng.advance()                      # close a window, roll state
+    scores = eng.query_nodes([3, 17])  # read resident state
+
+Full reference: ``docs/serve_api.md`` (CI-executed).
+"""
+
+from repro.serve.batching import PendingQuery, QueryBatcher
+from repro.serve.config import IngestSpec, ServeConfig, ServeResult
+from repro.serve.engine import ServeEngine, serve
+from repro.serve.ingest import LateEventError, OnlineIngester
+from repro.serve.state import (fresh_carries, make_advance_step,
+                               make_link_query_step, make_node_query_step)
+
+__all__ = [
+    "IngestSpec", "LateEventError", "OnlineIngester", "PendingQuery",
+    "QueryBatcher", "ServeConfig", "ServeEngine", "ServeResult",
+    "fresh_carries", "make_advance_step", "make_link_query_step",
+    "make_node_query_step", "serve",
+]

@@ -1,0 +1,344 @@
+"""``ServeEngine`` — the declarative online-inference counterpart of
+``repro.run.Engine``.
+
+``ServeEngine(ServeConfig).__init__`` resolves the model from the arch
+registry (or an explicit config object), builds the family's serving
+path once, and then answers requests against RESIDENT state:
+
+* dyngnn — the tentpole path.  Live CTDG events stream in through
+  :class:`~repro.serve.ingest.OnlineIngester`; each closed window's
+  delta item flows through the same ``DeltaApplier`` ring the trainer
+  uses, one donated jitted state-advance rolls the temporal carries
+  forward, and the window's node embeddings ``z_t`` stay cached on
+  device (the warm-state cache).  Queries — node scoring or link
+  prediction — are micro-batched reads against that cache: no
+  re-encoding, no model re-run.  After window t the served scores equal
+  the offline ``Engine.fit``-then-evaluate forward on the equivalent
+  DTDG to <=1e-5 (pinned in ``tests/test_serve.py``).
+* lm — prefill + greedy KV-cache decode (the path the legacy
+  ``repro.launch.serve`` drove), now behind ``generate()``.
+* recsys — batched DIN CTR scoring behind ``score()``.
+
+All families share the ``ServeResult`` counters (latency percentiles,
+events/s ingest, resyncs).  Full reference: ``docs/serve_api.md``.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import models as mdl
+from repro.serve.batching import QueryBatcher
+from repro.serve.config import IngestSpec, ServeConfig, ServeResult
+from repro.serve.ingest import OnlineIngester
+from repro.serve.state import (fresh_carries, make_advance_step,
+                               make_link_query_step, make_node_query_step)
+from repro.stream.encoder import StreamReport
+from repro.stream.prefetch import DeltaApplier, stage_item
+
+
+def _resolve(config: ServeConfig):
+    """-> (family, model config) from the registry and/or explicit model."""
+    if config.model is not None:
+        m = config.model
+        if isinstance(m, mdl.DynGNNConfig):
+            return "dyngnn", m
+        kind = type(m).__name__
+        if kind == "LMConfig":
+            return "lm", m
+        if kind == "DINConfig":
+            return "recsys", m
+        raise ValueError(f"cannot serve a model config of type {kind}; "
+                         "expected DynGNNConfig, LMConfig, or DINConfig")
+    from repro.configs import registry
+    arch = registry.get_arch(config.arch)
+    if arch.family == "gnn":
+        raise ValueError(
+            f"arch '{config.arch}' is a static-graph gnn; online serving "
+            "supports the dyngnn, lm, and recsys families")
+    return arch.family, arch.make_smoke_config()
+
+
+class ServeEngine:
+    """One serving session: resolved model + resident state + counters.
+
+    ``params`` (optionally with trained values, e.g.
+    ``Engine.fit().state.params``) defaults to a seed-keyed fresh init —
+    the same seed plumbing as ``RunConfig``.
+    """
+
+    def __init__(self, config: ServeConfig, params: dict | None = None,
+                 keep_history: bool = False):
+        config.validate()
+        self.config = config
+        self.family, self.model = _resolve(config)
+        self.report = StreamReport()
+        self._result = ServeResult(family=self.family, arch=config.arch)
+        key = jax.random.PRNGKey(config.seed)
+        self._rng = np.random.default_rng(config.seed)
+        if self.family == "dyngnn":
+            self._init_dyngnn(key, params, keep_history)
+        elif self.family == "lm":
+            self._init_lm(key, params)
+        else:
+            self._init_recsys(key, params)
+
+    def _family_guard(self, method: str, *families: str) -> None:
+        if self.family not in families:
+            raise ValueError(
+                f"{method}() serves the {'/'.join(families)} family; this "
+                f"engine is serving family={self.family!r}")
+
+    # ------------------------------------------------------------ dyngnn ---
+    def _init_dyngnn(self, key, params, keep_history) -> None:
+        cfg = self.model
+        if self.config.ingest is None:
+            raise ValueError(
+                "dyngnn serving needs ServeConfig.ingest (an IngestSpec "
+                "describing the live event-stream discretization)")
+        # NB: the §5.4 smoothing transforms (mproduct/edgelife) read
+        # FUTURE windows and are data-pipeline preprocessing — a live
+        # stream serves the raw alive-edge snapshots (the offline
+        # smoothing_mode="none" data path).
+        self.params = params if params is not None \
+            else mdl.init_params(key, cfg)
+        self.carries = fresh_carries(cfg, self.params)
+        self.ingester = OnlineIngester(self.config.ingest, cfg.num_nodes,
+                                       report=self.report,
+                                       keep_history=keep_history)
+        self.applier = DeltaApplier(self.config.ingest.max_edges)
+        self._advance = make_advance_step(cfg)
+        node_step, link_step = make_node_query_step(), make_link_query_step()
+        self.z: jax.Array | None = None     # warm-state cache (N, F')
+        self._node_batcher = QueryBatcher(
+            lambda ids: np.asarray(node_step(
+                self.params, self._warm_z(),
+                jax.device_put(ids.astype(np.int32)))),
+            self.config.batch_sizes, self.config.queue_depth)
+        self._link_batcher = QueryBatcher(
+            lambda pairs: np.asarray(link_step(
+                self.params, self._warm_z(),
+                jax.device_put(pairs.astype(np.int32)))),
+            self.config.batch_sizes, self.config.queue_depth)
+
+    def _warm_z(self) -> jax.Array:
+        if self.z is None:
+            raise ValueError("no resident state yet: ingest events and "
+                             "advance() at least one window before querying")
+        return self.z
+
+    def ingest(self, stream) -> int:
+        """Push live CTDG events into the open-window buffer."""
+        self._family_guard("ingest", "dyngnn")
+        t0 = time.perf_counter()
+        n = self.ingester.push(stream)
+        self._result.ingest_seconds += time.perf_counter() - t0
+        self._result.events_ingested = n
+        return n
+
+    def advance(self, windows: int = 1) -> jax.Array:
+        """Close ``windows`` time windows and roll the resident state.
+
+        Each window: encode the delta on host, stage it, reconstruct the
+        padded edge list on device (donated ring), one jitted
+        state-advance (donated carries), refresh the warm ``z`` cache.
+        Any queries still queued against the OLD state are flushed first
+        — the cache is never invalidated under a pending request.
+        """
+        self._family_guard("advance", "dyngnn")
+        self._node_batcher.flush()
+        self._link_batcher.flush()
+        t0 = time.perf_counter()
+        for _ in range(windows):
+            item, frame = self.ingester.close_window()
+            t_idx = self.ingester.next_window - 1
+            item, frame = stage_item((item, frame))
+            edges, mask, vals = self.applier.consume(item)
+            self.z, self.carries = self._advance(
+                self.params, self.carries, frame, edges, mask, vals,
+                jnp.int32(t_idx))
+        jax.block_until_ready(self.z)
+        self._result.ingest_seconds += time.perf_counter() - t0
+        self._result.windows_advanced = self.ingester.next_window
+        self._result.resyncs = self.report.resyncs
+        return self.z
+
+    def advance_all(self) -> jax.Array:
+        """Close every remaining configured window (bounded specs)."""
+        spec = self.config.ingest
+        if not spec.num_windows:
+            raise ValueError("advance_all() needs a bounded IngestSpec "
+                             "(num_windows set); open-ended streams "
+                             "advance(1) as windows elapse")
+        return self.advance(spec.num_windows - self.ingester.next_window)
+
+    def submit_nodes(self, ids):
+        """Queue a node-scoring request (micro-batched; see flush())."""
+        self._family_guard("submit_nodes", "dyngnn")
+        self._warm_z()
+        return self._node_batcher.submit(np.asarray(ids))
+
+    def submit_links(self, pairs):
+        """Queue a link-prediction request for (src, dst) pairs."""
+        self._family_guard("submit_links", "dyngnn")
+        self._warm_z()
+        return self._link_batcher.submit(np.asarray(pairs))
+
+    def flush(self) -> None:
+        """Score everything queued (both query types)."""
+        self._family_guard("flush", "dyngnn")
+        self._node_batcher.flush()
+        self._link_batcher.flush()
+
+    def query_nodes(self, ids) -> np.ndarray:
+        """Synchronous node scores (B, C) against resident state."""
+        self._family_guard("query_nodes", "dyngnn")
+        self._warm_z()
+        return self._node_batcher.query(np.asarray(ids))
+
+    def query_links(self, pairs) -> np.ndarray:
+        """Synchronous link logits (B, C) against resident state."""
+        self._family_guard("query_links", "dyngnn")
+        self._warm_z()
+        return self._link_batcher.query(np.asarray(pairs))
+
+    def cold_query_nodes(self, ids) -> np.ndarray:
+        """The no-resident-state baseline: re-encode the WHOLE ingested
+        history, re-run the model over every window, then score.
+
+        Needs ``keep_history=True``.  This is what each query would cost
+        without the warm cache — the denominator of the >=2x speedup
+        ``benchmarks/serve_bench.py`` demonstrates."""
+        self._family_guard("cold_query_nodes", "dyngnn")
+        cfg = self.model
+        applier = DeltaApplier(self.config.ingest.max_edges)
+        carries = fresh_carries(cfg, self.params)
+        advance = make_advance_step(cfg)
+        z = None
+        for t, (item, frame) in enumerate(self.ingester.replay()):
+            item, frame = stage_item((item, frame))
+            edges, mask, vals = applier.consume(item)
+            z, carries = advance(self.params, carries, frame, edges, mask,
+                                 vals, jnp.int32(t))
+        if z is None:
+            raise ValueError("no windows closed yet")
+        ids = jnp.asarray(np.asarray(ids).astype(np.int32))
+        return np.asarray(mdl.classify(self.params,
+                                       jnp.take(z, ids, axis=0)))
+
+    # ---------------------------------------------------------------- lm ---
+    def _init_lm(self, key, params) -> None:
+        from repro.models import lm
+        cfg = self.model
+        self.params = params if params is not None \
+            else lm.init_lm_params(key, cfg)
+        max_len = self.config.prompt_len + self.config.max_tokens
+        self._prefill = jax.jit(
+            lambda p, t: lm.prefill(cfg, p, t, max_len=max_len))
+        self._decode = jax.jit(lambda p, c, t: lm.decode_step(cfg, p, c, t))
+
+    def generate(self, prompts=None, batch_size: int | None = None
+                 ) -> np.ndarray:
+        """Prefill + greedy decode one request wave -> generated tokens
+        (B, max_tokens).  ``prompts`` defaults to a synthetic
+        (batch_size, prompt_len) wave from the seeded generator."""
+        self._family_guard("generate", "lm")
+        cfg, sc = self.model, self.config
+        if prompts is None:
+            b = batch_size or sc.batch_sizes[-1]
+            prompts = self._rng.integers(0, cfg.vocab_size,
+                                         (b, sc.prompt_len))
+        prompts = jnp.asarray(np.asarray(prompts), jnp.int32)
+        t0 = time.perf_counter()
+        logits, cache = self._prefill(self.params, prompts)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out = [tok]
+        for _ in range(sc.max_tokens - 1):
+            logits, cache = self._decode(self.params, cache, tok)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            out.append(tok)
+        tokens = np.asarray(jax.block_until_ready(
+            jnp.stack(out, axis=1)))
+        dt = time.perf_counter() - t0
+        r = self._result
+        r.queries += int(prompts.shape[0])
+        r.query_batches += 1
+        r.tokens_generated += tokens.size
+        r.query_seconds += dt
+        r.query_latencies_ms.append(dt * 1e3)
+        return tokens
+
+    # ------------------------------------------------------------ recsys ---
+    def _init_recsys(self, key, params) -> None:
+        from repro.models import din
+        self.params = params if params is not None \
+            else din.init_params(key, self.model)
+        self._fwd = jax.jit(din.forward)
+        self._din = din
+
+    def synthetic_requests(self, batch_size: int) -> dict:
+        """One synthetic CTR request batch from the seeded generator."""
+        cfg, rng = self.model, self._rng
+        b, s = batch_size, cfg.seq_len
+        ints = rng.integers
+        return {
+            "user_id": jnp.asarray(ints(0, cfg.user_vocab, (b,)),
+                                   jnp.int32),
+            "hist_items": jnp.asarray(ints(0, cfg.item_vocab, (b, s)),
+                                      jnp.int32),
+            "hist_cates": jnp.asarray(ints(0, cfg.cate_vocab, (b, s)),
+                                      jnp.int32),
+            "hist_mask": jnp.ones((b, s), jnp.float32),
+            "target_item": jnp.asarray(ints(0, cfg.item_vocab, (b,)),
+                                       jnp.int32),
+            "target_cate": jnp.asarray(ints(0, cfg.cate_vocab, (b,)),
+                                       jnp.int32),
+        }
+
+    def score(self, batch: dict | None = None,
+              batch_size: int | None = None) -> np.ndarray:
+        """Batched CTR scores for one request wave."""
+        self._family_guard("score", "recsys")
+        if batch is None:
+            batch = self.synthetic_requests(
+                batch_size or self.config.batch_sizes[-1])
+        t0 = time.perf_counter()
+        scores = np.asarray(jax.block_until_ready(
+            self._fwd(self.params, batch)))
+        dt = time.perf_counter() - t0
+        r = self._result
+        r.queries += int(scores.shape[0])
+        r.query_batches += 1
+        r.query_seconds += dt
+        r.query_latencies_ms.append(dt * 1e3)
+        return scores
+
+    # ------------------------------------------------------------ result ---
+    def result(self) -> ServeResult:
+        """Session counters so far (flushes pending dyngnn queries)."""
+        r = self._result
+        if self.family == "dyngnn":
+            self._node_batcher.flush()
+            self._link_batcher.flush()
+            r.queries = (self._node_batcher.stats.queries
+                         + self._link_batcher.stats.queries)
+            r.query_batches = (self._node_batcher.stats.batches
+                               + self._link_batcher.stats.batches)
+            r.query_seconds = (self._node_batcher.stats.seconds
+                               + self._link_batcher.stats.seconds)
+            r.query_latencies_ms = (self._node_batcher.stats.latencies_ms
+                                    + self._link_batcher.stats.latencies_ms)
+            r.events_ingested = self.ingester.events_ingested
+            r.resyncs = self.report.resyncs
+        return r
+
+
+def serve(config: ServeConfig, params: dict | None = None,
+          **kwargs) -> ServeEngine:
+    """Sugar mirroring ``repro.run``'s declarative style:
+    ``serve(ServeConfig(arch=...))`` -> ready engine."""
+    return ServeEngine(config, params=params, **kwargs)

@@ -1,0 +1,82 @@
+"""The state-advance / query split of online dyngnn serving.
+
+Training fuses "roll the temporal state forward" and "read scores out"
+into one loss step; serving needs them apart:
+
+* the STATE-ADVANCE step runs once per closed time window — apply the
+  window's edge delta (the ``DeltaApplier`` ring reconstructs the padded
+  edge list on device), recompute the Laplacian weights from the
+  reconstructed topology, run the layer stack over the length-1 timeline
+  slice, and roll the per-layer temporal carries forward.  It is jitted
+  with the carries DONATED: the rolled state overwrites the retiring
+  buffers, so resident state stays O(state) regardless of how long the
+  stream runs.  The math is ``stream.train_loop.advance_slice`` — the
+  same function the training steps differentiate through, which is what
+  pins served scores to the offline reference;
+
+* the QUERY steps are pure reads against the resident embeddings
+  ``z_t``: gather the requested rows, apply the classifier (node
+  scoring) or the link head (link prediction).  They are jitted per
+  static micro-batch bucket, so live traffic never recompiles.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import models as mdl
+from repro.stream.train_loop import advance_slice
+
+
+def make_advance_step(cfg: mdl.DynGNNConfig):
+    """Jitted, carry-donating state advance for one serve window.
+
+    (params, carries, frame (N, F), edges (E, 2), mask (E,), values (E,),
+    t_offset) -> (z_t (N, F'), new carries).  ``z_t`` is the warm-state
+    cache the query steps read; the donated carries make the temporal
+    state truly resident (rolled in place, never reallocated).
+    """
+
+    @partial(jax.jit, donate_argnums=(1,))
+    def advance(params, carries, frame, edges, mask, values, t_offset):
+        z, new_carries = advance_slice(cfg, params, carries, frame[None],
+                                       edges[None], mask[None],
+                                       values[None], t_offset)
+        return z[0], new_carries
+
+    return advance
+
+
+def make_node_query_step():
+    """Jitted batched node-scoring read: (params, z (N, F'), ids (B,))
+    -> per-class logits (B, C).  B is a static bucket size — callers pad."""
+
+    @jax.jit
+    def query(params, z, ids):
+        return mdl.classify(params, jnp.take(z, ids, axis=0))
+
+    return query
+
+
+def make_link_query_step():
+    """Jitted batched link-prediction read: (params, z (N, F'),
+    pairs (B, 2)) -> logits (B, C) via the paper's §6.4 link head."""
+
+    @jax.jit
+    def query(params, z, pairs):
+        return mdl.link_logits(params, z, pairs)
+
+    return query
+
+
+def fresh_carries(cfg: mdl.DynGNNConfig, params: dict) -> list:
+    """Donation-safe initial carries.
+
+    ``init_carries`` aliases EvolveGCN's initial weight carry to the
+    param tensor itself; a donating advance step would then hand the
+    param buffer to XLA for reuse.  Serving therefore deep-copies the
+    zero state once at session start."""
+    return jax.tree_util.tree_map(jnp.array, mdl.init_carries(cfg, params))

@@ -180,6 +180,81 @@ def _full_step(snap: np.ndarray, vals: np.ndarray,
     return FullSnapshot(edges=e, mask=m, values=v, num_edges=snap.shape[0])
 
 
+class IncrementalEncoder:
+    """The delta encoder as an online consumer: one snapshot at a time.
+
+    Holds the device-mirror state (``_DeviceMirror``) between calls so a
+    LIVE stream — snapshots that materialize window by window, e.g. from
+    the CTDG ingester (``repro.serve.ingest``) — encodes without ever
+    materializing the trace.  The offline ``iter_encode_stream`` is a
+    thin loop over this class, so online and offline encodings of the
+    same snapshot sequence are the same code path (and therefore
+    byte-identical — the property ``tests/test_serve.py`` pins).
+
+    ``on_overflow`` governs steps whose measured churn exceeds the
+    sized pads (always possible online, where pads come from a config or
+    from a different trace's statistics):
+
+    * ``"resync"`` (default) — ship that step as a FullSnapshot resync
+      (the decoder treats it like a block boundary), warn once, and count
+      it on ``report``; long-running streams degrade instead of crashing.
+    * ``"raise"`` — propagate :class:`ChurnOverflowError` (strict mode
+      for offline encoding where stats are authoritative).
+    """
+
+    def __init__(self, num_nodes: int, max_edges: int, block_size: int,
+                 drop_pad: int, add_pad: int, on_overflow: str = "resync",
+                 report: StreamReport | None = None):
+        if on_overflow not in ("resync", "raise"):
+            raise ValueError(f"on_overflow must be resync|raise, "
+                             f"got {on_overflow!r}")
+        self.num_nodes = num_nodes
+        self.max_edges = max_edges
+        self.block_size = block_size
+        self.drop_pad = drop_pad
+        self.add_pad = add_pad
+        self.on_overflow = on_overflow
+        self.report = report
+        self.step = 0
+        self._dev: _DeviceMirror | None = None
+        self._warned = False
+
+    def _full_resync(self, snap, vals):
+        keys = _edge_key(snap, self.num_nodes)
+        self._dev = _DeviceMirror(edges=snap.copy(), keys=keys,
+                                  keys_sorted=np.sort(keys))
+        return _full_step(snap, vals, self.max_edges)
+
+    def encode(self, snap: np.ndarray, vals: np.ndarray | None = None
+               ) -> FullSnapshot | SnapshotDelta:
+        """Encode the next snapshot against the mirrored device state."""
+        if vals is None:
+            vals = np.ones((snap.shape[0],), dtype=np.float32)
+        i, self.step = self.step, self.step + 1
+        if i % self.block_size == 0:
+            return self._full_resync(snap, vals)
+        try:
+            item, self._dev = _delta_step(
+                self._dev, snap, vals, self.num_nodes, self.max_edges,
+                self.drop_pad, self.add_pad)
+            return item
+        except ChurnOverflowError as err:
+            if self.on_overflow == "raise":
+                raise
+            if self.report is not None:
+                self.report.note_overflow(i, err)
+            if not self._warned:
+                # once per stream: a long-drifted stream can resync on
+                # many steps and must not flood stderr — the report
+                # carries the per-step detail
+                warnings.warn(
+                    f"delta stream step {i}: {err}; emitting "
+                    "FullSnapshot resync (further overflows counted "
+                    "on StreamReport, not warned)", stacklevel=2)
+                self._warned = True
+            return self._full_resync(snap, vals)
+
+
 def iter_encode_stream(snapshots: list[np.ndarray],
                        values: list[np.ndarray] | None,
                        num_nodes: int, max_edges: int, block_size: int,
@@ -189,55 +264,17 @@ def iter_encode_stream(snapshots: list[np.ndarray],
                        ) -> Iterator[FullSnapshot | SnapshotDelta]:
     """Lazily encode the trace (the form the prefetch thread consumes).
 
-    ``on_overflow`` governs steps whose measured churn exceeds the
-    stats-sized pads (possible when ``stats`` came from a different trace
-    prefix than the live stream):
-
-    * ``"resync"`` (default) — ship that step as a FullSnapshot resync (the
-      decoder treats it like a block boundary), warn, and count it on
-      ``report``; long-running streams degrade instead of crashing.
-    * ``"raise"`` — propagate :class:`ChurnOverflowError` (strict mode for
-      offline encoding where stats are authoritative).
+    A loop over :class:`IncrementalEncoder` (which documents the
+    ``on_overflow`` modes) with stats-sized delta pads measured from the
+    trace when not provided.
     """
-    if on_overflow not in ("resync", "raise"):
-        raise ValueError(f"on_overflow must be resync|raise, "
-                         f"got {on_overflow!r}")
     if stats is None:
         stats = measure_stats(snapshots, num_nodes, block_size, max_edges)
-
-    def full_resync(snap, vals):
-        keys = _edge_key(snap, num_nodes)
-        return _full_step(snap, vals, max_edges), _DeviceMirror(
-            edges=snap.copy(), keys=keys, keys_sorted=np.sort(keys))
-
-    dev: _DeviceMirror | None = None
-    warned = False
+    inc = IncrementalEncoder(num_nodes, max_edges, block_size,
+                             stats.max_drops, stats.max_adds,
+                             on_overflow=on_overflow, report=report)
     for i, snap in enumerate(snapshots):
-        vals = (values[i] if values is not None
-                else np.ones((snap.shape[0],), dtype=np.float32))
-        if i % block_size == 0:
-            item, dev = full_resync(snap, vals)
-        else:
-            try:
-                item, dev = _delta_step(dev, snap, vals, num_nodes,
-                                        max_edges, stats.max_drops,
-                                        stats.max_adds)
-            except ChurnOverflowError as err:
-                if on_overflow == "raise":
-                    raise
-                if report is not None:
-                    report.note_overflow(i, err)
-                if not warned:
-                    # once per stream: a long-drifted stream can resync on
-                    # many steps and must not flood stderr — the report
-                    # carries the per-step detail
-                    warnings.warn(
-                        f"delta stream step {i}: {err}; emitting "
-                        "FullSnapshot resync (further overflows counted "
-                        "on StreamReport, not warned)", stacklevel=2)
-                    warned = True
-                item, dev = full_resync(snap, vals)
-        yield item
+        yield inc.encode(snap, values[i] if values is not None else None)
 
 
 def encode_stream_fast(snapshots: list[np.ndarray],

@@ -42,33 +42,40 @@ class StreamTrainState:
     losses: list
 
 
+def advance_slice(cfg: mdl.DynGNNConfig, params: dict, carries: list,
+                  frames, edges, mask, values,
+                  t_offset) -> tuple[jax.Array, list]:
+    """The STATE-ADVANCE step: one time-window of reconstructed snapshots
+    rolls the temporal carries forward and yields the window's embeddings.
+
+    frames (k, N, F), edges (k, E, 2), mask/values (k, E) -> (z (k, N, F'),
+    new carries).  This is the forward math every consumer of the delta
+    stream shares — the per-snapshot/slice TRAINING steps below wrap it in
+    a loss + AdamW update, the online SERVING engine
+    (``repro.serve.state.make_advance_step``) jits it alone with donated
+    carries.  Keeping it single-sourced is what pins served scores to the
+    offline training reference."""
+    e_full, w_full = slice_weights_with_loops(
+        cfg.num_nodes, *make_self_loops(cfg.num_nodes), edges, mask, values)
+    return mdl.forward_slice(cfg, params, frames, e_full, w_full, carries,
+                             t_offset)
+
+
 def make_stream_train_step(cfg: mdl.DynGNNConfig,
                            opt_cfg: adamw.AdamWConfig):
     """Jitted per-snapshot step: reconstructed (edges, mask, values) ->
     Laplacian weights on device -> one-layer-stack forward over the
-    length-1 timeline slice -> CE loss -> AdamW update."""
-    n = cfg.num_nodes
-    loop_edges = jnp.stack(
-        [jnp.arange(n, dtype=jnp.int32)] * 2, axis=1)   # device-resident
-    loop_ones = jnp.ones((n,), dtype=jnp.float32)
+    length-1 timeline slice (``advance_slice``) -> CE loss -> AdamW
+    update."""
 
     @jax.jit
     def step(params, opt_state, carries, frame, edges, mask, values,
              labels, t_offset):
-        e_full = jnp.concatenate([edges, loop_edges], axis=0)
-        m_full = jnp.concatenate([mask, loop_ones], axis=0)
-        v_full = jnp.concatenate([values, loop_ones], axis=0)
-        w_full = segment.gcn_edge_weights(e_full, n, m_full, v_full)
-
         def loss_fn(p):
-            z, new_carries = mdl.forward_slice(
-                cfg, p, frame[None], e_full[None], w_full[None], carries,
-                t_offset)
-            logits = mdl.classify(p, z[0])
-            logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
-            nll = -jnp.take_along_axis(logp, labels[..., None],
-                                       axis=-1)[..., 0]
-            return jnp.mean(nll), new_carries
+            z, new_carries = advance_slice(cfg, p, carries, frame[None],
+                                           edges[None], mask[None],
+                                           values[None], t_offset)
+            return jnp.mean(slice_nll(p, z[0], labels)), new_carries
 
         (loss, new_carries), grads = jax.value_and_grad(
             loss_fn, has_aux=True)(params)
@@ -126,18 +133,13 @@ def make_stream_slice_step(cfg: mdl.DynGNNConfig,
     there the identical slice is computed with the time axis sharded and
     the temporal stage reached through two all-to-alls.
     """
-    n = cfg.num_nodes
-    loop_edges, loop_ones = make_self_loops(n)
 
     @jax.jit
     def step(params, opt_state, carries, frames, edges, mask, values,
              labels, t_offset):
-        e_full, w_full = slice_weights_with_loops(
-            n, loop_edges, loop_ones, edges, mask, values)
-
         def loss_fn(p):
-            z, new_carries = mdl.forward_slice(cfg, p, frames, e_full,
-                                               w_full, carries, t_offset)
+            z, new_carries = advance_slice(cfg, p, carries, frames, edges,
+                                           mask, values, t_offset)
             return jnp.mean(slice_nll(p, z, labels)), new_carries
 
         (loss, new_carries), grads = jax.value_and_grad(

@@ -1,0 +1,174 @@
+"""CTDG bridge unit tests: window-boundary semantics of both
+discretization policies, EventStream validation errors, and the
+alive-set bookkeeping the online ingester shares with the offline
+discretizers."""
+
+import numpy as np
+import pytest
+
+from repro.core import ctdg
+
+
+def _stream(src, dst, time, kind, n=10):
+    return ctdg.EventStream(np.asarray(src, np.int32),
+                            np.asarray(dst, np.int32),
+                            np.asarray(time, float),
+                            np.asarray(kind, np.int8), n)
+
+
+# ------------------------------------------------- window assignment --------
+
+def test_uniform_bounds_cover_range():
+    b = ctdg.uniform_bounds(0.0, 4.0, 4)
+    np.testing.assert_allclose(b, [1.0, 2.0, 3.0, 4.0])
+
+
+def test_snapshot_policy_boundary_event_closes_with_its_window():
+    """Snapshot policy: an event AT a window's end bound belongs to that
+    window (time <= bound consumption — the reference loop's rule)."""
+    b = ctdg.uniform_bounds(0.0, 4.0, 2)          # bounds [2, 4]
+    idx = ctdg.snapshot_window_index(np.array([0.0, 2.0, 2.0001, 4.0]), b)
+    np.testing.assert_array_equal(idx, [0, 0, 1, 1])
+
+    # end to end (bounds derive from the stream's own [0, 4] range, so
+    # W=2 puts the mid bound at t=2): the edge inserted exactly at t=2
+    # is alive in snapshot 0
+    ev = _stream([1, 2, 3, 4], [4, 5, 6, 7], [0.0, 2.0, 3.0, 4.0],
+                 [1, 1, 1, 1])
+    snaps = ctdg.snapshot_events(ev, 2)
+    assert set(map(tuple, snaps[0].tolist())) == {(1, 4), (2, 5)}
+    assert set(map(tuple, snaps[1].tolist())) == \
+        {(1, 4), (2, 5), (3, 6), (4, 7)}
+
+
+def test_snapshot_policy_delete_at_boundary_applies_in_that_window():
+    ev = _stream([1, 1], [4, 4], [0.0, 2.0], [1, -1])
+    snaps = ctdg.snapshot_events(ev, 2)            # bounds [1, 2]
+    assert snaps[0].tolist() == [[1, 4]]
+    assert snaps[1].shape[0] == 0                  # deleted AT bound 2
+
+
+def test_window_policy_boundary_binning_is_the_clip_formula():
+    """Interaction policy: boundary times floor into the NEXT window
+    (except t1, which clips into the last) — the exact offline rule."""
+    idx = ctdg.interaction_window_index(
+        np.array([0.0, 1.0, 2.5, 4.0]), 0.0, 4.0, 4)
+    np.testing.assert_array_equal(idx, [0, 1, 2, 3])
+
+    ev = _stream([1, 2, 3, 4], [5, 6, 7, 8], [0.0, 1.0, 2.5, 4.0],
+                 [1, 1, 1, 1])
+    win = ctdg.window_events(ev, 4)
+    assert [w.tolist() for w in win] == [[[1, 5]], [[2, 6]], [[3, 7]],
+                                         [[4, 8]]]
+
+
+def test_window_policy_dedups_repeated_interactions():
+    ev = _stream([1, 1, 2], [5, 5, 6], [0.0, 0.1, 0.9], [1, 1, 1])
+    win = ctdg.window_events(ev, 2)
+    assert win[0].tolist() == [[1, 5]]             # observed twice, once out
+    assert win[1].tolist() == [[2, 6]]
+
+
+def test_snapshot_events_match_bruteforce_reference():
+    """Property: the AliveSet/searchsorted implementation equals a naive
+    consume-loop reference (order included) over random streams."""
+    for seed in range(4):
+        stream = ctdg.synthetic_ctdg(24, 300, delete_frac=0.25, seed=seed)
+        for w in (1, 3, 7):
+            got = ctdg.snapshot_events(stream, w)
+            ref = _brute_snapshots(stream, w)
+            assert len(got) == len(ref) == w
+            for g, r in zip(got, ref):
+                np.testing.assert_array_equal(g, r)
+
+
+def _brute_snapshots(stream, num_steps):
+    ev = stream.sorted()
+    bounds = np.linspace(float(ev.time[0]), float(ev.time[-1]),
+                         num_steps + 1)[1:]
+    alive, out, i, m = {}, [], 0, len(ev)
+    for b in bounds:
+        while i < m and ev.time[i] <= b:
+            k = (int(ev.src[i]), int(ev.dst[i]))
+            if ev.kind[i] > 0:
+                alive[k] = alive.get(k, 0) + 1
+            else:
+                c = alive.get(k, 0) - 1
+                if c <= 0:
+                    alive.pop(k, None)
+                else:
+                    alive[k] = c
+            i += 1
+        out.append(np.array(list(alive.keys()), np.int32).reshape(-1, 2))
+    return out
+
+
+# ------------------------------------------------------- validation ---------
+
+def test_validate_rejects_length_mismatch():
+    ev = ctdg.EventStream(np.zeros(3, np.int32), np.zeros(2, np.int32),
+                          np.zeros(3), np.ones(3, np.int8), 4)
+    with pytest.raises(ValueError, match="must align"):
+        ev.validate()
+
+
+def test_validate_rejects_empty_stream():
+    ev = ctdg.EventStream(*(np.zeros(0, np.int32),) * 2,
+                          np.zeros(0), np.zeros(0, np.int8), 4)
+    with pytest.raises(ValueError, match="empty"):
+        ev.validate()
+
+
+def test_validate_rejects_out_of_range_node_ids():
+    with pytest.raises(ValueError, match=r"node id 10 outside"):
+        _stream([0], [10], [0.0], [1]).validate()
+    with pytest.raises(ValueError, match="num_nodes must be positive"):
+        _stream([0], [0], [0.0], [1], n=0).validate()
+
+
+def test_validate_rejects_bad_kinds_and_times():
+    with pytest.raises(ValueError, match=r"\+1 .* or -1"):
+        _stream([0, 1], [1, 2], [0.0, 1.0], [1, 2]).validate()
+    with pytest.raises(ValueError, match="non-finite"):
+        _stream([0], [1], [np.nan], [1]).validate()
+
+
+def test_validate_require_sorted():
+    ev = _stream([0, 1], [1, 2], [1.0, 0.5], [1, 1])
+    with pytest.raises(ValueError, match="non-decreasing"):
+        ev.validate(require_sorted=True)
+    ev.validate()                                  # unsorted ok by default
+    ev.sorted().validate(require_sorted=True)
+
+
+def test_validate_rejects_delete_before_insert():
+    with pytest.raises(ValueError, match="delete"):
+        _stream([0, 0], [1, 1], [0.0, 1.0], [-1, 1]).validate()
+    # double-delete of a once-inserted edge is also a net-negative
+    with pytest.raises(ValueError, match="delete"):
+        _stream([0, 0, 0], [1, 1, 1], [0.0, 1.0, 2.0],
+                [1, -1, -1]).validate()
+    # insert-delete-insert-delete is fine
+    _stream([0, 0, 0, 0], [1, 1, 1, 1], [0.0, 1.0, 2.0, 3.0],
+            [1, -1, 1, -1]).validate()
+
+
+def test_alive_set_strict_rejects_unmatched_delete():
+    alive = ctdg.AliveSet(8)
+    alive.apply(np.array([1]), np.array([2]), np.array([1]))
+    alive.apply(np.array([1]), np.array([2]), np.array([-1]), strict=True)
+    with pytest.raises(ValueError, match="not.*alive"):
+        alive.apply(np.array([1]), np.array([2]), np.array([-1]),
+                    strict=True)
+
+
+def test_num_steps_must_be_positive():
+    ev = _stream([0], [1], [0.0], [1])
+    with pytest.raises(ValueError, match="num_steps"):
+        ctdg.snapshot_events(ev, 0)
+
+
+def test_synthetic_ctdg_is_valid():
+    for seed in range(3):
+        ctdg.synthetic_ctdg(32, 400, delete_frac=0.3,
+                            seed=seed).validate()

@@ -1,6 +1,6 @@
 """The documentation cannot rot: markdown links must resolve and the
-``docs/run_api.md`` examples must execute (the same checks CI's docs job
-runs via ``tools/check_docs.py``)."""
+``docs/run_api.md`` / ``docs/serve_api.md`` examples must execute (the
+same checks CI's docs job runs via ``tools/check_docs.py``)."""
 
 import sys
 from pathlib import Path
@@ -14,6 +14,7 @@ import check_docs  # noqa: E402
 def test_docs_exist():
     assert (ROOT / "docs" / "architecture.md").exists()
     assert (ROOT / "docs" / "run_api.md").exists()
+    assert (ROOT / "docs" / "serve_api.md").exists()
 
 
 def test_markdown_links_resolve():
@@ -25,3 +26,10 @@ def test_run_api_examples_execute():
     """Every ```python fence in docs/run_api.md runs, in order, in one
     shared namespace (conftest already forces 8 host devices)."""
     check_docs.run_examples(verbose=False)
+
+
+def test_serve_api_examples_execute():
+    """Every ```python fence in docs/serve_api.md runs the same way —
+    the serving surface's documentation is executable too."""
+    check_docs.run_examples(ROOT / "docs" / "serve_api.md",
+                            verbose=False)

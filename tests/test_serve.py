@@ -1,0 +1,368 @@
+"""Online serving tests.
+
+The load-bearing guarantees:
+
+* ONLINE == OFFLINE — serving state after window t equals the offline
+  blocked forward on the equivalent DTDG (<=1e-5), for every dyngnn
+  model, including with params trained by ``Engine.fit`` on the
+  8-device mesh;
+* the online ingester's delta items are BYTE-IDENTICAL to the offline
+  encoder's over the discretized trace (property-style, both policies)
+  — one code path, pinned;
+* the warm-state cache refreshes on advance (never serves stale
+  windows) and micro-batching pads without leaking across requests;
+* the declarative surface validates loudly and the legacy launcher is
+  a DeprecationWarning shim.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import checkpoint as ckpt
+from repro.core import ctdg
+from repro.core import models as mdl
+from repro.data.dyngnn import DTDGPipeline, dataset_from_snapshots
+from repro.serve import (IngestSpec, LateEventError, OnlineIngester,
+                         QueryBatcher, ServeConfig, ServeEngine)
+from repro.stream import encoder as enc
+
+N, W = 40, 12
+
+
+def _stream(seed=0, n=N, events=500):
+    return ctdg.synthetic_ctdg(n, events, delete_frac=0.25,
+                               seed=seed).sorted()
+
+
+def _spec(stream, pipe, **kw):
+    return IngestSpec(num_windows=W,
+                      time_range=(float(stream.time.min()),
+                                  float(stream.time.max())),
+                      block_size=pipe.bsize, max_edges=pipe.max_edges,
+                      **kw)
+
+
+def _offline(stream, n=N):
+    snaps = ctdg.snapshot_events(stream, W)
+    ds = dataset_from_snapshots(snaps, n, smoothing_mode="none")
+    return ds, DTDGPipeline(ds, nb=2)
+
+
+def _push_chunked(eng, stream, chunk=123):
+    for lo in range(0, len(stream), chunk):
+        sl = slice(lo, lo + chunk)
+        eng.ingest(ctdg.EventStream(stream.src[sl], stream.dst[sl],
+                                    stream.time[sl], stream.kind[sl],
+                                    stream.num_nodes))
+
+
+# ------------------------------------------------ online == offline ---------
+
+@pytest.mark.parametrize("model", ["cdgcn", "tmgcn", "evolvegcn"])
+def test_online_scores_match_offline(model):
+    """Ingest live -> advance all windows -> query == the offline
+    blocked forward + heads, for node scoring AND link prediction."""
+    stream = _stream(seed=1)
+    ds, pipe = _offline(stream)
+    cfg = mdl.DynGNNConfig(model=model, num_nodes=N, num_steps=W,
+                           window=3, checkpoint_blocks=2)
+    params = mdl.init_params(jax.random.PRNGKey(7), cfg)
+    z_ref = ckpt.blocked_forward(cfg, params, pipe.batch, 2)
+
+    eng = ServeEngine(ServeConfig(model=cfg, ingest=_spec(stream, pipe)),
+                      params=params)
+    _push_chunked(eng, stream)
+    eng.advance_all()
+
+    got = eng.query_nodes(np.arange(N))
+    ref = np.asarray(mdl.classify(params, z_ref[-1]))
+    np.testing.assert_allclose(got, ref, atol=1e-5)
+
+    pairs = np.array([[0, 1], [3, 9], [N - 1, 0]])
+    got_l = eng.query_links(pairs)
+    ref_l = np.asarray(mdl.link_logits(params, z_ref[-1],
+                                       jnp.asarray(pairs, jnp.int32)))
+    np.testing.assert_allclose(got_l, ref_l, atol=1e-5)
+
+    r = eng.result()
+    assert r.events_ingested == len(stream)
+    assert r.windows_advanced == W
+    assert r.queries == 2 and r.query_batches == 2
+    assert np.isfinite(r.p50_ms) and np.isfinite(r.p95_ms)
+
+
+@pytest.mark.skipif(len(jax.devices()) < 8, reason="needs 8 host devices")
+def test_serving_trained_mesh_params_matches_offline_eval():
+    """The acceptance path: Engine.fit on the 8-device mesh -> serve the
+    trained params online -> scores equal the offline evaluation
+    forward on the same DTDG (<=1e-5)."""
+    from repro.run import Engine, ExecutionPlan, InMemoryDTDG, RunConfig
+    stream = _stream(seed=2, events=600)
+    ds, pipe = _offline(stream)
+    cfg = mdl.DynGNNConfig(model="tmgcn", num_nodes=N, num_steps=W,
+                           window=3, checkpoint_blocks=2)
+    fit = Engine(RunConfig(
+        model=cfg, data=InMemoryDTDG(ds, pipeline=pipe),
+        plan=ExecutionPlan(mode="streamed_mesh", shards=4, num_epochs=1),
+        seed=0)).fit()
+    params = fit.state.params
+
+    eng = ServeEngine(ServeConfig(model=cfg, ingest=_spec(stream, pipe)),
+                      params=params)
+    _push_chunked(eng, stream)
+    eng.advance_all()
+    got = eng.query_nodes(np.arange(N))
+    z_ref = ckpt.blocked_forward(cfg, params, pipe.batch, 2)
+    ref = np.asarray(mdl.classify(params, z_ref[-1]))
+    np.testing.assert_allclose(got, ref, atol=1e-5)
+
+
+# ------------------------------------- ingester == offline encoder ----------
+
+@pytest.mark.parametrize("policy", ["snapshot", "window"])
+@pytest.mark.parametrize("seed", [0, 3, 5])
+def test_ingester_items_match_offline_encoder(policy, seed):
+    """Property: pushing a random event stream through the online
+    ingester yields the SAME delta-stream items (byte for byte) as
+    offline-discretizing the trace and encoding it in one pass."""
+    stream = _stream(seed=seed, events=400)
+    snaps = (ctdg.snapshot_events if policy == "snapshot"
+             else ctdg.window_events)(stream, W)
+    max_edges = enc.padded_max_edges(snaps)
+    spec = IngestSpec(num_windows=W, policy=policy,
+                      time_range=(float(stream.time.min()),
+                                  float(stream.time.max())),
+                      block_size=4, max_edges=max_edges, churn_pad=None)
+    ing = OnlineIngester(spec, N)
+    for lo in range(0, len(stream), 97):
+        sl = slice(lo, lo + 97)
+        ing.push(ctdg.EventStream(stream.src[sl], stream.dst[sl],
+                                  stream.time[sl], stream.kind[sl], N))
+    online = [ing.close_window()[0] for _ in range(W)]
+
+    pad = spec.drop_add_pad
+    stats = enc.DeltaStats(max_edges=max_edges, max_drops=pad,
+                           max_adds=pad)
+    offline = list(enc.iter_encode_stream(snaps, None, N, max_edges, 4,
+                                          stats))
+    for a, b in zip(online, offline):
+        assert type(a) is type(b)
+        for f in a.__dataclass_fields__:
+            va, vb = getattr(a, f), getattr(b, f)
+            if isinstance(va, np.ndarray):
+                np.testing.assert_array_equal(va, vb)
+            else:
+                assert va == vb
+
+
+def test_ingester_frames_are_degree_features():
+    from repro.graph import generate
+    stream = _stream(seed=4, events=300)
+    snaps = ctdg.snapshot_events(stream, W)
+    spec = IngestSpec(num_windows=W,
+                      time_range=(float(stream.time.min()),
+                                  float(stream.time.max())),
+                      max_edges=enc.padded_max_edges(snaps))
+    ing = OnlineIngester(spec, N)
+    ing.push(stream)
+    for t in range(W):
+        _, frame = ing.close_window()
+        np.testing.assert_array_equal(
+            frame, generate.degree_features(snaps[t], N))
+
+
+# --------------------------------------------------- warm-state cache -------
+
+def test_warm_cache_refreshes_on_advance():
+    """The cached z is invalidated by every advance: queries always see
+    the CURRENT window, matching the per-window offline reference."""
+    stream = _stream(seed=6)
+    ds, pipe = _offline(stream)
+    cfg = mdl.DynGNNConfig(model="tmgcn", num_nodes=N, num_steps=W,
+                           window=3, checkpoint_blocks=2)
+    params = mdl.init_params(jax.random.PRNGKey(1), cfg)
+    z_ref = ckpt.blocked_forward(cfg, params, pipe.batch, 2)
+
+    eng = ServeEngine(ServeConfig(model=cfg, ingest=_spec(stream, pipe)),
+                      params=params)
+    eng.ingest(stream)
+    ids = np.arange(N)
+    seen = []
+    for t in range(W):
+        eng.advance()
+        got = eng.query_nodes(ids)
+        np.testing.assert_allclose(
+            got, np.asarray(mdl.classify(params, z_ref[t])), atol=1e-5)
+        seen.append(got)
+    # the state really moved (stale cache would have frozen the scores)
+    assert any(np.abs(seen[t] - seen[t + 1]).max() > 0
+               for t in range(W - 1))
+
+
+def test_query_before_first_advance_raises():
+    stream = _stream(seed=0)
+    ds, pipe = _offline(stream)
+    cfg = mdl.DynGNNConfig(model="tmgcn", num_nodes=N, num_steps=W,
+                           window=3)
+    eng = ServeEngine(ServeConfig(model=cfg, ingest=_spec(stream, pipe)))
+    with pytest.raises(ValueError, match="no resident state"):
+        eng.query_nodes([0, 1])
+
+
+# --------------------------------------------------- micro-batching ---------
+
+def test_query_batcher_pads_to_buckets_without_leaking():
+    calls = []
+
+    def run_fn(padded):
+        calls.append(padded.shape[0])
+        return padded * 2.0
+
+    qb = QueryBatcher(run_fn, batch_sizes=(2, 4), queue_depth=8)
+    a = qb.submit(np.array([1.0]))
+    b = qb.submit(np.array([2.0, 3.0]))
+    qb.flush()
+    assert a.done and b.done
+    np.testing.assert_allclose(a.scores, [2.0])
+    np.testing.assert_allclose(b.scores, [4.0, 6.0])
+    assert calls == [4]                 # 3 rows -> one padded-4 batch
+    assert qb.stats.queries == 2 and qb.stats.rows == 3
+    assert len(qb.stats.latencies_ms) == 2
+
+
+def test_query_batcher_full_queue_flushes_first():
+    def run_fn(padded):
+        return padded
+
+    qb = QueryBatcher(run_fn, batch_sizes=(1, 2), queue_depth=2)
+    p1 = qb.submit(np.array([1.0]))
+    p2 = qb.submit(np.array([2.0]))
+    p3 = qb.submit(np.array([3.0]))     # full -> flushes p1+p2 first
+    assert p1.done and p2.done and not p3.done
+    qb.flush()
+    assert p3.done
+
+
+def test_query_batcher_chunks_oversized_requests():
+    def run_fn(padded):
+        return padded
+
+    qb = QueryBatcher(run_fn, batch_sizes=(2, 4), queue_depth=8)
+    out = qb.query(np.arange(10.0))
+    np.testing.assert_allclose(out, np.arange(10.0))
+    assert qb.stats.batches == 3        # 4 + 4 + 2
+
+
+# ------------------------------------------------------- validation ---------
+
+def test_serve_config_validation():
+    with pytest.raises(ValueError, match="arch id or an explicit"):
+        ServeConfig().validate()
+    with pytest.raises(ValueError, match="ascending"):
+        ServeConfig(arch="x", batch_sizes=(8, 1)).validate()
+    with pytest.raises(ValueError, match="queue_depth"):
+        ServeConfig(arch="x", queue_depth=0).validate()
+    with pytest.raises(ValueError, match="exactly one"):
+        IngestSpec().validate()
+    with pytest.raises(ValueError, match="exactly one"):
+        IngestSpec(time_range=(0, 1), num_windows=4,
+                   window_span=0.5).validate()
+    with pytest.raises(ValueError, match="num_windows"):
+        IngestSpec(time_range=(0, 1)).validate()
+    with pytest.raises(ValueError, match="t1 > t0"):
+        IngestSpec(time_range=(1, 1), num_windows=2).validate()
+    with pytest.raises(ValueError, match="policy"):
+        IngestSpec(time_range=(0, 1), num_windows=2,
+                   policy="bogus").validate()
+    with pytest.raises(ValueError, match="window_span only supports"):
+        IngestSpec(window_span=0.5, policy="window").validate()
+    with pytest.raises(ValueError, match="churn_pad"):
+        IngestSpec(time_range=(0, 1), num_windows=2, max_edges=64,
+                   churn_pad=128).validate()
+    # valid specs pass
+    IngestSpec(time_range=(0, 1), num_windows=2).validate()
+    IngestSpec(window_span=0.25).validate()
+
+
+def test_ingester_rejects_late_and_alien_events():
+    stream = _stream(seed=0, events=300)
+    spec = IngestSpec(num_windows=W,
+                      time_range=(float(stream.time.min()),
+                                  float(stream.time.max())),
+                      max_edges=2048)
+    ing = OnlineIngester(spec, N)
+    ing.push(stream)
+    ing.close_window()
+    late = ctdg.EventStream(np.array([0], np.int32), np.array([1], np.int32),
+                            np.array([float(stream.time.min())]),
+                            np.array([1], np.int8), N)
+    with pytest.raises(LateEventError, match="already.*closed"):
+        ing.push(late)
+    with pytest.raises(ValueError, match="num_nodes"):
+        ing.push(ctdg.EventStream(np.array([0], np.int32),
+                                  np.array([1], np.int32),
+                                  np.array([1e9]), np.array([1], np.int8),
+                                  N + 1))
+
+
+def test_ingester_bounds_device_memory():
+    stream = _stream(seed=0, events=400)
+    spec = IngestSpec(num_windows=1,
+                      time_range=(float(stream.time.min()),
+                                  float(stream.time.max())),
+                      max_edges=8)
+    ing = OnlineIngester(spec, N)
+    ing.push(stream)
+    with pytest.raises(ValueError, match="max_edges"):
+        ing.close_window()
+
+
+def test_dyngnn_engine_requires_ingest_spec():
+    cfg = mdl.DynGNNConfig(model="tmgcn", num_nodes=N, num_steps=W)
+    with pytest.raises(ValueError, match="needs ServeConfig.ingest"):
+        ServeEngine(ServeConfig(model=cfg))
+
+
+# ------------------------------------------- other families + shim ----------
+
+def test_family_guards():
+    eng = ServeEngine(ServeConfig(arch="din", batch_sizes=(2,)))
+    with pytest.raises(ValueError, match="family"):
+        eng.ingest(None)
+    with pytest.raises(ValueError, match="family"):
+        eng.generate()
+
+
+def test_recsys_serving():
+    eng = ServeEngine(ServeConfig(arch="din", batch_sizes=(4,), seed=3))
+    scores = eng.score(batch_size=4)
+    assert scores.shape[0] == 4
+    r = eng.result()
+    assert r.family == "recsys" and r.queries == 4
+    assert np.isfinite(r.p50_ms)
+
+
+def test_lm_serving():
+    eng = ServeEngine(ServeConfig(arch="yi-6b", batch_sizes=(2,),
+                                  prompt_len=4, max_tokens=3, seed=0))
+    toks = eng.generate(batch_size=2)
+    assert toks.shape == (2, 3)
+    r = eng.result()
+    assert r.family == "lm" and r.tokens_generated == 6
+
+
+def test_run_exports_serve_surface():
+    import repro.run as run
+    assert run.ServeConfig is ServeConfig
+    assert run.ServeEngine is ServeEngine
+    assert run.IngestSpec is IngestSpec
+
+
+def test_launch_serve_is_a_deprecation_shim():
+    from repro.launch import serve as legacy
+    with pytest.warns(DeprecationWarning, match="repro.serve"):
+        legacy.main(["--arch", "din", "--batch", "1", "--requests", "1",
+                     "--tokens", "2", "--prompt-len", "2"])

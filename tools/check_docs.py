@@ -9,10 +9,11 @@ Two jobs, both run by CI (the ``docs`` job) and by
   markdown targets are checked against the target's headings with
   GitHub's slug rules).  Links that resolve outside the repo root are
   web-relative (e.g. the CI badge) and skipped, as are absolute URLs.
-* **example run** — every ```python fence in docs/run_api.md executes,
-  in file order, in ONE shared interpreter namespace (later blocks may
-  use earlier blocks' variables).  The blocks are written tiny so the
-  whole file trains in seconds.
+* **example run** — every ```python fence in the EXAMPLE_DOCS files
+  (docs/run_api.md, docs/serve_api.md) executes, in file order, each
+  file in its own shared interpreter namespace (later blocks may use
+  earlier blocks' variables).  The blocks are written tiny so each file
+  trains in seconds.
 
 Usage: python tools/check_docs.py [--no-run]
 """
@@ -26,6 +27,7 @@ import sys
 from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
+EXAMPLE_DOCS = ("run_api.md", "serve_api.md")
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
 FENCE_RE = re.compile(r"^```python\n(.*?)^```", re.MULTILINE | re.DOTALL)
@@ -75,8 +77,8 @@ def python_blocks(md: Path) -> list[str]:
 
 
 def run_examples(md: Path | None = None, verbose: bool = True) -> None:
-    """Execute the ```python blocks of docs/run_api.md in one shared
-    namespace; raises on the first failing block."""
+    """Execute one doc's ```python blocks in one shared namespace;
+    raises on the first failing block."""
     md = md or REPO / "docs" / "run_api.md"
     blocks = python_blocks(md)
     if not blocks:
@@ -88,6 +90,12 @@ def run_examples(md: Path | None = None, verbose: bool = True) -> None:
             print(f"[check_docs] {md.name} block {i + 1}/{len(blocks)}: "
                   f"{head}")
         exec(compile(block, f"{md.name}#block{i + 1}", "exec"), ns)  # noqa: S102
+
+
+def run_all_examples(verbose: bool = True) -> None:
+    """Execute every EXAMPLE_DOCS file, each in a fresh namespace."""
+    for name in EXAMPLE_DOCS:
+        run_examples(REPO / "docs" / name, verbose=verbose)
 
 
 def main() -> int:
@@ -107,7 +115,7 @@ def main() -> int:
         # the flag before the first jax import
         os.environ.setdefault("XLA_FLAGS",
                               "--xla_force_host_platform_device_count=8")
-        run_examples()
+        run_all_examples()
         print("[check_docs] examples OK")
     return 0
 
