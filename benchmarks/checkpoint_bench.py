@@ -34,7 +34,7 @@ def run(model: str = "tmgcn", n: int = 512, t: int = 32) -> None:
                                   window=3, checkpoint_blocks=nb)
         params = models.init_params(jax.random.PRNGKey(0), cfg)
 
-        def loss(p):
+        def loss(p, nb=nb):
             return ckpt_exec.blocked_node_loss(cfg, p, pipe.batch, labels,
                                                nb=nb)
 

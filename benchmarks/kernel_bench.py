@@ -20,7 +20,7 @@ def run() -> None:
         edges = jnp.asarray(rng.integers(0, n, (e, 2)), jnp.int32)
         w = jnp.asarray(rng.normal(size=(e,)).astype(np.float32))
         x = jnp.asarray(rng.normal(size=(n, f)).astype(np.float32))
-        fn = jax.jit(lambda x_, e_, w_: segment.spmm(x_, e_, w_, n))
+        fn = jax.jit(lambda x_, e_, w_, n=n: segment.spmm(x_, e_, w_, n))
         us = time_fn(fn, x, edges, w)
         flops = 2 * e * f
         record(f"spmm/n{n}_e{e}_f{f}", us,
@@ -28,7 +28,7 @@ def run() -> None:
     # M-product
     for (t, n, f, w_) in ((64, 4096, 16, 5), (256, 1024, 16, 9)):
         x = jnp.asarray(rng.normal(size=(t, n, f)).astype(np.float32))
-        fn = jax.jit(lambda x_: temporal.m_product(x_, w_))
+        fn = jax.jit(lambda x_, w_=w_: temporal.m_product(x_, w_))
         us = time_fn(fn, x)
         record(f"mproduct/t{t}_n{n}_f{f}_w{w_}", us, "")
     # LSTM over timeline

@@ -314,7 +314,7 @@ def modeled_weak_scaling(model: str = "tmgcn") -> None:
     """Fig. 7 setting: T=256, f=3, N doubling from 2^14 with P."""
     t, f_den, feat, layers = 256, 3.0, 6, 2
     base_thr = None
-    for i, p in enumerate((1, 2, 4, 8, 16, 32, 64, 128)):
+    for p in (1, 2, 4, 8, 16, 32, 64, 128):
         n = 2 ** 14 * p
         epn = n * f_den * (5 if model != "cdgcn" else 1)   # smoothing x5
         flops = 4.0 * t * (2 * epn * feat + 2 * n * feat * feat) * layers

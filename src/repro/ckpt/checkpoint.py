@@ -119,7 +119,9 @@ class Checkpointer:
             sh_leaves = jax.tree.leaves(
                 shardings, is_leaf=lambda x: hasattr(x, "spec"))
             leaves = [jax.device_put(a.astype(l.dtype), s)
-                      for a, l, s in zip(leaves, like_leaves, sh_leaves)]
+                      for a, l, s in zip(leaves, like_leaves, sh_leaves,
+                                         strict=True)]
         else:
-            leaves = [a.astype(l.dtype) for a, l in zip(leaves, like_leaves)]
+            leaves = [a.astype(l.dtype)
+                      for a, l in zip(leaves, like_leaves, strict=True)]
         return jax.tree.unflatten(treedef, leaves), manifest["extra"]

@@ -176,7 +176,8 @@ class AliveSet:
         keys = _edge_key(np.asarray(src), np.asarray(dst), self.num_nodes)
         alive = self._alive
         n = self.num_nodes
-        for k, s in zip(keys.tolist(), np.asarray(kind).tolist()):
+        for k, s in zip(keys.tolist(), np.asarray(kind).tolist(),
+                        strict=True):
             if s > 0:
                 alive[k] = alive.get(k, 0) + 1
             else:

@@ -115,7 +115,7 @@ def encode_stream(snapshots: list[np.ndarray],
             # New device order: survivors (device order) then adds.
             device_edges = np.concatenate([prev[~drop_sel], adds], axis=0)
             v = np.zeros((max_edges,), dtype=np.float32)
-            cur_lookup = {int(k): float(val) for k, val in zip(ck, vals)}
+            cur_lookup = {int(k): float(val) for k, val in zip(ck, vals, strict=True)}
             new_keys = _edge_key(device_edges, num_nodes)
             v[:new_keys.shape[0]] = np.asarray(
                 [cur_lookup[int(k)] for k in new_keys], dtype=np.float32)

@@ -66,7 +66,7 @@ class DynGNNConfig:
 
 def init_params(key: Array, cfg: DynGNNConfig) -> dict:
     params: dict = {"layers": []}
-    for l, (d_in, d_gcn, d_out) in enumerate(cfg.layer_dims()):
+    for _l, (d_in, d_gcn, d_out) in enumerate(cfg.layer_dims()):
         key, k1, k2 = jax.random.split(key, 3)
         layer: dict = {}
         if cfg.model == "cdgcn":
@@ -126,9 +126,9 @@ def init_carries(cfg: DynGNNConfig, params: dict,
 
 # ---------------------------------------------------- layer-slice steps -----
 
-def spatial_stage(cfg: DynGNNConfig, layer_params: dict, layer: int,
+def spatial_stage(cfg: DynGNNConfig, layer_params: dict, _layer: int,
                   x: Array, edges: Array, edge_weights: Array,
-                  carry: Any, t_offset: Array | int) -> tuple[Array, Any]:
+                  carry: Any, _t_offset: Array | int) -> tuple[Array, Any]:
     """The per-snapshot (communication-free) stage of one layer.
 
     x: (Ts, N, d_in) slice; edges: (Ts, E, 2); returns (Ts, N, d_mid).
@@ -164,7 +164,7 @@ def spatial_stage(cfg: DynGNNConfig, layer_params: dict, layer: int,
     return y, carry
 
 
-def temporal_stage(cfg: DynGNNConfig, layer_params: dict, layer: int,
+def temporal_stage(cfg: DynGNNConfig, layer_params: dict, _layer: int,
                    y: Array, carry: Any,
                    t_offset: Array | int) -> tuple[Array, Any]:
     """The per-vertex timeline stage of one layer. y: (Ts, Nloc, d_mid)."""

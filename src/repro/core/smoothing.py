@@ -15,7 +15,7 @@ def _merge(edge_sets: list[np.ndarray],
     """Union of weighted edge lists with accumulation of duplicate weights."""
     all_edges = np.concatenate(edge_sets, axis=0)
     all_w = np.concatenate([np.full((e.shape[0],), w, dtype=np.float32)
-                            for e, w in zip(edge_sets, weights)])
+                            for e, w in zip(edge_sets, weights, strict=True)])
     # Dedup on (src, dst), summing weights.
     key = all_edges[:, 0].astype(np.int64) * (all_edges.max() + 1 if
                                               all_edges.size else 1) \

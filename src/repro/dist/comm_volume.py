@@ -133,7 +133,7 @@ def bfs_partition(edges: np.ndarray, num_nodes: int, p: int) -> np.ndarray:
     return owner
 
 
-def vertex_partition_volume(snapshots: list[np.ndarray], n: int, feat: int,
+def vertex_partition_volume(snapshots: list[np.ndarray], _n: int, feat: int,
                             layers: int, p: int,
                             owner: np.ndarray) -> float:
     """Hypergraph-style volume: λ-1 cut of the given ownership, per layer

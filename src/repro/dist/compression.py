@@ -53,7 +53,7 @@ def compressed_psum(grads: Any, axis, residual: Any) -> tuple[Any, Any]:
 
     flat_g, treedef = jax.tree.flatten(grads)
     flat_r = jax.tree.leaves(residual)
-    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    out = [one(g, r) for g, r in zip(flat_g, flat_r, strict=True)]
     red = jax.tree.unflatten(treedef, [o[0] for o in out])
     new_res = jax.tree.unflatten(treedef, [o[1] for o in out])
     return red, new_res

@@ -19,7 +19,15 @@ import jax
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
-_DP_NAMES = ("pod", "data")
+# Canonical mesh-axis names.  Every shard_map / PartitionSpec /
+# collective call in src/ must spell axes through these constants
+# (dynlint's shard-axes pass enforces it): an axis-name typo then fails
+# at import time instead of silently replicating a dimension.
+POD_AXIS = "pod"
+DATA_AXIS = "data"
+MODEL_AXIS = "model"
+
+_DP_NAMES = (POD_AXIS, DATA_AXIS)
 
 
 def dp_axes(mesh: Mesh) -> tuple:
@@ -106,8 +114,8 @@ def shard_devices(mesh: Mesh, axis: str = "data") -> list:
 # ------------------------------------------------------------------ LM ------
 
 def _model_if_divisible(dim: int, mesh: Mesh):
-    m = mesh.shape.get("model", 1)
-    return "model" if m > 1 and dim % m == 0 else None
+    m = mesh.shape.get(MODEL_AXIS, 1)
+    return MODEL_AXIS if m > 1 and dim % m == 0 else None
 
 
 def lm_param_specs(cfg, mesh: Mesh, mode: str = "tp") -> dict:
@@ -174,11 +182,12 @@ def din_param_specs(mesh: Mesh, cfg=None) -> dict:
     spec tree always matches ``din.init_params``."""
     from repro.models import din as din_mod
     cfg = cfg or din_mod.DINConfig()
-    abstract = jax.eval_shape(
-        lambda: din_mod.init_params(jax.random.PRNGKey(0), cfg))
+    abstract = jax.eval_shape(lambda: din_mod.init_params(
+        # shape-only trace: the key never produces values
+        jax.random.PRNGKey(0), cfg))  # dynlint: allow[prng]
     specs = replicate_specs(abstract)
-    table = P("model", None) if mesh.shape.get("model", 1) > 1 else P(None,
-                                                                      None)
+    table = (P(MODEL_AXIS, None)
+             if mesh.shape.get(MODEL_AXIS, 1) > 1 else P(None, None))
     for k in ("item_table", "cate_table", "user_table"):
         specs[k] = table
     return specs

@@ -158,6 +158,7 @@ def train_elastic_streamed(cfg, snapshots, values, frames, labels, *,
                            runtime: ElasticRuntime | None = None,
                            ckpt=None, ckpt_every: int = 0,
                            start_cursor: int = 0, carries=None,
+                           seed: int = 0,
                            log_every: int = 10,
                            log_fn=None) -> ElasticStreamState:
     """Distributed streamed training whose width P may change mid-run.
@@ -187,7 +188,7 @@ def train_elastic_streamed(cfg, snapshots, values, frames, labels, *,
         lr=1e-2, warmup_steps=10, total_steps=num_epochs * t_steps,
         weight_decay=0.0)
     if params is None:
-        params = mdl.init_params(jax.random.PRNGKey(0), cfg)
+        params = mdl.init_params(jax.random.PRNGKey(seed), cfg)
     if opt_state is None:
         opt_state = adamw.init_state(params)
     rt = runtime or ElasticRuntime(cfg, opt_cfg, axis, a2a_chunks)
@@ -261,7 +262,7 @@ def train_elastic_streamed(cfg, snapshots, values, frames, labels, *,
             prefetch_depth=prefetch_depth, a2a_chunks=a2a_chunks,
             pipeline_rounds=pipeline_rounds, opt_cfg=opt_cfg,
             params=params, opt_state=opt_state, stats=stats,
-            max_edges=max_edges, step_fn=rt.step(p),
+            max_edges=max_edges, step_fn=rt.step(p), seed=seed,
             shard_streams=seg_streams, start_round=rb, carries=carries,
             stop_fn=(lambda _blk: controller.interrupt())
             if controller.guard is not None else None,

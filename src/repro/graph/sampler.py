@@ -79,7 +79,7 @@ def sample_neighbors(graph: CSRGraph, seeds: np.ndarray, fanouts: list[int],
         cap *= f
         max_edges_per_layer.append(cap)
 
-    for layer, fanout in enumerate(fanouts):
+    for fanout in fanouts:
         srcs, dsts = [], []
         for v in frontier:
             lo, hi = graph.indptr[v], graph.indptr[v + 1]
@@ -112,7 +112,7 @@ def sample_neighbors(graph: CSRGraph, seeds: np.ndarray, fanouts: list[int],
     node_mask[:len(order)] = 1.0
 
     blocks = []
-    for edges, cap in zip(raw_blocks, max_edges_per_layer):
+    for edges, cap in zip(raw_blocks, max_edges_per_layer, strict=True):
         e_pad = np.zeros((cap, 2), dtype=np.int32)
         m = np.zeros((cap,), dtype=np.float32)
         e = min(edges.shape[0], cap)

@@ -91,14 +91,14 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
                           num_kv_blocks=num_kv_blocks, scale=scale),
         grid=(b, kvh, num_kv_blocks),
         in_specs=[
-            pl.BlockSpec((1, 1, g, d), lambda b_, h_, s_: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, g, d), lambda b_, h_, _s: (b_, h_, 0, 0)),
             pl.BlockSpec((1, kv_block, 1, d),
                          lambda b_, h_, s_: (b_, s_, h_, 0)),
             pl.BlockSpec((1, kv_block, 1, d),
                          lambda b_, h_, s_: (b_, s_, h_, 0)),
-            pl.BlockSpec((1, 1), lambda b_, h_, s_: (b_, h_)),
+            pl.BlockSpec((1, 1), lambda b_, h_, _s: (b_, h_)),
         ],
-        out_specs=pl.BlockSpec((1, 1, g, d), lambda b_, h_, s_: (b_, h_, 0, 0)),
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda b_, h_, _s: (b_, h_, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((b, kvh, g, d), q.dtype),
         scratch_shapes=[
             pltpu.VMEM((g, d), jnp.float32),   # acc

@@ -72,7 +72,7 @@ def banded_ttm(x: jax.Array, window: int, t_offset: jax.Array | int = 0,
         functools.partial(_kernel, window=window, t_block=t_block),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda _i, _j: (0, 0)),
             # predecessor tile (clamped at 0; out-of-band weights are zero)
             pl.BlockSpec((t_block, nf_block),
                          lambda i, j: (jnp.maximum(i - 1, 0), j)),

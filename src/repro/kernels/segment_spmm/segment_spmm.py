@@ -67,7 +67,7 @@ def bucketed_segment_sum(dst_local: jax.Array, messages: jax.Array,
         functools.partial(_kernel, node_block=node_block),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, epb), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, epb), lambda i, _j: (i, 0)),
             pl.BlockSpec((1, epb, feat_block), lambda i, j: (i, 0, j)),
         ],
         out_specs=pl.BlockSpec((1, node_block, feat_block),

@@ -81,7 +81,7 @@ def collective_bytes(hlo_text: str) -> dict:
     return out
 
 
-def roofline(cost: dict, coll: dict, num_chips: int, meta: dict) -> dict:
+def roofline(cost: dict, coll: dict, _num_chips: int, _meta: dict) -> dict:
     flops = float(cost.get("flops", 0.0))
     bytes_accessed = float(cost.get("bytes accessed", 0.0))
     # cost_analysis of the SPMD module is per-device already
@@ -97,7 +97,7 @@ def roofline(cost: dict, coll: dict, num_chips: int, meta: dict) -> dict:
             "collective_bytes_per_device": coll.get("total", 0)}
 
 
-def _compile_cell(cell, mesh):
+def _compile_cell(cell):
     jitted = jax.jit(cell.step, in_shardings=cell.in_shardings,
                      out_shardings=cell.out_shardings,
                      donate_argnums=cell.donate)
@@ -129,7 +129,7 @@ def _two_point_lm_cost(arch_id, shape_name, mesh, num_layers) -> tuple:
             arch_id, shape_name, mesh,
             config_override={"num_layers": k, "layer_unroll": k,
                              "unroll_chunks": True, "remat": False})
-        compiled = _compile_cell(cell, mesh)
+        compiled = _compile_cell(cell)
         aux.append(_cost_and_coll(compiled))
     (c1, k1), (c2, k2) = aux
 
@@ -155,7 +155,7 @@ def _two_point_lm_cost(arch_id, shape_name, mesh, num_layers) -> tuple:
              "aux2": {"flops": c2.get("flops"), "coll": k2.get("total", 0)}})
 
 
-def _dyngnn_analytic(cell, cfg, mesh, num_chips) -> tuple[dict, dict]:
+def _dyngnn_analytic(cell, cfg, num_chips) -> tuple[dict, dict]:
     """Analytic per-device roofline inputs for the paper's workload (the
     model is three dense ops + SpMM; formulas in EXPERIMENTS.md)."""
     meta = cell.meta
@@ -206,7 +206,7 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
         arch = registry.get_arch(arch_id)
         cell = steps_mod.build_cell(arch_id, shape_name, mesh)
         with mesh:
-            compiled = _compile_cell(cell, mesh)
+            compiled = _compile_cell(cell)
         t_compile = time.time() - t0
 
         mem = compiled.memory_analysis()
@@ -229,7 +229,7 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
             cost, coll = cost_c, {**coll_raw, "total": coll_c["total"]}
             correction = "two_point_unrolled"
         elif arch.family == "dyngnn":
-            cost, coll_a = _dyngnn_analytic(cell, arch.make_config(), mesh,
+            cost, coll_a = _dyngnn_analytic(cell, arch.make_config(),
                                             num_chips)
             coll = {**coll_raw, "total": coll_a["total"]}
             correction = "analytic"

@@ -10,12 +10,14 @@ from __future__ import annotations
 import jax
 
 from repro.compat import make_mesh_compat
+from repro.dist.sharding import DATA_AXIS, MODEL_AXIS, POD_AXIS
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    axes = ((POD_AXIS, DATA_AXIS, MODEL_AXIS) if multi_pod
+            else (DATA_AXIS, MODEL_AXIS))
     return make_mesh_compat(shape, axes)
 
 
@@ -25,7 +27,7 @@ def make_host_mesh(data: int = 1, model: int = 1):
     if data * model > n:
         raise ValueError(f"mesh {data}x{model} needs {data * model} devices, "
                          f"have {n}")
-    return make_mesh_compat((data, model), ("data", "model"))
+    return make_mesh_compat((data, model), (DATA_AXIS, MODEL_AXIS))
 
 
 def mesh_device_count(mesh) -> int:

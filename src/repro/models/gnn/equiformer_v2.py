@@ -147,7 +147,8 @@ def _so2_conv(so2: dict, feats: Array, rbf: Array, l_max: int,
 
 def forward(params: dict, batch: GraphBatch, *, l_max: int = 6,
             m_max: int = 2, n_heads: int = 8, n_rbf: int = 16,
-            cutoff: float = 10.0, edge_chunk: int | None = None) -> Array:
+            cutoff: float = 10.0,
+            edge_chunk: int | None = None) -> Array:  # noqa: ARG001
     """Returns invariant (l=0) node features (N, C)."""
     edges, emask = batch.edges, batch.edge_mask
     n = batch.node_feat.shape[0]

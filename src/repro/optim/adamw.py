@@ -95,7 +95,8 @@ def apply_updates(cfg: AdamWConfig, params: Any, grads: Any,
     flat_m = jax.tree.leaves(state["m"])
     flat_v = jax.tree.leaves(state["v"])
     flat_ma = jax.tree.leaves(state["master"])
-    new = [upd(*xs) for xs in zip(flat_p, flat_g, flat_m, flat_v, flat_ma)]
+    new = [upd(*xs) for xs in zip(flat_p, flat_g, flat_m, flat_v, flat_ma,
+                                  strict=True)]
     params_new = jax.tree.unflatten(treedef, [n[0] for n in new])
     state_new = {
         "m": jax.tree.unflatten(treedef, [n[1] for n in new]),

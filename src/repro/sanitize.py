@@ -1,0 +1,114 @@
+"""Runtime sanitizers for the invariants ``tools/dynlint`` checks
+statically (see ``docs/invariants.md``).
+
+Static analysis catches the patterns it can see; these guards catch the
+instances it can't (aliases smuggled through containers, cross-module
+call chains) by making the violation FAIL LOUDLY at the moment it
+happens instead of silently reading stale memory:
+
+* :class:`DonationGuard` — wraps a jitted function that donates input
+  buffers.  On host-CPU backends donation is a no-op (XLA keeps the
+  input alive), so a use-after-donation bug trains fine locally and
+  corrupts state only on real accelerators.  Under ``REPRO_SANITIZE=1``
+  the guard deletes the donated input buffers right after dispatch —
+  deletion is deferred by the runtime until in-flight reads complete,
+  so legal consumers (e.g. ``SlotStacker``'s already-dispatched copies)
+  are unaffected, while any LATER touch of a stale reference raises
+  ``RuntimeError: Array has been deleted`` at the exact broken line.
+
+* :class:`ThreadAffinityGuard` — a non-blocking ownership gate for
+  resident mutable state (the ``ServeEngine`` carries / warm-``z``
+  cache).  Same-thread re-entry is fine (``advance`` flushes the query
+  batchers); a SECOND thread entering while the first is still inside
+  raises immediately and is counted, instead of two threads interleaving
+  donated state-advances.  Always on — it costs one lock acquire.
+
+``REPRO_SANITIZE=1`` is read per construction (not import), so tests can
+toggle it; the trainers construct their appliers per epoch.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+from typing import Callable, Sequence
+
+import jax
+
+
+def sanitize_enabled() -> bool:
+    """True when runtime sanitizers should poison donated buffers."""
+    return os.environ.get("REPRO_SANITIZE", "") == "1"
+
+
+class DonationGuard:
+    """Poison donated inputs of a jitted fn so reuse raises immediately.
+
+    ``fn`` must be the jitted callable whose ``donate_argnums`` were
+    ``donate_argnums`` — the guard does not re-jit; it only mirrors the
+    donation contract onto the Python references.  With ``enabled=None``
+    the guard reads ``REPRO_SANITIZE`` once at construction and is a
+    zero-overhead passthrough when off.
+    """
+
+    def __init__(self, fn: Callable, donate_argnums: Sequence[int],
+                 enabled: bool | None = None):
+        self.fn = fn
+        self.donate_argnums = tuple(donate_argnums)
+        self.enabled = sanitize_enabled() if enabled is None else enabled
+
+    def __call__(self, *args):
+        out = self.fn(*args)
+        if self.enabled:
+            for i in self.donate_argnums:
+                for leaf in jax.tree_util.tree_leaves(args[i]):
+                    if isinstance(leaf, jax.Array) and not leaf.is_deleted():
+                        # deferred by the runtime until dispatched reads
+                        # of this buffer retire — safe under async dispatch
+                        leaf.delete()
+        return out
+
+
+def guard_donated(fn: Callable, donate_argnums: Sequence[int]) -> Callable:
+    """``fn`` unchanged when sanitizing is off, guarded when on."""
+    if not sanitize_enabled():
+        return fn
+    return DonationGuard(fn, donate_argnums, enabled=True)
+
+
+class ThreadAffinityGuard:
+    """Reject concurrent entry into a resident-state critical region.
+
+    Re-entrant for the OWNING thread (depth-counted); entry from any
+    other thread while held raises ``RuntimeError`` and increments
+    ``trips`` — the counter ``ServeResult.guard_trips`` surfaces.
+    """
+
+    def __init__(self, name: str):
+        self.name = name
+        self.trips = 0
+        self._owner: int | None = None
+        self._depth = 0
+        self._mu = threading.Lock()
+
+    def __enter__(self):
+        me = threading.get_ident()
+        with self._mu:
+            if self._owner is None or self._owner == me:
+                self._owner = me
+                self._depth += 1
+                return self
+            self.trips += 1
+            raise RuntimeError(
+                f"{self.name}: concurrent entry from thread {me} while "
+                f"thread {self._owner} holds the resident state — "
+                "ServeEngine ingest/advance/query must not run "
+                "concurrently from multiple threads (serialize callers "
+                "or run one engine per thread)")
+
+    def __exit__(self, *exc):
+        with self._mu:
+            self._depth -= 1
+            if self._depth == 0:
+                self._owner = None
+        return False

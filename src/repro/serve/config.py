@@ -186,6 +186,7 @@ class ServeResult:
     queries: int = 0
     query_batches: int = 0
     tokens_generated: int = 0               # lm family
+    guard_trips: int = 0                    # rejected concurrent entries
     ingest_seconds: float = 0.0
     query_seconds: float = 0.0
     query_latencies_ms: list[float] = field(default_factory=list)
@@ -231,4 +232,6 @@ class ServeResult:
                          f"p95 {self.p95_ms:.2f} ms)")
         if self.tokens_generated:
             parts.append(f"{self.tokens_generated} tokens")
+        if self.guard_trips:
+            parts.append(f"{self.guard_trips} concurrent entries rejected")
         return "; ".join(parts)

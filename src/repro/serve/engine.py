@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import sanitize
 from repro.core import models as mdl
 from repro.serve.batching import QueryBatcher
 from repro.serve.config import IngestSpec, ServeConfig, ServeResult
@@ -106,6 +107,11 @@ class ServeEngine:
         # smoothing_mode="none" data path).
         self.params = params if params is not None \
             else mdl.init_params(key, cfg)
+        # Resident state (carries, warm z) is single-owner by design:
+        # every method touching it enters this guard, so concurrent
+        # callers get an immediate RuntimeError (counted on ServeResult)
+        # instead of interleaved donated state-advances.
+        self._guard = sanitize.ThreadAffinityGuard("ServeEngine")
         self.carries = fresh_carries(cfg, self.params)
         self.ingester = OnlineIngester(self.config.ingest, cfg.num_nodes,
                                        report=self.report,
@@ -134,11 +140,12 @@ class ServeEngine:
     def ingest(self, stream) -> int:
         """Push live CTDG events into the open-window buffer."""
         self._family_guard("ingest", "dyngnn")
-        t0 = time.perf_counter()
-        n = self.ingester.push(stream)
-        self._result.ingest_seconds += time.perf_counter() - t0
-        self._result.events_ingested = n
-        return n
+        with self._guard:
+            t0 = time.perf_counter()
+            n = self.ingester.push(stream)
+            self._result.ingest_seconds += time.perf_counter() - t0
+            self._result.events_ingested = n
+            return n
 
     def advance(self, windows: int = 1) -> jax.Array:
         """Close ``windows`` time windows and roll the resident state.
@@ -150,22 +157,23 @@ class ServeEngine:
         — the cache is never invalidated under a pending request.
         """
         self._family_guard("advance", "dyngnn")
-        self._node_batcher.flush()
-        self._link_batcher.flush()
-        t0 = time.perf_counter()
-        for _ in range(windows):
-            item, frame = self.ingester.close_window()
-            t_idx = self.ingester.next_window - 1
-            item, frame = stage_item((item, frame))
-            edges, mask, vals = self.applier.consume(item)
-            self.z, self.carries = self._advance(
-                self.params, self.carries, frame, edges, mask, vals,
-                jnp.int32(t_idx))
-        jax.block_until_ready(self.z)
-        self._result.ingest_seconds += time.perf_counter() - t0
-        self._result.windows_advanced = self.ingester.next_window
-        self._result.resyncs = self.report.resyncs
-        return self.z
+        with self._guard:
+            self._node_batcher.flush()
+            self._link_batcher.flush()
+            t0 = time.perf_counter()
+            for _ in range(windows):
+                item, frame = self.ingester.close_window()
+                t_idx = self.ingester.next_window - 1
+                item, frame = stage_item((item, frame))
+                edges, mask, vals = self.applier.consume(item)
+                self.z, self.carries = self._advance(
+                    self.params, self.carries, frame, edges, mask, vals,
+                    jnp.int32(t_idx))
+            jax.block_until_ready(self.z)
+            self._result.ingest_seconds += time.perf_counter() - t0
+            self._result.windows_advanced = self.ingester.next_window
+            self._result.resyncs = self.report.resyncs
+            return self.z
 
     def advance_all(self) -> jax.Array:
         """Close every remaining configured window (bounded specs)."""
@@ -179,32 +187,37 @@ class ServeEngine:
     def submit_nodes(self, ids):
         """Queue a node-scoring request (micro-batched; see flush())."""
         self._family_guard("submit_nodes", "dyngnn")
-        self._warm_z()
-        return self._node_batcher.submit(np.asarray(ids))
+        with self._guard:
+            self._warm_z()
+            return self._node_batcher.submit(np.asarray(ids))
 
     def submit_links(self, pairs):
         """Queue a link-prediction request for (src, dst) pairs."""
         self._family_guard("submit_links", "dyngnn")
-        self._warm_z()
-        return self._link_batcher.submit(np.asarray(pairs))
+        with self._guard:
+            self._warm_z()
+            return self._link_batcher.submit(np.asarray(pairs))
 
     def flush(self) -> None:
         """Score everything queued (both query types)."""
         self._family_guard("flush", "dyngnn")
-        self._node_batcher.flush()
-        self._link_batcher.flush()
+        with self._guard:
+            self._node_batcher.flush()
+            self._link_batcher.flush()
 
     def query_nodes(self, ids) -> np.ndarray:
         """Synchronous node scores (B, C) against resident state."""
         self._family_guard("query_nodes", "dyngnn")
-        self._warm_z()
-        return self._node_batcher.query(np.asarray(ids))
+        with self._guard:
+            self._warm_z()
+            return self._node_batcher.query(np.asarray(ids))
 
     def query_links(self, pairs) -> np.ndarray:
         """Synchronous link logits (B, C) against resident state."""
         self._family_guard("query_links", "dyngnn")
-        self._warm_z()
-        return self._link_batcher.query(np.asarray(pairs))
+        with self._guard:
+            self._warm_z()
+            return self._link_batcher.query(np.asarray(pairs))
 
     def cold_query_nodes(self, ids) -> np.ndarray:
         """The no-resident-state baseline: re-encode the WHOLE ingested
@@ -322,8 +335,10 @@ class ServeEngine:
         """Session counters so far (flushes pending dyngnn queries)."""
         r = self._result
         if self.family == "dyngnn":
-            self._node_batcher.flush()
-            self._link_batcher.flush()
+            with self._guard:
+                self._node_batcher.flush()
+                self._link_batcher.flush()
+            r.guard_trips = self._guard.trips
             r.queries = (self._node_batcher.stats.queries
                          + self._link_batcher.stats.queries)
             r.query_batches = (self._node_batcher.stats.batches

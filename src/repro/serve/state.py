@@ -27,6 +27,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro import sanitize
 from repro.core import models as mdl
 from repro.stream.train_loop import advance_slice
 
@@ -37,7 +38,10 @@ def make_advance_step(cfg: mdl.DynGNNConfig):
     (params, carries, frame (N, F), edges (E, 2), mask (E,), values (E,),
     t_offset) -> (z_t (N, F'), new carries).  ``z_t`` is the warm-state
     cache the query steps read; the donated carries make the temporal
-    state truly resident (rolled in place, never reallocated).
+    state truly resident (rolled in place, never reallocated).  Under
+    ``REPRO_SANITIZE=1`` the retired carries are poisoned after each
+    call, so a stale alias (the PR-6 ``init_carries`` param-aliasing bug
+    class) raises instead of silently reusing donated memory.
     """
 
     @partial(jax.jit, donate_argnums=(1,))
@@ -47,7 +51,7 @@ def make_advance_step(cfg: mdl.DynGNNConfig):
                                        values[None], t_offset)
         return z[0], new_carries
 
-    return advance
+    return sanitize.guard_donated(advance, (1,))
 
 
 def make_node_query_step():

@@ -222,7 +222,7 @@ def train_distributed_streamed(cfg: mdl.DynGNNConfig, snapshots, values,
                                max_edges: int | None = None,
                                step_fn=None, shard_streams=None,
                                start_round: int = 0, carries=None,
-                               stop_fn=None,
+                               stop_fn=None, seed: int = 0,
                                log_every: int = 10,
                                log_fn=None) -> DistStreamState:
     """Stream the trace through snapshot-parallel distributed training.
@@ -282,7 +282,7 @@ def train_distributed_streamed(cfg: mdl.DynGNNConfig, snapshots, values,
         lr=1e-2, warmup_steps=10, total_steps=num_epochs * t_steps,
         weight_decay=0.0)
     if params is None:
-        params = mdl.init_params(jax.random.PRNGKey(0), cfg)
+        params = mdl.init_params(jax.random.PRNGKey(seed), cfg)
     if opt_state is None:
         opt_state = adamw.init_state(params)
 

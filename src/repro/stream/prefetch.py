@@ -22,6 +22,7 @@ from typing import Any, Callable, Iterable, Iterator
 import jax
 import jax.numpy as jnp
 
+from repro import sanitize
 from repro.core import graphdiff
 from repro.core.graphdiff import FullSnapshot, SnapshotDelta
 
@@ -39,6 +40,12 @@ class PrefetchIterator:
     context-manager protocol) unblocks and retires the worker when the
     consumer abandons the stream early, releasing the staged buffers.
     """
+
+    # _err is written by the worker and read by the consumer WITHOUT a
+    # lock: the write happens-before the sentinel put, and the consumer
+    # reads it only after get() returned that sentinel — the queue's
+    # internal lock is the synchronization edge (dynlint: locks pass).
+    _thread_owned = ("_err",)
 
     def __init__(self, host_iter: Iterable, stage_fn: Callable | None = None,
                  depth: int = 2):
@@ -162,7 +169,8 @@ class DeltaApplier:
             # shard rings run truly independent per-device streams.
             self.edges = jax.device_put(self.edges, device)
             self.mask = jax.device_put(self.mask, device)
-        self._apply = _APPLY_DONATING if donate else _APPLY_PLAIN
+        self._apply = (sanitize.guard_donated(_APPLY_DONATING, (0, 1))
+                       if donate else _APPLY_PLAIN)
 
     def consume(self, item: FullSnapshot | SnapshotDelta
                 ) -> tuple[jax.Array, jax.Array, jax.Array]:
@@ -175,7 +183,10 @@ class DeltaApplier:
                 self.edges, self.mask, jnp.asarray(item.drop_pos),
                 jnp.asarray(item.drop_mask), jnp.asarray(item.add_edges),
                 jnp.asarray(item.add_mask))
-        return self.edges, self.mask, jnp.asarray(item.values)
+        # The documented ring contract (SlotStacker): these aliases are
+        # donated by the NEXT consume — callers copy before then.  Under
+        # REPRO_SANITIZE=1 a stale read raises instead of going silent.
+        return self.edges, self.mask, jnp.asarray(item.values)  # dynlint: allow[donation]
 
 
 class SlotStacker:
@@ -203,5 +214,5 @@ class SlotStacker:
 
     def arrays(self):
         """-> (edges (slots, E, 2), mask (slots, E), values (slots, E))."""
-        es, ms, vs = zip(*self._slots)
+        es, ms, vs = zip(*self._slots, strict=True)
         return jnp.stack(es), jnp.stack(ms), jnp.stack(vs)

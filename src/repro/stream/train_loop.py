@@ -193,6 +193,7 @@ def train_streamed(cfg: mdl.DynGNNConfig, snapshots, values, frames,
                    slice_len: int | None = None,
                    report: enc.StreamReport | None = None,
                    step_fn=None,
+                   seed: int = 0,
                    log_every: int = 10,
                    log_fn=None) -> StreamTrainState:
     """Stream the trace through per-snapshot training.
@@ -225,7 +226,7 @@ def train_streamed(cfg: mdl.DynGNNConfig, snapshots, values, frames,
         lr=1e-2, warmup_steps=10, total_steps=num_epochs * t_steps,
         weight_decay=0.0)
     if params is None:
-        params = mdl.init_params(jax.random.PRNGKey(0), cfg)
+        params = mdl.init_params(jax.random.PRNGKey(seed), cfg)
     if opt_state is None:
         opt_state = adamw.init_state(params)
     sliced = slice_len is not None and slice_len > 1

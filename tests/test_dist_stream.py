@@ -199,7 +199,7 @@ def test_sharded_carries_keep_their_placement():
     from repro.core import models as mdl
     params = mdl.init_params(jax.random.PRNGKey(0), cfg)
     carries = dist.init_sharded_carries(cfg, params, mesh)
-    for h, c in carries:
+    for h, _c in carries:
         assert len(h.sharding.device_set) == 4
         assert h.sharding.spec == jax.sharding.PartitionSpec("data", None)
 

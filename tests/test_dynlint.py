@@ -1,0 +1,450 @@
+"""dynlint fixture suite: every pass has known-bad snippets it must
+flag and known-good snippets it must not, plus pragma semantics and the
+repo-wide green-run gate (``python -m tools.dynlint src/`` exits 0 —
+the same invocation CI runs)."""
+
+import sys
+import textwrap
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+if str(REPO) not in sys.path:
+    sys.path.insert(0, str(REPO))
+
+from tools.dynlint import core  # noqa: E402
+from tools.dynlint.passes import (donation, interpret_mode, locks,  # noqa: E402
+                                  prng, shard_axes, static_shapes)
+
+
+def run_pass(pass_mod, code, path="src/repro/fixture.py"):
+    src = core.Source.from_text(textwrap.dedent(code), path)
+    return [f for f in pass_mod.check(src)
+            if not src.allowed(f.pass_id, f.line)]
+
+
+# ------------------------------------------------------------ donation ------
+
+def test_donation_flags_read_after_donate():
+    bad = """
+    import jax
+    _step = jax.jit(apply, donate_argnums=(0,))
+
+    def run(buf, y):
+        out = _step(buf, y)
+        return buf + 1
+    """
+    fs = run_pass(donation, bad)
+    assert len(fs) == 1 and "'buf'" in fs[0].message
+
+
+def test_donation_clean_when_rebound():
+    good = """
+    import jax
+    _step = jax.jit(apply, donate_argnums=(0,))
+
+    def run(buf, y):
+        buf = _step(buf, y)
+        return buf + 1
+    """
+    assert run_pass(donation, good) == []
+
+
+def test_donation_branches_fork_and_merge():
+    good = """
+    _step = jax.jit(apply, donate_argnums=(0,))
+
+    def run(buf, y, flag):
+        if flag:
+            buf = _step(buf, y)
+        else:
+            buf = buf + 1
+        return buf
+    """
+    assert run_pass(donation, good) == []
+    bad = """
+    _step = jax.jit(apply, donate_argnums=(0,))
+
+    def run(buf, y, flag):
+        if flag:
+            _step(buf, y)
+        return buf
+    """
+    assert len(run_pass(donation, bad)) == 1
+
+
+def test_donation_factory_and_self_attr():
+    bad = """
+    class Engine:
+        def __init__(self, cfg):
+            self._advance = make_advance_step(cfg)
+
+        def step(self, frame):
+            z = self._advance(self.params, self.carries, frame)
+            return self.carries
+    """
+    fs = run_pass(donation, bad)
+    assert any("self.carries" in f.message for f in fs)
+    good = """
+    class Engine:
+        def __init__(self, cfg):
+            self._advance = make_advance_step(cfg)
+
+        def step(self, frame):
+            z, self.carries = self._advance(self.params, self.carries,
+                                            frame)
+            return z
+    """
+    assert run_pass(donation, good) == []
+
+
+def test_donation_return_alias_of_ring_buffer():
+    bad = """
+    import jax
+
+    class Ring:
+        def __init__(self):
+            self._apply = jax.jit(apply, donate_argnums=(0,))
+
+        def consume(self, x):
+            self.buf = self._apply(self.buf, x)
+            return self.buf
+    """
+    fs = run_pass(donation, bad)
+    assert len(fs) == 1 and "alias" in fs[0].message
+    allowed = bad.replace("return self.buf",
+                          "return self.buf  # dynlint: allow[donation]")
+    assert run_pass(donation, allowed) == []
+
+
+def test_donation_loop_carried_read():
+    bad = """
+    _step = jax.jit(apply, donate_argnums=(0,))
+
+    def run(buf, xs):
+        for x in xs:
+            y = buf * 2
+            _step(buf, x)
+        return y
+    """
+    fs = run_pass(donation, bad)
+    assert len(fs) == 1
+
+
+# ----------------------------------------------------------- interpret ------
+
+def test_interpret_literal_flagged():
+    bad = """
+    out = pl.pallas_call(kernel, out_shape=shape, interpret=True)(x)
+    """
+    fs = run_pass(interpret_mode, bad,
+                  path="src/repro/kernels/seg/seg.py")
+    assert len(fs) == 1 and "interpret=True" in fs[0].message
+    assert run_pass(interpret_mode, bad.replace("True", "False"),
+                    path="src/repro/kernels/seg/seg.py")
+
+
+def test_interpret_threaded_flag_and_exempt_file_clean():
+    good = """
+    def f(x, interpret=None):
+        mode = resolve_interpret(interpret)
+        return pl.pallas_call(kernel, out_shape=s, interpret=mode)(x)
+    """
+    assert run_pass(interpret_mode, good,
+                    path="src/repro/kernels/seg/seg.py") == []
+    literal = "out = pl.pallas_call(k, interpret=False)(x)"
+    assert run_pass(interpret_mode, literal,
+                    path="src/repro/kernels/common.py") == []
+
+
+# ---------------------------------------------------------------- prng ------
+
+def test_prng_literal_key_flagged_outside_tests():
+    bad = "params = init(jax.random.PRNGKey(0), cfg)"
+    fs = run_pass(prng, bad)
+    assert len(fs) == 1 and "PRNGKey(0)" in fs[0].message
+    assert run_pass(prng, bad, path="tests/test_x.py") == []
+    assert run_pass(prng, bad, path="examples/quickstart.py") == []
+    good = "params = init(jax.random.PRNGKey(seed), cfg)"
+    assert run_pass(prng, good) == []
+
+
+def test_prng_key_reuse_flagged():
+    bad = """
+    def init(key):
+        a = jax.random.normal(key, (2,))
+        b = jax.random.normal(key, (2,))
+        return a, b
+    """
+    fs = run_pass(prng, bad)
+    assert len(fs) == 1 and "second consumer" in fs[0].message
+
+
+def test_prng_split_between_consumers_clean():
+    good = """
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        a = jax.random.normal(k1, (2,))
+        b = jax.random.normal(k2, (2,))
+        return a, b
+    """
+    assert run_pass(prng, good) == []
+
+
+def test_prng_subscripted_subkeys_and_loop_resplit_clean():
+    good = """
+    def init(key, n):
+        ks = jax.random.split(key, n)
+        a = jax.random.normal(ks[0], (2,))
+        b = jax.random.normal(ks[1], (2,))
+        layers = []
+        for _ in range(n):
+            key, k = jax.random.split(key)
+            layers.append(jax.random.normal(k, (2,)))
+        return a, b, layers
+    """
+    assert run_pass(prng, good) == []
+
+
+def test_prng_reuse_inside_loop_flagged():
+    bad = """
+    def init(key, n):
+        out = []
+        for _ in range(n):
+            out.append(jax.random.normal(key, (2,)))
+        return out
+    """
+    assert len(run_pass(prng, bad)) == 1
+
+
+def test_prng_exclusive_branches_clean():
+    good = """
+    def build(key, kind):
+        if kind == "a":
+            return init_a(key)
+        elif kind == "b":
+            return init_b(key)
+        return init_c(key)
+    """
+    assert run_pass(prng, good) == []
+
+
+def test_prng_array_split_is_not_a_key():
+    good = """
+    def rotate(x):
+        x1, x2 = jnp.split(x, 2, axis=-1)
+        return f(x1, x2), g(x1, x2)
+    """
+    assert run_pass(prng, good) == []
+
+
+# ---------------------------------------------------------- shard_axes ------
+
+def test_shard_axes_literal_flagged():
+    bad = 'spec = P("data", None)'
+    fs = run_pass(shard_axes, bad)
+    assert len(fs) == 1 and "'data'" in fs[0].message
+    bad2 = 'total = jax.lax.psum(x, "model")'
+    assert len(run_pass(shard_axes, bad2)) == 1
+
+
+def test_shard_axes_constants_and_params_clean():
+    good = """
+    from repro.dist.sharding import DATA_AXIS, MODEL_AXIS
+    spec = P(DATA_AXIS, None)
+    table = P(MODEL_AXIS, None)
+    def reduce(x, axis):
+        return jax.lax.psum(x, axis)
+    def specs(axis="data"):
+        return P(axis, None)
+    """
+    assert run_pass(shard_axes, good) == []
+
+
+# ------------------------------------------------------- static_shapes ------
+
+def test_static_shapes_host_syncs_flagged():
+    bad = """
+    import jax, numpy as np
+
+    @jax.jit
+    def step(x):
+        n = int(x.sum())
+        h = np.asarray(x)
+        jax.block_until_ready(x)
+        return x.item()
+    """
+    fs = run_pass(static_shapes, bad)
+    kinds = sorted(f.message.split(" ")[0] for f in fs)
+    assert len(fs) == 4, kinds
+
+
+def test_static_shapes_if_on_traced_param_flagged():
+    bad = """
+    @jax.jit
+    def step(x):
+        if x:
+            return x + 1
+        return x
+    """
+    fs = run_pass(static_shapes, bad)
+    assert len(fs) == 1 and "lax.cond" in fs[0].message
+
+
+def test_static_shapes_static_argnames_clean():
+    good = """
+    import functools, jax
+
+    @functools.partial(jax.jit, static_argnames=("block",))
+    def step(x, block):
+        if block > 8:
+            return x + 1
+        return x
+    """
+    assert run_pass(static_shapes, good) == []
+
+
+def test_static_shapes_device_ops_clean():
+    good = """
+    @jax.jit
+    def step(x):
+        y = jnp.asarray(x)
+        return y.astype(jnp.float32)
+    """
+    assert run_pass(static_shapes, good) == []
+
+
+def test_static_shapes_traced_helper_and_shard_map():
+    bad = """
+    def advance_slice(cfg, params, carries, frames):
+        return np.asarray(frames)
+    """
+    assert len(run_pass(static_shapes, bad)) == 1
+    bad2 = """
+    def body(x):
+        return x.item()
+    stepped = shard_map(body, mesh=mesh, in_specs=s, out_specs=s)
+    """
+    assert len(run_pass(static_shapes, bad2)) == 1
+
+
+# --------------------------------------------------------------- locks ------
+
+def test_locks_unguarded_write_from_thread_target_flagged():
+    bad = """
+    import threading
+
+    class Worker:
+        def __init__(self):
+            self._t = threading.Thread(target=self._work)
+
+        def _work(self):
+            self._val = 1
+    """
+    fs = run_pass(locks, bad)
+    assert len(fs) == 1 and "self._val" in fs[0].message
+
+
+def test_locks_held_lock_clean():
+    good = """
+    import threading
+
+    class Worker:
+        def __init__(self):
+            self._mu = threading.Lock()
+            self._t = threading.Thread(target=self._work)
+
+        def _work(self):
+            with self._mu:
+                self._val = 1
+    """
+    assert run_pass(locks, good) == []
+
+
+def test_locks_thread_owned_allowlist_clean():
+    good = """
+    import threading
+
+    class Worker:
+        _thread_owned = ("_err",)
+
+        def __init__(self):
+            self._t = threading.Thread(target=self._work)
+
+        def _work(self):
+            self._err = ValueError("x")
+    """
+    assert run_pass(locks, good) == []
+
+
+def test_locks_closure_target_checked():
+    bad = """
+    import threading
+
+    class Saver:
+        def save(self):
+            def write():
+                self._busy = True
+            threading.Thread(target=write).start()
+    """
+    assert len(run_pass(locks, bad)) == 1
+    good = """
+    import threading
+
+    class Saver:
+        def save(self):
+            def write():
+                data = pack()
+                emit(data)
+            threading.Thread(target=write).start()
+    """
+    assert run_pass(locks, good) == []
+
+
+# -------------------------------------------------------------- pragmas -----
+
+def test_pragma_same_line_and_comment_above():
+    code = """
+    a = init(jax.random.PRNGKey(0), cfg)  # dynlint: allow[prng]
+    # deliberate registry fallback
+    # dynlint: allow[prng]
+    b = init(jax.random.PRNGKey(1), cfg)
+    c = init(jax.random.PRNGKey(2), cfg)
+    """
+    fs = run_pass(prng, code)
+    assert len(fs) == 1 and "PRNGKey(2)" in fs[0].message
+
+
+def test_pragma_star_and_wrong_pass():
+    code = """
+    a = init(jax.random.PRNGKey(0), cfg)  # dynlint: allow[*]
+    b = init(jax.random.PRNGKey(1), cfg)  # dynlint: allow[donation]
+    """
+    fs = run_pass(prng, code)
+    assert len(fs) == 1 and fs[0].line == 3
+
+
+# ------------------------------------------------------ CLI / repo gate -----
+
+def test_cli_json_output_and_exit_codes(tmp_path, capsys):
+    bad = tmp_path / "bad.py"
+    bad.write_text('spec = P("data", None)\n')
+    rc = core.main([str(bad), "--format", "json"])
+    out = capsys.readouterr().out
+    import json
+    findings = json.loads(out)
+    assert rc == 1 and findings[0]["pass"] == "shard_axes"
+    good = tmp_path / "good.py"
+    good.write_text("x = 1\n")
+    assert core.main([str(good)]) == 0
+
+
+def test_cli_select_subset(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text('spec = P("data", None)\n')
+    assert core.main([str(bad), "--select", "prng"]) == 0
+    assert core.main([str(bad), "--select", "shard_axes"]) == 1
+
+
+def test_repo_src_is_dynlint_clean():
+    findings = core.run([str(REPO / "src")])
+    assert findings == [], "\n".join(f.render() for f in findings)

@@ -112,7 +112,7 @@ def test_scripted_rescale_4_8_2_matches_serial_reference(_trace,
     # per-segment stream accounting: one entry per constant-width stretch
     assert [(s[0], s[1]) for s in rep.segments] == \
         [(0, 4), (1, 8), (2, 8), (3, 2)]
-    for start, p, per_shard in rep.segments:
+    for _start, p, per_shard in rep.segments:
         assert len(per_shard) == p and all(b > 0 for b in per_shard)
 
 

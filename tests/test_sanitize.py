@@ -1,0 +1,181 @@
+"""Runtime sanitizer tests (``repro.sanitize``).
+
+The DonationGuard must make use-after-donation bugs fail loudly on the
+host CPU backend — where XLA donation is a no-op and the bug class is
+otherwise invisible — and the ThreadAffinityGuard must reject (and
+count) concurrent entry into the ServeEngine's resident state.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import sanitize
+from repro.core import ctdg
+from repro.core import models as mdl
+from repro.core.graphdiff import FullSnapshot, SnapshotDelta
+from repro.serve import IngestSpec, ServeConfig, ServeEngine
+from repro.stream.prefetch import DeltaApplier, SlotStacker
+
+
+# The guard is tested against a NON-donating jit: it must enforce the
+# donation contract on the Python references itself, independent of
+# whether this backend/jax version invalidates donated args natively.
+def _plain_step():
+    return jax.jit(lambda buf, y: buf + y)
+
+
+# ------------------------------------------------------ DonationGuard -------
+
+def test_donation_guard_poisons_donated_input():
+    step = sanitize.DonationGuard(_plain_step(), (0,), enabled=True)
+    buf = jnp.arange(4.0)
+    y = jnp.ones(4)
+    out = step(buf, y)
+    np.testing.assert_allclose(np.asarray(out), np.arange(4.0) + 1.0)
+    assert buf.is_deleted()
+    with pytest.raises(RuntimeError):
+        np.asarray(buf)          # the stale read raises at the exact line
+    assert not y.is_deleted()    # non-donated args untouched
+
+
+def test_donation_guard_off_is_passthrough():
+    step = sanitize.DonationGuard(_plain_step(), (0,), enabled=False)
+    buf = jnp.arange(4.0)
+    step(buf, jnp.ones(4))
+    assert not buf.is_deleted()
+    np.testing.assert_allclose(np.asarray(buf), np.arange(4.0))
+
+
+def test_guard_donated_reads_env(monkeypatch):
+    fn = _plain_step()
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    assert sanitize.guard_donated(fn, (0,)) is fn
+    monkeypatch.setenv("REPRO_SANITIZE", "0")
+    assert sanitize.guard_donated(fn, (0,)) is fn
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    guarded = sanitize.guard_donated(fn, (0,))
+    assert isinstance(guarded, sanitize.DonationGuard)
+    assert guarded.enabled and guarded.donate_argnums == (0,)
+
+
+def _full(e_max=8, num_edges=3):
+    edges = np.zeros((e_max, 2), np.int32)
+    edges[:num_edges] = [[0, 1], [1, 2], [2, 3]]
+    mask = np.zeros((e_max,), np.float32)
+    mask[:num_edges] = 1.0
+    values = mask.copy()
+    return FullSnapshot(edges, mask, values, num_edges)
+
+
+def _delta(e_max=8, d_max=2, a_max=2):
+    return SnapshotDelta(
+        drop_pos=np.zeros((d_max,), np.int32),
+        drop_mask=np.zeros((d_max,), np.float32),
+        add_edges=np.zeros((a_max, 2), np.int32),
+        add_mask=np.zeros((a_max,), np.float32),
+        values=np.ones((e_max,), np.float32),
+        num_edges=3)
+
+
+def test_delta_applier_stale_alias_raises_under_sanitize(monkeypatch):
+    """The ring contract made executable: aliases returned by ``consume``
+    are invalidated by the next delta consume, and under REPRO_SANITIZE=1
+    the stale read raises instead of silently returning old memory."""
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    app = DeltaApplier(max_edges=8)
+    e1, m1, _ = app.consume(_full())
+    app.consume(_delta())           # donates the previous ring buffers
+    assert e1.is_deleted() and m1.is_deleted()
+    with pytest.raises(RuntimeError):
+        np.asarray(e1)
+
+
+def test_slot_stacker_copies_survive_sanitized_ring(monkeypatch):
+    """SlotStacker copies slots out before the next consume, so its
+    blocks stay valid even when the ring is poisoned behind it."""
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    app = DeltaApplier(max_edges=8)
+    stack = SlotStacker(slots=2)
+    stack.put(0, *app.consume(_full()))
+    stack.put(1, *app.consume(_delta()))
+    app.consume(_delta())           # retires the slot-1 ring buffers
+    es, ms, vs = stack.arrays()
+    assert es.shape == (2, 8, 2) and ms.shape == (2, 8)
+    np.testing.assert_allclose(np.asarray(ms[0]),
+                               np.asarray(_full().mask))
+
+
+# -------------------------------------------------- ThreadAffinityGuard -----
+
+def test_affinity_guard_same_thread_reentrant():
+    g = sanitize.ThreadAffinityGuard("test")
+    with g:
+        with g:                      # advance() -> flush() re-entry
+            pass
+        assert g._depth == 1
+    assert g._owner is None and g.trips == 0
+
+
+def test_affinity_guard_cross_thread_entry_trips():
+    g = sanitize.ThreadAffinityGuard("test")
+    errs: list[BaseException] = []
+
+    def intrude():
+        try:
+            with g:
+                pass
+        except RuntimeError as e:
+            errs.append(e)
+
+    with g:
+        t = threading.Thread(target=intrude)
+        t.start()
+        t.join()
+    assert len(errs) == 1 and "concurrent entry" in str(errs[0])
+    assert g.trips == 1
+    # released: re-entry is clean again and the trip count is sticky
+    with g:
+        pass
+    assert g.trips == 1
+
+
+# ------------------------------------------------ ServeEngine integration ---
+
+def test_serve_engine_rejects_concurrent_entry_and_counts_it():
+    n, w = 16, 4
+    stream = ctdg.synthetic_ctdg(n, 120, delete_frac=0.25, seed=3).sorted()
+    cfg = mdl.DynGNNConfig(model="cdgcn", num_nodes=n, num_steps=w,
+                           window=2, checkpoint_blocks=2)
+    spec = IngestSpec(num_windows=w,
+                      time_range=(float(stream.time.min()),
+                                  float(stream.time.max())),
+                      block_size=2, max_edges=256)
+    eng = ServeEngine(ServeConfig(model=cfg, ingest=spec),
+                      params=mdl.init_params(jax.random.PRNGKey(5), cfg))
+    eng.ingest(stream)
+
+    errs: list[BaseException] = []
+
+    def intrude():
+        try:
+            eng.ingest(stream)
+        except RuntimeError as e:
+            errs.append(e)
+
+    with eng._guard:                 # main thread holds the resident state
+        t = threading.Thread(target=intrude)
+        t.start()
+        t.join()
+    assert len(errs) == 1 and "ServeEngine" in str(errs[0])
+    assert eng.result().guard_trips == 1
+
+    # single-threaded use is unaffected after the trip
+    eng.advance_all()
+    scores = eng.query_nodes(np.arange(n))
+    assert scores.shape[0] == n
+    assert eng.result().guard_trips == 1

@@ -94,7 +94,8 @@ def test_tight_budget_overflow_surfaces_via_checkify():
                                                  edges_per_block=128),
         errors=checkify.all_checks)
     err, _ = fn(x, edges, w)
-    with pytest.raises(Exception, match="overflow edges_per_block"):
+    with pytest.raises(checkify.JaxRuntimeError,
+                       match="overflow edges_per_block"):
         err.throw()
     # the safe default budget passes the same check
     fn_ok = checkify.checkify(

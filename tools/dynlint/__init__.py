@@ -1,0 +1,12 @@
+"""dynlint — project-invariant static analysis for this repo.
+
+``python -m tools.dynlint src/`` runs six AST passes encoding the
+codebase's load-bearing invariants (donation safety, interpret-mode
+discipline, PRNG hygiene, shard-spec consistency, static-shape
+discipline, lock discipline).  See ``docs/invariants.md`` for the pass
+catalogue, the historical bug each one encodes, and the pragma syntax.
+"""
+
+from tools.dynlint.core import Finding, Source, run
+
+__all__ = ["Finding", "Source", "run"]

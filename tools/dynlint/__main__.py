@@ -1,0 +1,5 @@
+import sys
+
+from tools.dynlint.core import main
+
+sys.exit(main())

@@ -1,0 +1,114 @@
+"""Small shared AST helpers for dynlint passes."""
+
+from __future__ import annotations
+
+import ast
+
+
+def dotted(node: ast.AST) -> str | None:
+    """'jax.random.PRNGKey' for a Name/Attribute chain, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_name(call: ast.Call) -> str | None:
+    return dotted(call.func)
+
+
+def name_tail(name: str | None) -> str | None:
+    return name.rsplit(".", 1)[-1] if name else None
+
+
+def const_tuple(node: ast.AST) -> tuple[int, ...] | None:
+    """Literal int or tuple-of-ints, else None."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return (node.value,)
+    if isinstance(node, ast.Tuple):
+        out = []
+        for e in node.elts:
+            if not (isinstance(e, ast.Constant) and isinstance(e.value, int)):
+                return None
+            out.append(e.value)
+        return tuple(out)
+    return None
+
+
+def target_key(node: ast.AST) -> str | None:
+    """A trackable lvalue/rvalue key: bare name or self attribute."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if (isinstance(node, ast.Attribute)
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "self"):
+        return f"self.{node.attr}"
+    return None
+
+
+def assigned_keys(stmt: ast.stmt) -> set[str]:
+    """Keys (re)bound by one statement, including tuple targets."""
+    keys: set[str] = set()
+
+    def add(t: ast.AST) -> None:
+        if isinstance(t, (ast.Tuple, ast.List)):
+            for e in t.elts:
+                add(e)
+        else:
+            k = target_key(t)
+            if k:
+                keys.add(k)
+
+    if isinstance(stmt, ast.Assign):
+        for t in stmt.targets:
+            add(t)
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        add(stmt.target)
+    elif isinstance(stmt, ast.For):
+        add(stmt.target)
+    elif isinstance(stmt, ast.With):
+        for item in stmt.items:
+            if item.optional_vars is not None:
+                add(item.optional_vars)
+    return keys
+
+
+def terminates(body: list[ast.stmt]) -> bool:
+    """True if control flow never falls past this block's last stmt."""
+    return bool(body) and isinstance(
+        body[-1], (ast.Return, ast.Raise, ast.Break, ast.Continue))
+
+
+def is_jax_jit(node: ast.AST) -> bool:
+    """True for `jax.jit` / `jit` references."""
+    return name_tail(dotted(node)) == "jit"
+
+
+def jit_call_info(call: ast.Call) -> tuple[bool, tuple[int, ...]]:
+    """(is a jax.jit(...) call, donated argnums from a literal kwarg)."""
+    if not is_jax_jit(call.func):
+        return False, ()
+    for kw in call.keywords:
+        if kw.arg == "donate_argnums":
+            return True, const_tuple(kw.value) or ()
+    return True, ()
+
+
+def partial_jit_decorator(dec: ast.AST) -> tuple[bool, tuple[int, ...]]:
+    """Decorator `@partial(jax.jit, donate_argnums=...)` or `@jax.jit`."""
+    if is_jax_jit(dec):
+        return True, ()
+    if isinstance(dec, ast.Call):
+        n = name_tail(call_name(dec))
+        if n == "partial" and dec.args and is_jax_jit(dec.args[0]):
+            for kw in dec.keywords:
+                if kw.arg == "donate_argnums":
+                    return True, const_tuple(kw.value) or ()
+            return True, ()
+        if is_jax_jit(dec.func):
+            return True, ()
+    return False, ()

@@ -1,0 +1,165 @@
+"""dynlint core: file walking, pragma handling, pass running.
+
+A *pass* is a module in ``tools.dynlint.passes`` exposing
+
+    PASS_ID: str            # stable id, also the pragma key
+    check(src: Source) -> list[Finding]
+
+Findings are suppressed by a pragma comment on the reported line or on
+a comment line immediately above it::
+
+    x = f(key)  # dynlint: allow[prng]
+
+    # why this is deliberate ...
+    # dynlint: allow[donation,prng]
+    return self.edges
+
+Pragmas name the passes they silence; ``allow[*]`` silences all.
+"""
+
+from __future__ import annotations
+
+import ast
+import json
+import re
+import sys
+from dataclasses import dataclass, field
+from pathlib import Path
+
+PRAGMA_RE = re.compile(r"#\s*dynlint:\s*allow\[([\w\s,*-]+)\]")
+
+
+@dataclass(frozen=True)
+class Finding:
+    pass_id: str
+    path: str
+    line: int
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: [{self.pass_id}] {self.message}"
+
+    def as_dict(self) -> dict:
+        return {"pass": self.pass_id, "path": self.path, "line": self.line,
+                "message": self.message}
+
+
+@dataclass
+class Source:
+    """One parsed file handed to every pass."""
+
+    path: str
+    text: str
+    tree: ast.AST
+    lines: list[str] = field(default_factory=list)
+    _allow: dict[int, set[str]] = field(default_factory=dict)
+
+    @classmethod
+    def parse(cls, path: str | Path) -> "Source":
+        return cls.from_text(Path(path).read_text(), str(path))
+
+    @classmethod
+    def from_text(cls, text: str, path: str = "<fixture>.py") -> "Source":
+        src = cls(path=path, text=text,
+                  tree=ast.parse(text, filename=path),
+                  lines=text.splitlines())
+        src._allow = _collect_pragmas(src.lines)
+        return src
+
+    def allowed(self, pass_id: str, line: int) -> bool:
+        allow = self._allow.get(line, ())
+        return pass_id in allow or "*" in allow
+
+
+def _collect_pragmas(lines: list[str]) -> dict[int, set[str]]:
+    """1-based line -> pass ids allowed there.
+
+    A pragma applies to its own line; pragmas on comment-only lines also
+    flow down through the comment block onto the first code line below.
+    """
+    allow: dict[int, set[str]] = {}
+    pending: set[str] = set()
+    for i, raw in enumerate(lines, start=1):
+        ids: set[str] = set()
+        m = PRAGMA_RE.search(raw)
+        if m:
+            ids = {p.strip() for p in m.group(1).split(",") if p.strip()}
+            allow.setdefault(i, set()).update(ids)
+        stripped = raw.strip()
+        if stripped.startswith("#"):
+            pending |= ids
+        else:
+            if pending and stripped:
+                allow.setdefault(i, set()).update(pending)
+            if stripped:
+                pending = set()
+    return allow
+
+
+def iter_py_files(paths: list[str]) -> list[Path]:
+    out: list[Path] = []
+    for p in paths:
+        path = Path(p)
+        if path.is_dir():
+            out.extend(sorted(f for f in path.rglob("*.py")
+                              if "__pycache__" not in f.parts))
+        elif path.suffix == ".py":
+            out.append(path)
+        else:
+            raise FileNotFoundError(f"not a python file or directory: {p}")
+    return out
+
+
+def load_passes(select: list[str] | None = None):
+    from tools.dynlint.passes import ALL_PASSES
+    if select is None:
+        return list(ALL_PASSES)
+    by_id = {p.PASS_ID: p for p in ALL_PASSES}
+    unknown = [s for s in select if s not in by_id]
+    if unknown:
+        raise KeyError(f"unknown pass id(s) {unknown}; "
+                       f"have {sorted(by_id)}")
+    return [by_id[s] for s in select]
+
+
+def run(paths: list[str], select: list[str] | None = None
+        ) -> list[Finding]:
+    passes = load_passes(select)
+    findings: list[Finding] = []
+    for f in iter_py_files(paths):
+        try:
+            src = Source.parse(f)
+        except SyntaxError as e:
+            findings.append(Finding("parse", str(f), e.lineno or 0,
+                                    f"syntax error: {e.msg}"))
+            continue
+        for p in passes:
+            for fd in p.check(src):
+                if not src.allowed(fd.pass_id, fd.line):
+                    findings.append(fd)
+    findings.sort(key=lambda fd: (fd.path, fd.line, fd.pass_id))
+    return findings
+
+
+def main(argv: list[str] | None = None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.dynlint",
+        description="project-invariant static analysis "
+                    "(see docs/invariants.md)")
+    ap.add_argument("paths", nargs="+", help="files or directories")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated pass ids (default: all)")
+    args = ap.parse_args(argv)
+    select = args.select.split(",") if args.select else None
+    findings = run(args.paths, select)
+    if args.format == "json":
+        print(json.dumps([fd.as_dict() for fd in findings], indent=2))
+    else:
+        for fd in findings:
+            print(fd.render())
+        n_passes = len(load_passes(select))
+        print(f"dynlint: {len(findings)} finding(s), "
+              f"{n_passes} pass(es)", file=sys.stderr)
+    return 1 if findings else 0

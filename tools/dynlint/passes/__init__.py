@@ -1,0 +1,15 @@
+"""Pass registry.  Order is the order findings are attributed in."""
+
+from tools.dynlint.passes import (donation, interpret_mode, locks, prng,
+                                  shard_axes, static_shapes)
+
+ALL_PASSES = (
+    donation,
+    interpret_mode,
+    prng,
+    shard_axes,
+    static_shapes,
+    locks,
+)
+
+__all__ = ["ALL_PASSES"]

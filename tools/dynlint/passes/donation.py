@@ -1,0 +1,221 @@
+"""Donation-safety pass.
+
+Invariant: a buffer passed at a donated argument position of a jitted
+call must not be read again in the same scope unless it was rebound
+from the call's result first.  On host CPU donation is a no-op, so the
+bug class trains fine locally and corrupts state only on accelerators
+(the ``DeltaApplier`` ring / resident-carry incidents).
+
+Donating callables are recognized from:
+
+* ``NAME = jax.jit(f, donate_argnums=...)`` (module or class scope)
+* ``@partial(jax.jit, donate_argnums=...)`` decorated functions
+* ``sanitize.guard_donated(f, argnums)`` wrappers
+* factory calls registered in ``DONATING_FACTORIES`` (functions that
+  RETURN a donating step, e.g. ``serve.state.make_advance_step``)
+* either arm of a conditional expression being donating
+
+Additionally, a method that donates one of its ``self`` attributes and
+*returns* that same attribute is flagged: the returned alias is
+invalidated by the next call (the ring contract) — pragma the return if
+the aliasing is documented API.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from tools.dynlint import astutil as au
+from tools.dynlint.core import Finding, Source
+
+PASS_ID = "donation"
+
+# factory function -> donate_argnums of the callable it returns
+DONATING_FACTORIES = {
+    "make_advance_step": (1,),
+}
+
+
+def _donation_of_value(value: ast.AST, env: dict[str, tuple[int, ...]]
+                       ) -> tuple[int, ...] | None:
+    """Donated argnums if `value` evaluates to a donating callable."""
+    if isinstance(value, ast.IfExp):
+        return (_donation_of_value(value.body, env)
+                or _donation_of_value(value.orelse, env))
+    key = au.target_key(value)
+    if key is not None:
+        return env.get(key)
+    if not isinstance(value, ast.Call):
+        return None
+    is_jit, nums = au.jit_call_info(value)
+    if is_jit and nums:
+        return nums
+    name = au.name_tail(au.call_name(value))
+    if name == "guard_donated" and len(value.args) >= 2:
+        return au.const_tuple(value.args[1])
+    if name in DONATING_FACTORIES:
+        return DONATING_FACTORIES[name]
+    return None
+
+
+def _collect_env(tree: ast.AST) -> dict[str, tuple[int, ...]]:
+    """Map of donating callables: names, self-attrs, decorated defs."""
+    env: dict[str, tuple[int, ...]] = {}
+
+    class V(ast.NodeVisitor):
+        def visit_Assign(self, node: ast.Assign) -> None:
+            nums = _donation_of_value(node.value, env)
+            if nums:
+                for t in node.targets:
+                    k = au.target_key(t)
+                    if k:
+                        env[k] = nums
+            self.generic_visit(node)
+
+        def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+            for dec in node.decorator_list:
+                ok, nums = au.partial_jit_decorator(dec)
+                if ok and nums:
+                    env[node.name] = nums
+            self.generic_visit(node)
+
+    V().visit(tree)
+    return env
+
+
+class _Flow:
+    """Poison-set walk over one function body."""
+
+    def __init__(self, src: Source, env: dict[str, tuple[int, ...]]):
+        self.src = src
+        self.env = env
+        self.findings: list[Finding] = []
+        self.donated_attrs: set[str] = set()
+
+    def _loads(self, node: ast.AST) -> list[tuple[str, int]]:
+        out = []
+        for n in ast.walk(node):
+            k = au.target_key(n)
+            if k and isinstance(getattr(n, "ctx", None), ast.Load):
+                out.append((k, n.lineno))
+        return out
+
+    def _donations(self, stmt: ast.stmt) -> list[tuple[str, int]]:
+        """(key, line) for donated Name/self-attr args in this stmt."""
+        out = []
+        for node in ast.walk(stmt):
+            if not isinstance(node, ast.Call):
+                continue
+            fn_key = au.target_key(node.func)
+            nums = self.env.get(fn_key) if fn_key else None
+            if nums is None and isinstance(node.func, ast.Name):
+                nums = self.env.get(node.func.id)
+            if not nums:
+                continue
+            for i in nums:
+                if i < len(node.args):
+                    k = au.target_key(node.args[i])
+                    if k:
+                        out.append((k, node.lineno))
+                        if k.startswith("self."):
+                            self.donated_attrs.add(k)
+        return out
+
+    def run(self, body: list[ast.stmt], poison: dict[str, int]
+            ) -> dict[str, int]:
+        for stmt in body:
+            poison = self.step(stmt, poison)
+        return poison
+
+    def step(self, stmt: ast.stmt, poison: dict[str, int]
+             ) -> dict[str, int]:
+        if isinstance(stmt, ast.If):
+            a = self.run(stmt.body, dict(poison))
+            b = self.run(stmt.orelse, dict(poison))
+            # a branch that returns/raises never reaches the code below
+            ta, tb = au.terminates(stmt.body), au.terminates(stmt.orelse)
+            if ta and tb:
+                return poison
+            if ta:
+                return b
+            if tb:
+                return a
+            return {**a, **b}
+        if isinstance(stmt, (ast.For, ast.While)):
+            p = dict(poison)
+            for k in au.assigned_keys(stmt):
+                p.pop(k, None)
+            p = self.run(stmt.body, p)
+            # second pass: catches donate-at-end-of-body / read-at-top
+            self.run(stmt.body, dict(p))
+            return self.run(stmt.orelse, {**poison, **p})
+        if isinstance(stmt, (ast.With, ast.Try)):
+            p = dict(poison)
+            for blk in ("body", "orelse", "finalbody"):
+                p = self.run(getattr(stmt, blk, []) or [], p)
+            for h in getattr(stmt, "handlers", []) or []:
+                p = self.run(h.body, p)
+            return p
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return poison          # nested scopes analyzed separately
+        return self._stmt(stmt, poison)
+
+    def _stmt(self, stmt: ast.stmt, poison: dict[str, int]
+              ) -> dict[str, int]:
+        # 1) reads of already-poisoned keys are violations
+        for key, line in self._loads(stmt):
+            if key in poison:
+                self.findings.append(Finding(
+                    PASS_ID, self.src.path, line,
+                    f"'{key}' was donated to a jitted call on line "
+                    f"{poison[key]} and read again without being rebound "
+                    "from the call's result"))
+                poison = {k: v for k, v in poison.items() if k != key}
+        # 2) this stmt's donations poison their args ...
+        for key, line in self._donations(stmt):
+            poison = {**poison, key: line}
+        # 3) ... except keys the stmt rebinds (result rebinding)
+        for key in au.assigned_keys(stmt):
+            poison.pop(key, None)
+        return poison
+
+
+def _check_return_alias(flow: _Flow, fn: ast.FunctionDef, src: Source
+                        ) -> list[Finding]:
+    if not flow.donated_attrs:
+        return []
+    out = []
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and node is not fn:
+            continue
+        if isinstance(node, ast.Return) and node.value is not None:
+            for sub in ast.walk(node.value):
+                k = au.target_key(sub)
+                if k in flow.donated_attrs:
+                    out.append(Finding(
+                        PASS_ID, src.path, node.lineno,
+                        f"returns '{k}', an alias of a buffer this method "
+                        "donates — the next call invalidates the returned "
+                        "value (callers must copy first); pragma if this "
+                        "ring contract is documented API"))
+    return out
+
+
+def check(src: Source) -> list[Finding]:
+    env = _collect_env(src.tree)
+    findings: list[Finding] = []
+    for node in ast.walk(src.tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        flow = _Flow(src, env)
+        flow.run(node.body, {})
+        findings.extend(flow.findings)
+        if isinstance(node, ast.FunctionDef):
+            findings.extend(_check_return_alias(flow, node, src))
+    # the loop double-pass can report the same read twice
+    seen: set[tuple[int, str]] = set()
+    return [fd for fd in findings
+            if (fd.line, fd.message) not in seen
+            and not seen.add((fd.line, fd.message))]

@@ -1,0 +1,40 @@
+"""Interpret-mode discipline pass.
+
+Invariant (PR 2 incident): Pallas call sites must route their interpret
+flag through ``kernels.common.resolve_interpret`` so the env override
+and backend probing stay in one place — a literal ``interpret=True``
+left behind from debugging silently runs the kernel in interpret mode
+on real backends; a literal ``False`` breaks hosts without a compiled
+lowering.  Only ``kernels/common.py`` itself may spell the literal.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from tools.dynlint.core import Finding, Source
+
+PASS_ID = "interpret"
+
+EXEMPT_SUFFIXES = ("kernels/common.py",)
+
+
+def check(src: Source) -> list[Finding]:
+    norm = src.path.replace("\\", "/")
+    if norm.endswith(EXEMPT_SUFFIXES):
+        return []
+    out: list[Finding] = []
+    for node in ast.walk(src.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        for kw in node.keywords:
+            if (kw.arg == "interpret"
+                    and isinstance(kw.value, ast.Constant)
+                    and isinstance(kw.value.value, bool)):
+                out.append(Finding(
+                    PASS_ID, src.path, kw.value.lineno,
+                    f"literal interpret={kw.value.value} at a call site — "
+                    "thread the flag through "
+                    "kernels.common.resolve_interpret() so env override "
+                    "and backend probing apply"))
+    return out

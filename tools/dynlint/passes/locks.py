@@ -1,0 +1,143 @@
+"""Lock-discipline pass (static race detector for the threading layer).
+
+Invariant: an attribute mutated from a ``threading.Thread`` target must
+be written under a held lock (``with self.<lock>:`` where ``<lock>`` is
+assigned from ``threading.Lock``/``RLock``) or be declared in the
+class's ``_thread_owned`` allowlist with a comment explaining the
+synchronization edge (e.g. ``PrefetchIterator._err``: the queue
+sentinel is the happens-before edge).
+
+Thread targets are resolved per class (``target=self.<method>``) and
+per enclosing function (``target=<local closure>``).  Writes through
+method calls (``self._q.put(...)``) are not attribute stores and are
+the queue's own problem.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from tools.dynlint import astutil as au
+from tools.dynlint.core import Finding, Source
+
+PASS_ID = "locks"
+
+
+def _thread_target(call: ast.Call) -> ast.AST | None:
+    if au.name_tail(au.call_name(call)) != "Thread":
+        return None
+    for kw in call.keywords:
+        if kw.arg == "target":
+            return kw.value
+    return None
+
+
+def _lock_attrs(cls: ast.ClassDef) -> set[str]:
+    """self attrs assigned threading.Lock()/RLock() anywhere in the class."""
+    out: set[str] = set()
+    for node in ast.walk(cls):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            if au.name_tail(au.call_name(node.value)) in ("Lock", "RLock"):
+                for t in node.targets:
+                    k = au.target_key(t)
+                    if k and k.startswith("self."):
+                        out.add(k.split(".", 1)[1])
+    return out
+
+
+def _thread_owned(cls: ast.ClassDef) -> set[str]:
+    """Names in the class-level ``_thread_owned`` tuple/list/set."""
+    for stmt in cls.body:
+        targets = []
+        if isinstance(stmt, ast.Assign):
+            targets = stmt.targets
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            targets = [stmt.target]
+        if not any(isinstance(t, ast.Name) and t.id == "_thread_owned"
+                   for t in targets):
+            continue
+        value = stmt.value
+        if isinstance(value, (ast.Tuple, ast.List, ast.Set)):
+            return {e.value for e in value.elts
+                    if isinstance(e, ast.Constant)
+                    and isinstance(e.value, str)}
+    return set()
+
+
+def _held_lock_writes(fn: ast.AST, locks: set[str]
+                      ) -> dict[int, bool]:
+    """id(node) -> True for self-attr Stores under `with self.<lock>:`."""
+    held: dict[int, bool] = {}
+
+    def visit(node: ast.AST, under: bool) -> None:
+        if isinstance(node, ast.With):
+            locked = under or any(
+                (au.target_key(item.context_expr) or "")
+                .removeprefix("self.") in locks
+                for item in node.items)
+            for child in ast.iter_child_nodes(node):
+                visit(child, locked)
+            return
+        if isinstance(node, ast.Attribute) and \
+                isinstance(node.ctx, ast.Store):
+            held[id(node)] = under
+        for child in ast.iter_child_nodes(node):
+            visit(child, under)
+
+    visit(fn, False)
+    return held
+
+
+def _check_target(cls_name: str, fn: ast.AST, locks: set[str],
+                  owned: set[str], src: Source) -> list[Finding]:
+    out = []
+    held = _held_lock_writes(fn, locks)
+    for node in ast.walk(fn):
+        if not (isinstance(node, ast.Attribute)
+                and isinstance(node.ctx, ast.Store)
+                and isinstance(node.value, ast.Name)
+                and node.value.id == "self"):
+            continue
+        if node.attr in owned or held.get(id(node), False):
+            continue
+        out.append(Finding(
+            PASS_ID, src.path, node.lineno,
+            f"'self.{node.attr}' is written from a threading.Thread "
+            f"target of {cls_name} without a held lock — wrap in `with "
+            "self.<lock>:` or declare it in the class's _thread_owned "
+            "allowlist with the synchronization argument"))
+    return out
+
+
+def check(src: Source) -> list[Finding]:
+    out: list[Finding] = []
+    for cls in ast.walk(src.tree):
+        if not isinstance(cls, ast.ClassDef):
+            continue
+        locks = _lock_attrs(cls)
+        owned = _thread_owned(cls)
+        methods = {m.name: m for m in cls.body
+                   if isinstance(m, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef))}
+        for node in ast.walk(cls):
+            if not isinstance(node, ast.Call):
+                continue
+            target = _thread_target(node)
+            if target is None:
+                continue
+            # target=self.<method>
+            key = au.target_key(target)
+            if key and key.startswith("self."):
+                m = methods.get(key.split(".", 1)[1])
+                if m is not None:
+                    out.extend(_check_target(cls.name, m, locks, owned,
+                                             src))
+            # target=<local closure defined in the same method>
+            elif isinstance(target, ast.Name):
+                for m in methods.values():
+                    for sub in ast.walk(m):
+                        if isinstance(sub, ast.FunctionDef) and \
+                                sub.name == target.id:
+                            out.extend(_check_target(
+                                cls.name, sub, locks, owned, src))
+    return out

@@ -1,0 +1,209 @@
+"""PRNG hygiene pass.
+
+Two rules (PR 3 incident: hard-coded ``PRNGKey(0)`` hid seed plumbing
+regressions for three PRs):
+
+* **literal keys** — ``PRNGKey(<int literal>)`` / ``jax.random.key(<int
+  literal>)`` is banned outside tests/examples; thread the run seed.
+  Deliberate shape-only / dry-run keys carry ``# dynlint: allow[prng]``.
+* **key reuse** — a key variable passed as a call argument twice in one
+  scope without an intervening ``split``/``fold_in`` rebinding produces
+  correlated randomness.  Branches of an ``if`` merge by max use count;
+  a single consuming use inside a loop body counts as reuse (it repeats
+  every iteration).  Nested ``def``/``lambda`` bodies are separate
+  scopes.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from tools.dynlint import astutil as au
+from tools.dynlint.core import Finding, Source
+
+PASS_ID = "prng"
+
+_SPLITTERS = {"split", "fold_in"}
+_EXEMPT_PARTS = ("tests", "examples")
+
+
+def _is_key_call(node: ast.AST) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    full = au.call_name(node) or ""
+    if au.name_tail(full) == "PRNGKey":
+        return True
+    # key/split/fold_in only under jax.random — `jnp.split` splits
+    # arrays, not keys, and bare `key(...)`/`split(...)` are too common
+    return any(full.endswith(f"random.{n}")
+               for n in ("key", "split", "fold_in"))
+
+
+def _literal_key_findings(src: Source) -> list[Finding]:
+    out = []
+    for node in ast.walk(src.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = au.name_tail(au.call_name(node))
+        full = au.call_name(node) or ""
+        is_maker = (name == "PRNGKey"
+                    or full.endswith("random.key"))
+        if (is_maker and node.args
+                and isinstance(node.args[0], ast.Constant)
+                and isinstance(node.args[0].value, int)):
+            out.append(Finding(
+                PASS_ID, src.path, node.lineno,
+                f"hard-coded {name}({node.args[0].value}) — thread the "
+                "run seed (RunConfig.seed / ServeConfig.seed) instead"))
+    return out
+
+
+class _Reuse:
+    """Per-scope consuming-use counts for key variables."""
+
+    def __init__(self, src: Source):
+        self.src = src
+        self.findings: list[Finding] = []
+
+    def scope(self, body: list[ast.stmt],
+              params: tuple[str, ...] | set[str] = ()) -> None:
+        self._block(body, {p: 0 for p in params})
+
+    def _block(self, body: list[ast.stmt], uses: dict[str, int]
+               ) -> dict[str, int]:
+        for stmt in body:
+            uses = self._stmt(stmt, uses)
+        return uses
+
+    def _stmt(self, stmt: ast.stmt, uses: dict[str, int]) -> dict[str, int]:
+        if isinstance(stmt, ast.If):
+            a = self._block(stmt.body, dict(uses))
+            b = self._block(stmt.orelse, dict(uses))
+            # a branch that returns/raises never reaches the code below
+            ta, tb = au.terminates(stmt.body), au.terminates(stmt.orelse)
+            if ta and tb:
+                return uses
+            if ta:
+                return b
+            if tb:
+                return a
+            keys = set(a) | set(b)
+            return {k: max(a.get(k, 0), b.get(k, 0)) for k in keys}
+        if isinstance(stmt, (ast.For, ast.While)):
+            u = self._block(stmt.body, dict(uses))
+            u = self._block(stmt.body, u)   # loop repeats its body
+            return self._block(stmt.orelse, u)
+        if isinstance(stmt, (ast.With, ast.Try)):
+            for blk in ("body", "orelse", "finalbody"):
+                uses = self._block(getattr(stmt, blk, []) or [], uses)
+            for h in getattr(stmt, "handlers", []) or []:
+                uses = self._block(h.body, uses)
+            return uses
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return uses             # separate scope
+        return self._linear(stmt, uses)
+
+    def _linear(self, stmt: ast.stmt, uses: dict[str, int]
+                ) -> dict[str, int]:
+        # count consuming uses: key names appearing as call args of
+        # non-splitting calls.  Count NAME OCCURRENCES (node ids), not
+        # per enclosing call — g(f(key)) is one use, f(key, key) two.
+        # `keys[i]` picks a distinct subkey, so a subscripted name is
+        # not a use of the whole array.
+        subscripted: set[int] = set()
+        for node in self._walk_scope(stmt):
+            if isinstance(node, ast.Subscript) and \
+                    isinstance(node.value, ast.Name):
+                subscripted.add(id(node.value))
+        counted: set[int] = set()
+        for node in self._walk_scope(stmt):
+            if not isinstance(node, ast.Call):
+                continue
+            fn_name = au.name_tail(au.call_name(node)) or ""
+            if fn_name in _SPLITTERS:
+                continue
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                for sub in ast.walk(arg):
+                    if (isinstance(sub, ast.Name) and sub.id in uses
+                            and id(sub) not in counted
+                            and id(sub) not in subscripted):
+                        counted.add(id(sub))
+                        uses[sub.id] += 1
+                        if uses[sub.id] == 2:
+                            self.findings.append(Finding(
+                                PASS_ID, self.src.path, sub.lineno,
+                                f"key '{sub.id}' passed to a second "
+                                "consumer without an intervening "
+                                "jax.random.split/fold_in — correlated "
+                                "randomness"))
+        # rebindings: fresh key vars enter tracking, others leave
+        for tgt, val in self._assignments(stmt):
+            if self._is_key_value(val):
+                uses[tgt] = 0
+            else:
+                uses.pop(tgt, None)
+        return uses
+
+    @staticmethod
+    def _walk_scope(stmt: ast.stmt):
+        skip: set[int] = set()
+        for node in ast.walk(stmt):
+            if id(node) in skip:
+                continue
+            if isinstance(node, (ast.Lambda, ast.FunctionDef,
+                                 ast.AsyncFunctionDef)):
+                for sub in ast.walk(node):
+                    if sub is not node:
+                        skip.add(id(sub))
+                continue
+            yield node
+
+    @staticmethod
+    def _is_key_value(val: ast.AST) -> bool:
+        if _is_key_call(val):
+            return True
+        if isinstance(val, ast.Subscript) and _is_key_call(val.value):
+            return True             # split(key)[0]
+        return False
+
+    @staticmethod
+    def _assignments(stmt: ast.stmt):
+        if isinstance(stmt, ast.Assign):
+            for t in stmt.targets:
+                if isinstance(t, ast.Name):
+                    yield t.id, stmt.value
+                elif isinstance(t, (ast.Tuple, ast.List)) and \
+                        _is_key_call(stmt.value):
+                    # key, sub = split(key): every element is a key
+                    for e in t.elts:
+                        if isinstance(e, ast.Name):
+                            yield e.id, stmt.value
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None \
+                and isinstance(stmt.target, ast.Name):
+            yield stmt.target.id, stmt.value
+
+
+def check(src: Source) -> list[Finding]:
+    norm = src.path.replace("\\", "/")
+    if any(part in norm.split("/") for part in _EXEMPT_PARTS):
+        return []
+    findings = _literal_key_findings(src)
+    scopes: list[tuple[list[ast.stmt], set[str]]] = [(src.tree.body, set())]
+    for node in ast.walk(src.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # parameters that are PRNG keys by naming convention join
+            # the tracked set with zero uses
+            keyish = {a.arg for a in (node.args.posonlyargs + node.args.args
+                                      + node.args.kwonlyargs)
+                      if a.arg in ("key", "rng") or a.arg.endswith("_key")}
+            scopes.append((node.body, keyish))
+    for body, params in scopes:
+        r = _Reuse(src)
+        r.scope(body, params)
+        findings.extend(r.findings)
+    # loop double-pass can duplicate
+    seen: set[tuple[int, str]] = set()
+    return [fd for fd in findings
+            if (fd.line, fd.message) not in seen
+            and not seen.add((fd.line, fd.message))]

@@ -1,0 +1,73 @@
+"""Shard-spec consistency pass.
+
+Invariant: mesh-axis names in ``PartitionSpec`` / ``P`` constructions
+and collective calls must be spelled through the canonical constants in
+``repro.dist.sharding`` (``DATA_AXIS``/``MODEL_AXIS``/``POD_AXIS``) or
+arrive as variables — never as inline string literals.  A typo'd
+literal axis silently replicates the dimension (PartitionSpec validates
+against the mesh only at sharding time, far from the spec); constants
+fail at import.
+
+Function-parameter *defaults* (``axis: str = "data"``) are allowed:
+they name the convention once, and call sites pass variables.
+``dist/sharding.py`` itself defines the constants.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from tools.dynlint import astutil as au
+from tools.dynlint.core import Finding, Source
+
+PASS_ID = "shard_axes"
+
+_SPEC_NAMES = {"P", "PartitionSpec"}
+_COLLECTIVES = {"psum", "pmean", "pmax", "pmin", "psum_scatter",
+                "all_to_all", "all_gather", "axis_index", "ppermute",
+                "pshuffle", "axis_size"}
+
+
+def _default_ranges(tree: ast.AST) -> set[int]:
+    """id()s of nodes inside function-signature defaults (exempt)."""
+    out: set[int] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            defaults = list(node.args.defaults) + [
+                d for d in node.args.kw_defaults if d is not None]
+            for d in defaults:
+                for sub in ast.walk(d):
+                    out.add(id(sub))
+    return out
+
+
+def _string_literals(node: ast.AST):
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Constant) and isinstance(sub.value, str):
+            yield sub
+
+
+def check(src: Source) -> list[Finding]:
+    out: list[Finding] = []
+    exempt = _default_ranges(src.tree)
+    for node in ast.walk(src.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = au.name_tail(au.call_name(node))
+        if name in _SPEC_NAMES:
+            where = "PartitionSpec"
+        elif name in _COLLECTIVES:
+            where = f"collective {name}()"
+        else:
+            continue
+        for arg in list(node.args) + [kw.value for kw in node.keywords]:
+            for lit in _string_literals(arg):
+                if id(lit) in exempt:
+                    continue
+                out.append(Finding(
+                    PASS_ID, src.path, lit.lineno,
+                    f"axis name {lit.value!r} spelled as a string literal "
+                    f"in {where} — use the mesh-axis constants from "
+                    "repro.dist.sharding (DATA_AXIS/MODEL_AXIS/POD_AXIS)"))
+    return out

@@ -1,0 +1,140 @@
+"""Static-shape discipline pass.
+
+Invariant: functions that trace under ``jax.jit`` / ``shard_map`` must
+stay abstract — host syncs and data-dependent Python control flow
+either fail at trace time (opaquely, deep in a stack) or silently
+de-optimize by forcing a device round-trip per step:
+
+* ``.item()`` / ``int(tracer)`` / ``float(tracer)`` concretize
+* ``np.asarray`` / ``np.array`` on a tracer forces a host transfer
+  (``jnp.asarray`` is fine — it stays on device)
+* ``jax.block_until_ready`` inside a traced body is a host sync
+* a Python ``if`` on a function parameter of a directly-jitted
+  function branches on traced data (use ``jnp.where``/``lax.cond``)
+
+Traced scopes: ``@jax.jit`` / ``@partial(jax.jit, ...)`` decorated
+defs, local defs passed to ``jax.jit(...)`` / ``shard_map(...)``, and
+the helpers in ``TRACED_HELPERS`` (functions only ever called from
+inside traced code, where the decorator is out of sight).
+"""
+
+from __future__ import annotations
+
+import ast
+
+from tools.dynlint import astutil as au
+from tools.dynlint.core import Finding, Source
+
+PASS_ID = "static_shapes"
+
+# called only from inside jitted bodies; treat as traced
+TRACED_HELPERS = {
+    "advance_slice", "slice_weights_with_loops", "slice_nll",
+    "snapshot_block_body", "_sp_block_body", "hybrid_spmm",
+}
+
+_NP_ROOTS = {"np", "numpy"}
+
+
+def _jitted_names(tree: ast.AST) -> set[str]:
+    """Local function names passed to jax.jit(...) or shard_map(...)."""
+    out: set[str] = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = au.name_tail(au.call_name(node))
+        if name in ("jit", "shard_map") and node.args:
+            if isinstance(node.args[0], ast.Name):
+                out.add(node.args[0].id)
+    return out
+
+
+def _static_params(fn: ast.AST) -> set[str]:
+    """Params marked static via the jit decorator's static_argnames /
+    static_argnums — Python values at trace time, free to branch on."""
+    out: set[str] = set()
+    pos = [a.arg for a in fn.args.posonlyargs + fn.args.args]
+    for dec in fn.decorator_list:
+        if not isinstance(dec, ast.Call):
+            continue
+        for kw in dec.keywords:
+            if kw.arg == "static_argnames":
+                for sub in ast.walk(kw.value):
+                    if isinstance(sub, ast.Constant) and \
+                            isinstance(sub.value, str):
+                        out.add(sub.value)
+            elif kw.arg == "static_argnums":
+                nums = au.const_tuple(kw.value) or ()
+                out.update(pos[i] for i in nums if i < len(pos))
+    return out
+
+
+def _traced_functions(tree: ast.AST):
+    """(FunctionDef, directly_jitted: bool) for every traced scope."""
+    by_call = _jitted_names(tree)
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        direct = any(au.partial_jit_decorator(d)[0]
+                     for d in node.decorator_list)
+        if direct or node.name in by_call:
+            yield node, True
+        elif node.name in TRACED_HELPERS:
+            yield node, False
+
+
+def _scope_nodes(fn: ast.AST):
+    """Walk fn's body without descending into nested defs/lambdas."""
+    stack = list(ast.iter_child_nodes(fn))
+    while stack:
+        node = stack.pop()
+        yield node
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda, ast.ClassDef)):
+            stack.extend(ast.iter_child_nodes(node))
+
+
+def check(src: Source) -> list[Finding]:
+    out: list[Finding] = []
+    for fn, direct in _traced_functions(src.tree):
+        params = {a.arg for a in (fn.args.posonlyargs + fn.args.args
+                                  + fn.args.kwonlyargs)}
+        params -= _static_params(fn)
+        for node in _scope_nodes(fn):
+            if isinstance(node, ast.Call):
+                name = au.call_name(node) or ""
+                tail = au.name_tail(name)
+                if tail == "item" and isinstance(node.func, ast.Attribute):
+                    out.append(Finding(
+                        PASS_ID, src.path, node.lineno,
+                        ".item() inside a traced function concretizes a "
+                        "tracer — keep the value on device"))
+                elif tail in ("asarray", "array") and \
+                        name.split(".")[0] in _NP_ROOTS:
+                    out.append(Finding(
+                        PASS_ID, src.path, node.lineno,
+                        f"{name}() inside a traced function forces a host "
+                        "transfer — use jnp.asarray"))
+                elif tail == "block_until_ready":
+                    out.append(Finding(
+                        PASS_ID, src.path, node.lineno,
+                        "block_until_ready inside a traced function is a "
+                        "host sync — sync at the call site instead"))
+                elif tail in ("int", "float") and name == tail and \
+                        node.args and not isinstance(node.args[0],
+                                                     ast.Constant):
+                    out.append(Finding(
+                        PASS_ID, src.path, node.lineno,
+                        f"{tail}() on a non-literal inside a traced "
+                        "function concretizes a tracer — use "
+                        "astype/jnp casts"))
+            elif direct and isinstance(node, ast.If):
+                for sub in ast.walk(node.test):
+                    if isinstance(sub, ast.Name) and sub.id in params:
+                        out.append(Finding(
+                            PASS_ID, src.path, node.lineno,
+                            f"Python `if` on parameter '{sub.id}' of a "
+                            "jitted function branches on traced data — "
+                            "use jnp.where or lax.cond"))
+                        break
+    return out
