@@ -5,7 +5,9 @@ Emits ``name,us_per_call,derived`` CSV rows:
                            throughput + sharded streaming)
   * scaling_bench        — Fig. 5 strong scaling + Fig. 7 weak scaling
                            (+ the elastic ``rescale`` smoke row: re-shard
-                           payload bytes + time-to-recompose)
+                           payload bytes + time-to-recompose; + the
+                           out-of-core ``sampled`` smoke row: full-graph
+                           budget refusals vs a sampled run that fits)
   * partition_compare    — Table 2 (snapshot vs hypergraph vertex part.)
   * checkpoint_bench     — §3.1/§6.2 (memory/time vs nb)
   * kernel_bench         — hot-spot op microbenchmarks
@@ -46,6 +48,8 @@ def main() -> None:
         ("scaling", scaling_bench.run),
         ("rescale", lambda: scaling_bench.rescale_smoke(
             **({"n": 32, "t": 8} if smoke else {}))),
+        ("sampled", lambda: scaling_bench.sampled_smoke(
+            **({"n": 192, "t": 8} if smoke else {}))),
         ("partition_compare", partition_compare.run),
         ("checkpoint", lambda: checkpoint_bench.run(
             **({"n": 128, "t": 16} if smoke else {}))),

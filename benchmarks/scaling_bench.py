@@ -14,6 +14,9 @@ Three layers of evidence, since no pod is attached:
     model (volume from repro.dist.comm_volume, bandwidth = intra-node vs
     inter-node split exactly as §6.3 describes: intra volume 1/K, inter
     (K-1)/K for K = P/8 nodes).
+  * MEASURED: the out-of-core win condition (``sampled_smoke``) — a
+    simulated device budget every full-graph schedule refuses, trained
+    by ``mode="sampled"`` with staged bytes below the full-graph epoch.
 """
 
 from __future__ import annotations
@@ -310,6 +313,92 @@ def rescale_smoke(model: str = "tmgcn", n: int = 64, t: int = 16) -> None:
            f"grew_replicas={grew} rounds={len(res.losses)}")
 
 
+def sampled_smoke(model: str = "cdgcn", n: int = 384, t: int = 8,
+                  density: float = 3.0) -> None:
+    """Out-of-core win condition: a simulated per-device budget that
+    EVERY full-graph schedule refuses (``DeviceBudgetError``) trains
+    under ``mode="sampled"``.
+
+    Rows: per-mode refusal margins; sampled staged bytes vs the bytes
+    the full-graph stream would stage over the same epoch (must be
+    smaller — that is out-of-core); host-sample edge throughput; and
+    the per-round sample / stage / step phase split off the
+    ``SampleReport``.
+    """
+    from repro import hoststore as hs
+    from repro.data.dyngnn import DTDGPipeline
+
+    n_dev = len(jax.devices())
+    nb = 2
+    win = t // nb
+    p = max(pp for pp in (1, 2, 4, 8) if pp <= n_dev and win % pp == 0)
+    smooth = {"tmgcn": "mproduct", "cdgcn": "none",
+              "evolvegcn": "edgelife"}[model]
+    ds = synthetic_dataset(n, t, density=density, churn=0.1,
+                           smoothing_mode=smooth, seed=0)
+    pipe = DTDGPipeline(ds, nb=nb)
+    feat = int(np.asarray(ds.frames).shape[-1])
+    cfg = models.DynGNNConfig(model=model, num_nodes=n, num_steps=t,
+                              window=3, checkpoint_blocks=nb)
+    # truncated budgets: the table holds ~N/3 vertices, the edge pad a
+    # quarter of the full-graph max — the out-of-core regime, not the
+    # full-fanout equivalence regime
+    spec = hs.SamplingSpec(batch_nodes=max(n // 8, 16), fanouts=(4, 4),
+                           seed=0, table_pad=max(n // 3, 32),
+                           max_edges=max(pipe.max_edges // 4, 128))
+    budget = hs.sampled_round_bytes(spec.resolve(n, win, p), win=win,
+                                    num_shards=p, feat_dim=feat)
+
+    data = InMemoryDTDG(ds, pipeline=pipe)
+    opt_cfg = adamw.AdamWConfig(lr=1e-2, total_steps=100)
+    for mode, shards in (("eager", 1), ("streamed", 1),
+                         ("streamed_mesh", p)):
+        try:
+            Engine(RunConfig(
+                model=cfg, data=data,
+                plan=ExecutionPlan(mode=mode, shards=shards,
+                                   device_budget_bytes=budget),
+                optimizer=opt_cfg, log_fn=_SILENT)).fit()
+            raise AssertionError(
+                f"full-graph mode {mode!r} fit budget {budget}")
+        except hs.DeviceBudgetError as e:
+            record(f"sampled_smoke/{model}/refused/{mode}",
+                   float(e.required),
+                   f"budget={budget} over={e.required / budget:.1f}x")
+
+    engine = Engine(RunConfig(
+        model=cfg, data=data,
+        plan=ExecutionPlan(mode="sampled", shards=p, num_epochs=1,
+                           sampling=spec, device_budget_bytes=budget),
+        optimizer=opt_cfg, log_fn=_SILENT))
+    res = engine.fit()
+    rep = res.sample_report
+    # the mesh-total graph bytes the full-graph stream stages for the
+    # same epoch (win * per_step per round, P-independent)
+    full_epoch = (t // win) * hs.full_graph_round_bytes(
+        "streamed", num_steps=t, win=win, num_shards=1,
+        max_edges=pipe.max_edges, num_nodes=n, feat_dim=feat)
+    assert rep.staged_bytes < full_epoch, (rep.staged_bytes, full_epoch)
+    record(f"sampled_smoke/{model}/P{p}/staged_bytes",
+           float(rep.staged_bytes),
+           f"full_graph_epoch={full_epoch} "
+           f"ratio={rep.staged_bytes / full_epoch:.3f} "
+           f"dropped_edges={rep.dropped_edges} "
+           f"dropped_nodes={rep.dropped_nodes} "
+           f"table_fill_max={rep.table_fill_max}")
+    record(f"sampled_smoke/{model}/P{p}/host_sample_throughput",
+           rep.sample_seconds / max(rep.rounds, 1) * 1e6,
+           f"edges_per_s={rep.sampled_edges / max(rep.sample_seconds, 1e-9):.2e} "
+           f"sampled_edges={rep.sampled_edges}")
+    record(f"sampled_smoke/{model}/P{p}/round_phases",
+           (rep.sample_seconds + rep.stage_seconds + rep.step_seconds)
+           / max(rep.rounds, 1) * 1e6,
+           f"sample_us={rep.sample_seconds / max(rep.rounds, 1) * 1e6:.0f} "
+           f"stage_us={rep.stage_seconds / max(rep.rounds, 1) * 1e6:.0f} "
+           f"step_us={rep.step_seconds / max(rep.rounds, 1) * 1e6:.0f} "
+           f"rounds={rep.rounds} loss_last={res.losses[-1]:.4f}")
+
+
 def modeled_weak_scaling(model: str = "tmgcn") -> None:
     """Fig. 7 setting: T=256, f=3, N doubling from 2^14 with P."""
     t, f_den, feat, layers = 256, 3.0, 6, 2
@@ -339,6 +428,7 @@ def run() -> None:
     measured_strong_scaling("tmgcn")
     streamed_scaling("tmgcn")
     rescale_smoke("tmgcn")
+    sampled_smoke("cdgcn")
     for m in ("tmgcn", "evolvegcn"):
         modeled_weak_scaling(m)
 

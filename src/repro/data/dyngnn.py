@@ -89,9 +89,7 @@ class DTDGPipeline:
             max_edges = ((max_edges + 127) // 128) * 128
         self.max_edges = max_edges
         self.use_graph_diff = use_graph_diff
-        # device-ready padded batch (precomputed Laplacian weights, §5.5)
-        self.batch = build_batch(ds.snapshots, ds.frames, ds.num_nodes,
-                                 max_edges=max_edges, values=ds.values)
+        self._batch = None
         # streamed transfer: vectorized encoder, churn-stat-sized pads.
         # Only the byte total is retained — the streaming paths re-encode
         # lazily (host_stream), so holding T padded items here would just
@@ -100,6 +98,21 @@ class DTDGPipeline:
             ds.snapshots, ds.num_nodes, self.bsize, max_edges)
         self._stream_bytes = sum(
             item.payload_bytes for item in self.host_stream())
+
+    @property
+    def batch(self):
+        """Device-ready padded batch (precomputed Laplacian weights,
+        §5.5) — built LAZILY on first access: only the eager schedule
+        (and evaluation) materializes the full (T, E, ...) tensors on
+        device; the streamed and sampled schedules never touch it, so
+        an out-of-core run can build the pipeline without allocating a
+        device batch that would not fit."""
+        if self._batch is None:
+            self._batch = build_batch(self.ds.snapshots, self.ds.frames,
+                                      self.ds.num_nodes,
+                                      max_edges=self.max_edges,
+                                      values=self.ds.values)
+        return self._batch
 
     def transfer_bytes(self) -> dict:
         gd = self._stream_bytes

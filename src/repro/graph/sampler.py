@@ -47,6 +47,7 @@ class SampledBlock:
     """One hop of a layered sample, in local (renumbered) ids."""
     edges: np.ndarray       # (E_pad, 2) int32 local (src, dst)
     edge_mask: np.ndarray   # (E_pad,) float32
+    edge_pos: np.ndarray | None = None  # (E_pad,) int64 CSR positions
 
 
 @dataclass
@@ -79,8 +80,9 @@ def sample_neighbors(graph: CSRGraph, seeds: np.ndarray, fanouts: list[int],
         cap *= f
         max_edges_per_layer.append(cap)
 
+    raw_pos: list[np.ndarray] = []
     for fanout in fanouts:
-        srcs, dsts = [], []
+        srcs, dsts, poss = [], [], []
         for v in frontier:
             lo, hi = graph.indptr[v], graph.indptr[v + 1]
             deg = hi - lo
@@ -88,17 +90,19 @@ def sample_neighbors(graph: CSRGraph, seeds: np.ndarray, fanouts: list[int],
                 continue
             k = min(fanout, deg)
             picks = rng.choice(deg, size=k, replace=False) + lo
-            for s in graph.indices[picks]:
+            for p, s in zip(picks, graph.indices[picks], strict=True):
                 s = int(s)
                 if s not in local:
                     local[s] = len(order)
                     order.append(s)
                 srcs.append(local[s])
                 dsts.append(local[int(v)])
+                poss.append(int(p))
         edges = (np.stack([np.asarray(srcs, dtype=np.int32),
                            np.asarray(dsts, dtype=np.int32)], axis=1)
                  if srcs else np.zeros((0, 2), dtype=np.int32))
         raw_blocks.append(edges)
+        raw_pos.append(np.asarray(poss, dtype=np.int64))
         frontier = np.asarray([order[i] for i in
                                np.unique(edges[:, 0])] if edges.size else [],
                               dtype=np.int64)
@@ -112,13 +116,16 @@ def sample_neighbors(graph: CSRGraph, seeds: np.ndarray, fanouts: list[int],
     node_mask[:len(order)] = 1.0
 
     blocks = []
-    for edges, cap in zip(raw_blocks, max_edges_per_layer, strict=True):
+    for edges, pos, cap in zip(raw_blocks, raw_pos, max_edges_per_layer,
+                               strict=True):
         e_pad = np.zeros((cap, 2), dtype=np.int32)
         m = np.zeros((cap,), dtype=np.float32)
+        p_pad = np.zeros((cap,), dtype=np.int64)
         e = min(edges.shape[0], cap)
         e_pad[:e] = edges[:e]
         m[:e] = 1.0
-        blocks.append(SampledBlock(edges=e_pad, edge_mask=m))
+        p_pad[:e] = pos[:e]
+        blocks.append(SampledBlock(edges=e_pad, edge_mask=m, edge_pos=p_pad))
 
     return SampledSubgraph(node_ids=node_ids, node_mask=node_mask,
                            num_seeds=b, blocks=blocks)

@@ -1,0 +1,47 @@
+"""Out-of-core sampled training: host-resident temporal graph store +
+fanout-sampled snapshot streaming.
+
+The full-graph schedules bound N by device memory — every round
+materializes full per-snapshot tensors on the mesh.  This package keeps
+the trace host-resident instead and streams only sampled, static-shape
+subgraphs:
+
+* :mod:`~repro.hoststore.store`  — ``TemporalCSRStore``: per-step CSR
+  adjacency on host numpy, ingested incrementally from the SAME
+  ``IncrementalEncoder`` delta items the device path uses;
+* :mod:`~repro.hoststore.sampled` — ``SampledSliceStream``: per-round
+  seed batches, ``graph/sampler.py`` fanout expansion in host worker
+  threads, fixed-size padded subgraph tensors through the ``prefetch``
+  staging machinery with ``NamedSharding`` placement;
+* :mod:`~repro.hoststore.carry`  — ``HostCarryStore``: per-node temporal
+  state host-resident between rounds, gathered/scattered by table rows;
+* :mod:`~repro.hoststore.train`  — ``train_sampled``: the
+  ``schedule="sampled"`` driver (the distributed round step on the
+  table axis);
+* :mod:`~repro.hoststore.budget` — the simulated per-device graph-byte
+  budget that full-graph schedules refuse and sampling fits.
+
+See docs/sampling.md for the store layout, the SamplingSpec knobs, and
+the full-fanout equivalence argument.
+"""
+
+from repro.hoststore.budget import (DeviceBudgetError, check_budget,
+                                    full_graph_round_bytes,
+                                    sampled_round_bytes)
+from repro.hoststore.carry import HostCarryStore
+from repro.hoststore.sampled import (SampledSliceStream, SampleReport,
+                                     SampleRound, StagedRound, draw_seeds,
+                                     sample_round)
+from repro.hoststore.spec import ResolvedSampling, SamplingSpec
+from repro.hoststore.store import TemporalCSRStore
+from repro.hoststore.train import (SampledState, make_sampled_step,
+                                   table_config, train_sampled)
+
+__all__ = [
+    "DeviceBudgetError", "check_budget", "full_graph_round_bytes",
+    "sampled_round_bytes", "HostCarryStore", "SampledSliceStream",
+    "SampleReport", "SampleRound", "StagedRound", "draw_seeds",
+    "sample_round", "ResolvedSampling", "SamplingSpec",
+    "TemporalCSRStore", "SampledState", "make_sampled_step",
+    "table_config", "train_sampled",
+]

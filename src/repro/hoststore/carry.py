@@ -1,0 +1,135 @@
+"""Host-resident per-node temporal state for the sampled schedule.
+
+The full-graph schedules keep temporal carries (LSTM states, TM-GCN
+window buffers) device-resident between rounds — O(N) device memory.
+Out of core, N is exactly what does not fit, so the carries live here on
+host numpy and each round only round-trips the rows of its sampled node
+table: ``gather`` lifts table rows to the device (padded, mesh-sharded
+by the caller), ``scatter`` writes the post-round rows back.
+
+Nodes absent from a round's table simply keep their previous state —
+with full-fanout sampling (every vertex a seed) every row updates every
+round and the schedule is numerically the full-graph path.
+
+EvolveGCN is the exception that proves the layout: its carry is a
+weight matrix + weight-LSTM state (not per-node, §5.5), so it rides
+whole — gathered and scattered as-is.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import models as mdl
+
+
+def _node_axis(cfg: mdl.DynGNNConfig) -> int | None:
+    """Axis of the node dimension in one layer's carry leaves
+    (None = the carry is not per-node and rides whole)."""
+    if cfg.model == "cdgcn":
+        return 0        # LSTM (h, c), each (N, d)
+    if cfg.model == "evolvegcn":
+        return None     # (W, (h, c)) — weight-evolution state
+    if cfg.model == "tmgcn":
+        return 1        # (window-1, N, d)
+    raise ValueError(cfg.model)
+
+
+def _leaves(carry):
+    """Flatten one layer's carry into its array leaves (tuples only —
+    the carry trees are nested tuples of arrays)."""
+    if isinstance(carry, tuple):
+        out = []
+        for c in carry:
+            out.extend(_leaves(c))
+        return out
+    return [carry]
+
+
+def _rebuild(template, flat):
+    """Inverse of ``_leaves`` against ``template``'s structure."""
+    if isinstance(template, tuple):
+        parts = []
+        for c in template:
+            part, flat = _rebuild(c, flat)
+            parts.append(part)
+        return tuple(parts), flat
+    return flat[0], flat[1:]
+
+
+class HostCarryStore:
+    """Full-N temporal carries on host numpy, gathered per round.
+
+    ``reset(params)`` re-derives the epoch-start state from the CURRENT
+    params (EvolveGCN's initial weight carry aliases ``params``, exactly
+    like ``models.init_carries`` at the top of every epoch).
+    """
+
+    def __init__(self, cfg: mdl.DynGNNConfig, params: dict):
+        self.cfg = cfg
+        self.axis = _node_axis(cfg)
+        self._layers: list[list[np.ndarray]] = []
+        self._templates: list = []
+        self.reset(params)
+
+    def reset(self, params: dict) -> None:
+        carries = mdl.init_carries(self.cfg, params)
+        self._templates = carries
+        # np.array (not asarray): device arrays convert to READ-ONLY
+        # views, and scatter() writes these in place
+        self._layers = [[np.array(leaf) for leaf in _leaves(c)]
+                        for c in carries]
+
+    # ------------------------------------------------------- gather -------
+
+    def gather(self, node_ids: np.ndarray, table_pad: int) -> list:
+        """Rows of ``node_ids`` lifted into ``table_pad``-sized host
+        arrays (invalid lanes zero), in ``init_carries`` structure.
+        The caller ships them with the stream carry shardings."""
+        node_ids = np.asarray(node_ids, dtype=np.int64)
+        k = node_ids.shape[0]
+        ax = self.axis
+        out = []
+        for template, leaves in zip(self._templates, self._layers,
+                                    strict=True):
+            if ax is None:
+                rows = list(leaves)
+            else:
+                rows = []
+                for leaf in leaves:
+                    shape = list(leaf.shape)
+                    shape[ax] = table_pad
+                    buf = np.zeros(shape, dtype=leaf.dtype)
+                    if ax == 0:
+                        buf[:k] = leaf[node_ids]
+                    else:
+                        buf[:, :k] = leaf[:, node_ids]
+                    rows.append(buf)
+            tree, rest = _rebuild(template, rows)
+            if rest:
+                raise ValueError("carry leaf mismatch")
+            out.append(tree)
+        return out
+
+    # ------------------------------------------------------ scatter -------
+
+    def scatter(self, node_ids: np.ndarray, new_carries: list) -> None:
+        """Write the first ``len(node_ids)`` table rows of the post-round
+        carries back into the resident state (pad lanes discarded)."""
+        node_ids = np.asarray(node_ids, dtype=np.int64)
+        k = node_ids.shape[0]
+        ax = self.axis
+        for leaves, new in zip(self._layers, new_carries, strict=True):
+            new_leaves = _leaves(new)
+            for leaf, fresh in zip(leaves, new_leaves, strict=True):
+                fresh = np.asarray(fresh)
+                if ax is None:
+                    leaf[...] = fresh
+                elif ax == 0:
+                    leaf[node_ids] = fresh[:k]
+                else:
+                    leaf[:, node_ids] = fresh[:, :k]
+
+    @property
+    def nbytes(self) -> int:
+        return sum(leaf.nbytes for leaves in self._layers for leaf in leaves)

@@ -1,0 +1,301 @@
+"""Fanout-sampled round streaming against the host store.
+
+One round = one checkpoint block of ``win`` snapshots, exactly like the
+full-graph distributed stream — but instead of reconstructing full
+snapshots on device, each round:
+
+1. draws a seed batch (one batch per ROUND, shared by all ``win`` steps:
+   the temporal stage threads state across the round's time axis, so
+   every step must speak the same local node vocabulary);
+2. runs ``graph/sampler.py`` fanout expansion per step against the
+   store's CSR in host worker threads, takes the DEDUPLICATED UNION of
+   the hop blocks as that step's message subgraph (full fanout makes
+   the union the full edge set — the equivalence regime);
+3. merges the per-step samples into one round node table (seeds first,
+   then the remaining sampled vertices in ascending global id),
+   re-indexes every step's edges into table-local ids, and gathers
+   features / labels / edge values for sampled lanes only;
+4. emits fixed-size padded tensors sized by ``ResolvedSampling`` —
+   blowing a static budget degrades to dropped lanes counted on
+   ``SampleReport``, never a shape change.
+
+The staged payload per round is O(table_pad + edge_pad), independent of
+N — the whole point: only sampled subgraphs ever cross the host->device
+boundary.  Staging reuses the stream machinery: ``SampledSliceStream``
+plugs its ``stage_fn`` into ``prefetch.PrefetchIterator`` with the same
+``NamedSharding`` placements (time-sharded over the mesh) the
+full-graph round staging uses.
+
+Thread discipline: per-round counters and timings ride ON the round
+item through the prefetch queue (the queue's lock is the happens-before
+edge); the consumer folds them into the shared ``SampleReport`` on the
+main thread — no cross-thread attribute writes at all.
+"""
+
+from __future__ import annotations
+
+import time
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+
+from repro.dist import sharding as shardlib
+from repro.graph import sampler as smp
+from repro.hoststore.spec import ResolvedSampling, SamplingSpec
+from repro.hoststore.store import TemporalCSRStore
+
+
+@dataclass
+class SampleReport:
+    """Health/accounting counters of one sampled run (main-thread owned)."""
+
+    rounds: int = 0
+    sampled_edges: int = 0        # valid union edges staged
+    sampled_nodes: int = 0        # valid table lanes staged
+    dropped_nodes: int = 0        # table-budget overflow (degraded lanes)
+    dropped_edges: int = 0        # edge-budget overflow (degraded lanes)
+    staged_bytes: int = 0         # bytes shipped host->device
+    sample_seconds: float = 0.0   # host sampling+merge time
+    stage_seconds: float = 0.0    # device_put time
+    step_seconds: float = 0.0     # forced device step time (trainer-owned)
+    table_fill_max: int = 0       # worst observed table occupancy
+
+    def fold(self, rnd: "StagedRound") -> None:
+        self.rounds += 1
+        self.sampled_edges += rnd.sampled_edges
+        self.sampled_nodes += len(rnd.node_ids)
+        self.dropped_nodes += rnd.dropped_nodes
+        self.dropped_edges += rnd.dropped_edges
+        self.staged_bytes += rnd.staged_bytes
+        self.sample_seconds += rnd.sample_s
+        self.stage_seconds += rnd.stage_s
+        self.table_fill_max = max(self.table_fill_max, len(rnd.node_ids))
+
+
+@dataclass
+class SampleRound:
+    """Host-side product of one round's sampling (numpy, pre-staging)."""
+
+    r: int                      # round index within the epoch
+    t0: int                     # global step index of the round's start
+    node_ids: np.ndarray        # (k,) int64 global table, seeds first
+    frames: np.ndarray          # (win, table_pad, F) f32
+    labels: np.ndarray          # (win, table_pad) i32
+    edges: np.ndarray           # (win, edge_pad, 2) i32 table-local
+    mask: np.ndarray            # (win, edge_pad) f32
+    values: np.ndarray          # (win, edge_pad) f32
+    sample_s: float = 0.0
+    sampled_edges: int = 0
+    dropped_nodes: int = 0
+    dropped_edges: int = 0
+
+
+@dataclass
+class StagedRound:
+    """Device-side round (what the jitted sampled step consumes)."""
+
+    r: int
+    t0: int
+    node_ids: np.ndarray        # stays host-side (gather/scatter index)
+    frames: jax.Array
+    labels: jax.Array
+    edges: jax.Array
+    mask: jax.Array
+    values: jax.Array
+    sample_s: float = 0.0
+    stage_s: float = 0.0
+    staged_bytes: int = 0
+    sampled_edges: int = 0
+    dropped_nodes: int = 0
+    dropped_edges: int = 0
+
+
+def _step_rng(seed: int, epoch: int, t: int) -> np.random.Generator:
+    """Per-(stream-seed, epoch, step) generator: sampling is deterministic
+    under any worker-thread schedule because no generator is shared."""
+    return np.random.default_rng(np.random.SeedSequence([seed, epoch, t]))
+
+
+def draw_seeds(num_nodes: int, num_seeds: int, seed: int, epoch: int,
+               r: int) -> np.ndarray:
+    """The round's seed batch.  ``num_seeds >= num_nodes`` pins the
+    identity batch (every vertex, ascending) — the equivalence regime."""
+    if num_seeds >= num_nodes:
+        return np.arange(num_nodes, dtype=np.int64)
+    rng = np.random.default_rng(
+        np.random.SeedSequence([seed, epoch, 2_000_003 + r]))
+    return np.sort(rng.choice(num_nodes, size=num_seeds,
+                              replace=False).astype(np.int64))
+
+
+def _sample_step(store: TemporalCSRStore, t: int, seeds: np.ndarray,
+                 spec: SamplingSpec, epoch: int):
+    """One step's fanout expansion -> (global nodes, unique global edges,
+    values) with sampler-output invariants trimmed to valid lanes."""
+    sub = smp.sample_neighbors(store.csr(t), seeds, list(spec.fanouts),
+                               _step_rng(spec.seed, epoch, t))
+    n_valid = int(sub.node_mask.sum())
+    nodes = sub.node_ids[:n_valid]
+    gsrc, gdst, pos = [], [], []
+    for blk in sub.blocks:
+        e = int(blk.edge_mask.sum())
+        if not e:
+            continue
+        gsrc.append(nodes[blk.edges[:e, 0]])
+        gdst.append(nodes[blk.edges[:e, 1]])
+        pos.append(blk.edge_pos[:e])
+    if not gsrc:
+        return (nodes, np.zeros((0, 2), dtype=np.int64),
+                np.zeros((0,), dtype=np.float32))
+    gsrc = np.concatenate(gsrc)
+    gdst = np.concatenate(gdst)
+    pos = np.concatenate(pos)
+    # dedup the hop-block union: an edge sampled at two hops must carry
+    # one message, not two (full fanout: union == the full edge set)
+    keys = gsrc * np.int64(store.num_nodes) + gdst
+    _, first = np.unique(keys, return_index=True)
+    edges = np.stack([gsrc[first], gdst[first]], axis=1)
+    vals = store.values_csr(t)[pos[first]].astype(np.float32)
+    return nodes, edges, vals
+
+
+def sample_round(store: TemporalCSRStore, frames: np.ndarray,
+                 labels: np.ndarray, spec: SamplingSpec,
+                 resolved: ResolvedSampling, win: int, r: int, epoch: int,
+                 pool: ThreadPoolExecutor) -> SampleRound:
+    """Sample one round: per-step expansions in worker threads, merged
+    into one table + fixed-size padded tensors."""
+    tic = time.perf_counter()
+    t0 = r * win
+    n = store.num_nodes
+    seeds = draw_seeds(n, resolved.num_seeds, spec.seed, epoch, r)
+    per_step = list(pool.map(
+        lambda t: _sample_step(store, t, seeds, spec, epoch),
+        range(t0, t0 + win)))
+
+    # round table: seeds first (loss lanes), then every other sampled
+    # vertex ascending — deterministic under any thread schedule
+    extra = np.setdiff1d(
+        np.unique(np.concatenate([nodes for nodes, _, _ in per_step])),
+        seeds, assume_unique=False)
+    table = np.concatenate([seeds, extra])
+    dropped_nodes = max(0, table.shape[0] - resolved.table_pad)
+    table = table[:resolved.table_pad]
+    k = table.shape[0]
+
+    # global id -> table-local rank (searchsorted over the sorted view)
+    sort_idx = np.argsort(table, kind="stable")
+    sorted_ids = table[sort_idx]
+
+    def to_local(ids: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        p = np.clip(np.searchsorted(sorted_ids, ids), 0, k - 1)
+        ok = sorted_ids[p] == ids
+        return sort_idx[p].astype(np.int32), ok
+
+    e_pad = resolved.edge_pad
+    edges = np.zeros((win, e_pad, 2), dtype=np.int32)
+    mask = np.zeros((win, e_pad), dtype=np.float32)
+    values = np.zeros((win, e_pad), dtype=np.float32)
+    sampled_edges = dropped_edges = 0
+    for i, (_, ge, gv) in enumerate(per_step):
+        if not ge.shape[0]:
+            continue
+        lsrc, ok_s = to_local(ge[:, 0])
+        ldst, ok_d = to_local(ge[:, 1])
+        keep = ok_s & ok_d              # endpoints dropped by table overflow
+        lsrc, ldst, gv = lsrc[keep], ldst[keep], gv[keep]
+        e = lsrc.shape[0]
+        dropped_edges += max(0, e - e_pad)
+        e = min(e, e_pad)
+        edges[i, :e, 0] = lsrc[:e]
+        edges[i, :e, 1] = ldst[:e]
+        mask[i, :e] = 1.0
+        values[i, :e] = gv[:e]
+        sampled_edges += e
+
+    f_sub = np.zeros((win, resolved.table_pad, frames.shape[-1]),
+                     dtype=np.float32)
+    l_sub = np.zeros((win, resolved.table_pad), dtype=np.int32)
+    f_sub[:, :k] = frames[t0:t0 + win][:, table]
+    l_sub[:, :k] = labels[t0:t0 + win][:, table]
+
+    return SampleRound(r=r, t0=t0, node_ids=table, frames=f_sub,
+                       labels=l_sub, edges=edges, mask=mask, values=values,
+                       sample_s=time.perf_counter() - tic,
+                       sampled_edges=sampled_edges,
+                       dropped_nodes=dropped_nodes,
+                       dropped_edges=dropped_edges)
+
+
+@dataclass
+class SampledSliceStream:
+    """The sampled round pipeline stage: host sampling -> prefetch-staged
+    device rounds with time-sharded ``NamedSharding`` placement.
+
+    Drives the same producer/consumer protocol as the full-graph round
+    stream: ``rounds(epoch)`` is the host iterator the prefetch thread
+    drains, ``stage_fn()`` the staging callable it applies."""
+
+    store: TemporalCSRStore
+    frames: np.ndarray
+    labels: np.ndarray
+    spec: SamplingSpec
+    resolved: ResolvedSampling
+    mesh: object
+    win: int
+    axis: str = shardlib.DATA_AXIS
+    _shardings: dict = field(init=False, default_factory=dict)
+
+    def __post_init__(self):
+        b = shardlib.stream_batch_specs(self.axis)
+        self._shardings = {k: NamedSharding(self.mesh, b[k])
+                           for k in ("frames", "edges", "mask", "values",
+                                     "labels")}
+
+    @property
+    def rounds_per_epoch(self) -> int:
+        return self.store.num_steps // self.win
+
+    def rounds(self, epoch: int):
+        """Host iterator of one epoch's ``SampleRound``s (runs on the
+        prefetch thread; sampling fans out to ``spec.workers`` threads)."""
+        with ThreadPoolExecutor(max_workers=self.spec.workers) as pool:
+            for r in range(self.rounds_per_epoch):
+                yield sample_round(self.store, self.frames, self.labels,
+                                   self.spec, self.resolved, self.win, r,
+                                   epoch, pool)
+
+    def stage_fn(self):
+        """Round staging for the prefetch thread: every tensor ships with
+        its time-sharded placement; timings/bytes ride on the item."""
+        sh = self._shardings
+
+        def stage(rnd: SampleRound) -> StagedRound:
+            tic = time.perf_counter()
+            put = jax.device_put
+            staged = StagedRound(
+                r=rnd.r, t0=rnd.t0, node_ids=rnd.node_ids,
+                frames=put(rnd.frames, sh["frames"]),
+                labels=put(rnd.labels, sh["labels"]),
+                edges=put(rnd.edges, sh["edges"]),
+                mask=put(rnd.mask, sh["mask"]),
+                values=put(rnd.values, sh["values"]),
+                sample_s=rnd.sample_s, sampled_edges=rnd.sampled_edges,
+                dropped_nodes=rnd.dropped_nodes,
+                dropped_edges=rnd.dropped_edges)
+            staged.staged_bytes = (rnd.frames.nbytes + rnd.labels.nbytes
+                                   + rnd.edges.nbytes + rnd.mask.nbytes
+                                   + rnd.values.nbytes)
+            staged.stage_s = time.perf_counter() - tic
+            return staged
+
+        return stage
+
+    def round_graph_bytes(self) -> int:
+        """Static bytes one round stages (graph + features + labels)."""
+        win, tp, ep = self.win, self.resolved.table_pad, self.resolved.edge_pad
+        feat = self.frames.shape[-1]
+        return win * (ep * (8 + 4 + 4) + tp * feat * 4 + tp * 4)

@@ -1,0 +1,161 @@
+"""The sampled training schedule (``schedule="sampled"``).
+
+Composes the pieces of this package with the EXISTING distributed round
+step: ``make_sampled_step`` is ``stream.distributed.make_dist_stream_step``
+instantiated on the round node TABLE (the model config's vertex axis
+becomes ``table_pad``) with the seed-restricted loss — same Laplacian
+preamble, same ``partition.snapshot_block_body`` (two all-to-alls per
+layer over the table axis), same AdamW cadence.  One round per
+checkpoint block, like every streamed schedule.
+
+Between rounds the per-node temporal state lives in the
+:class:`~repro.hoststore.carry.HostCarryStore`: each round gathers the
+rows of its table to the device (stream carry shardings, sized
+``table_pad``) and scatters the post-round rows back.  With full fanout
+and every vertex a seed this loop is numerically the full-graph
+distributed path (pinned <= 1e-5 in tests/test_hoststore.py); with
+truncated fanout it is GraphSAGE-style stochastic training whose loss
+drift the convergence test bounds.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import models as mdl
+from repro.dist import sharding as shardlib
+from repro.hoststore.carry import HostCarryStore
+from repro.hoststore.sampled import SampledSliceStream, SampleReport
+from repro.hoststore.spec import ResolvedSampling, SamplingSpec
+from repro.hoststore.store import TemporalCSRStore
+from repro.optim import adamw
+from repro.stream import distributed as stream_dist
+from repro.stream.prefetch import PrefetchIterator
+
+
+@dataclass
+class SampledState:
+    params: dict
+    opt_state: dict
+    losses: list
+    report: SampleReport = field(default_factory=SampleReport)
+
+
+def table_config(cfg: mdl.DynGNNConfig,
+                 resolved: ResolvedSampling) -> mdl.DynGNNConfig:
+    """The model config the sampled step compiles against: the vertex
+    axis is the round node table, everything else unchanged."""
+    return dataclasses.replace(cfg, num_nodes=resolved.table_pad)
+
+
+def make_sampled_step(cfg: mdl.DynGNNConfig, resolved: ResolvedSampling,
+                      mesh, opt_cfg: adamw.AdamWConfig,
+                      axis: str = shardlib.DATA_AXIS, a2a_chunks: int = 1):
+    """Jitted sampled round step — the distributed stream step on the
+    table axis with the seed-restricted loss."""
+    return stream_dist.make_dist_stream_step(
+        table_config(cfg, resolved), mesh, opt_cfg, axis,
+        a2a_chunks=a2a_chunks, num_seeds=resolved.num_seeds)
+
+
+def train_sampled(cfg: mdl.DynGNNConfig, store: TemporalCSRStore,
+                  frames: np.ndarray, labels: np.ndarray, *,
+                  spec: SamplingSpec, mesh,
+                  axis: str = shardlib.DATA_AXIS,
+                  block_size: int | None = None, num_epochs: int = 1,
+                  overlap: bool = True, prefetch_depth: int = 2,
+                  a2a_chunks: int = 1,
+                  opt_cfg: adamw.AdamWConfig | None = None,
+                  params: dict | None = None, opt_state=None,
+                  step_fn=None, carry_store: HostCarryStore | None = None,
+                  report: SampleReport | None = None, seed: int = 0,
+                  log_every: int = 10, log_fn=None) -> SampledState:
+    """Out-of-core sampled training over the host-resident store.
+
+    The device never sees the full graph: per round it receives the
+    sampled subgraph tensors (``SampledSliceStream``, prefetch-staged)
+    plus the table rows of the host-resident carries, and returns the
+    updated rows.  ``step_fn`` / ``carry_store`` / ``report`` let the
+    Engine worker cache compilation and state across calls.
+    """
+    t_steps = store.num_steps
+    num_procs = mesh.shape[axis]
+    win = block_size or max(t_steps // max(cfg.checkpoint_blocks, 1), 1)
+    if win % num_procs:
+        raise ValueError(f"block_size {win} must divide into {num_procs} "
+                         "shards")
+    if t_steps % win:
+        raise ValueError(f"trace length {t_steps} must be a multiple of "
+                         f"block_size {win}")
+    resolved = spec.resolve(cfg.num_nodes, win, num_procs)
+    opt_cfg = opt_cfg or adamw.AdamWConfig(
+        lr=1e-2, warmup_steps=10, total_steps=num_epochs * t_steps,
+        weight_decay=0.0)
+    if params is None:
+        params = mdl.init_params(jax.random.PRNGKey(seed), cfg)
+    if opt_state is None:
+        opt_state = adamw.init_state(params)
+    if step_fn is None:
+        step_fn = make_sampled_step(cfg, resolved, mesh, opt_cfg, axis,
+                                    a2a_chunks=a2a_chunks)
+    if carry_store is None:
+        # sized by the GLOBAL cfg (full-N resident rows); gather() pads
+        # each round's table rows up to table_pad for the device step
+        carry_store = HostCarryStore(cfg, params)
+    report = report if report is not None else SampleReport()
+    stream = SampledSliceStream(store=store, frames=frames, labels=labels,
+                                spec=spec, resolved=resolved, mesh=mesh,
+                                win=win, axis=axis)
+    carry_shardings = shardlib.named(
+        mesh, shardlib.stream_carry_specs(cfg, axis))
+
+    losses: list[float] = []
+
+    def emit(loss_value):
+        losses.append(float(loss_value))
+        if log_fn is not None and (len(losses) - 1) % log_every == 0:
+            log_fn(f"sampled round {len(losses) - 1} loss "
+                   f"{losses[-1]:.4f} (P={num_procs}, win={win}, "
+                   f"table={resolved.table_pad}, "
+                   f"seeds={resolved.num_seeds})")
+
+    for epoch in range(num_epochs):
+        carry_store.reset(params)    # epoch-start semantics: fresh state
+        host = stream.rounds(epoch)
+        if overlap:
+            rounds = PrefetchIterator(host, stage_fn=stream.stage_fn(),
+                                      depth=prefetch_depth)
+        else:
+            stage = stream.stage_fn()
+            rounds = (stage(x) for x in host)
+        try:
+            for staged in rounds:
+                # carries CANNOT prefetch: round r's gather depends on
+                # round r-1's scatter (the host-resident state is the
+                # cross-round data dependency)
+                tic = time.perf_counter()
+                host_carries = carry_store.gather(staged.node_ids,
+                                                  resolved.table_pad)
+                carries = jax.tree.map(jax.device_put, host_carries,
+                                       carry_shardings)
+                staged.staged_bytes += sum(
+                    leaf.nbytes for leaf in jax.tree.leaves(host_carries))
+                params, opt_state, new_carries, loss = step_fn(
+                    params, opt_state, carries, staged.frames,
+                    staged.edges, staged.mask, staged.values,
+                    staged.labels, jnp.int32(staged.t0))
+                carry_store.scatter(staged.node_ids, new_carries)
+                emit(loss)
+                report.fold(staged)
+                report.step_seconds += time.perf_counter() - tic
+        finally:
+            if isinstance(rounds, PrefetchIterator):
+                rounds.close()
+    return SampledState(params=params, opt_state=opt_state, losses=losses,
+                        report=report)

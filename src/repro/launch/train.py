@@ -73,7 +73,27 @@ def main() -> None:
                     help="with --stream --mesh: absorb SIGTERM by "
                          "shrinking to width P at the next block "
                          "boundary instead of stopping")
+    ap.add_argument("--sampled", action="store_true",
+                    help="dyngnn only: out-of-core sampled training — "
+                         "host-resident temporal store, fanout-sampled "
+                         "rounds (docs/sampling.md); combine with --mesh")
+    ap.add_argument("--sample-batch", type=int, default=0, metavar="B",
+                    help="with --sampled: seed vertices per round "
+                         "(default num_nodes // 4)")
+    ap.add_argument("--fanout", default="10,10", metavar="K1,K2,...",
+                    help="with --sampled: per-hop in-neighbor fanouts")
+    ap.add_argument("--device-budget", type=int, default=0, metavar="BYTES",
+                    help="dyngnn only: simulated per-device cap on "
+                         "round-resident graph tensors; over-budget "
+                         "schedules refuse with DeviceBudgetError")
     args = ap.parse_args()
+    if args.sampled and args.stream:
+        raise SystemExit("--sampled is its own schedule; drop --stream")
+    if (args.sample_batch or args.fanout != "10,10") and not args.sampled:
+        # same fail-loudly rule as the rescale flags: a typo'd command
+        # must not silently run a different schedule
+        raise SystemExit("--sample-batch/--fanout configure the sampled "
+                         "schedule; they require --sampled")
     if (args.rescale_at or args.rescale_on_preempt) and not args.stream:
         # fail loudly, never drop the flags: the eager branch has no
         # rescale plumbing, so a typo'd command would otherwise run a
@@ -91,8 +111,9 @@ def main() -> None:
                                    d <= n_dev)
 
     if arch.family == "dyngnn":
-        from repro.run import (CheckpointSpec, Engine, ExecutionPlan,
-                               RunConfig, SyntheticTrace)
+        from repro.run import (CheckpointSpec, DeviceBudgetError, Engine,
+                               ExecutionPlan, RunConfig, SamplingSpec,
+                               SyntheticTrace)
         cfg = (arch.make_config() if args.full_config
                else arch.make_smoke_config())
         smooth = {"tmgcn": "mproduct", "evolvegcn": "edgelife",
@@ -101,7 +122,27 @@ def main() -> None:
                               num_steps=cfg.num_steps, density=3.0,
                               churn=0.1, smoothing_mode=smooth,
                               window=cfg.window)
-        if args.stream:
+        budget = args.device_budget or None
+        if args.sampled:
+            try:
+                fanouts = tuple(int(k) for k in args.fanout.split(","))
+            except ValueError:
+                raise SystemExit(f"bad --fanout {args.fanout!r}; expected "
+                                 "K1,K2,...") from None
+            spec = SamplingSpec(
+                batch_nodes=args.sample_batch or max(cfg.num_nodes // 4, 1),
+                fanouts=fanouts)
+            plan = ExecutionPlan(mode="sampled", shards=max(args.mesh, 1),
+                                 num_epochs=args.epochs,
+                                 overlap=not args.no_overlap,
+                                 a2a_chunks=args.a2a_chunks,
+                                 sampling=spec, device_budget_bytes=budget)
+            ckpt = None
+            if args.ckpt_dir:
+                print("note: --ckpt-dir is ignored with --sampled "
+                      "(checkpointing is wired for the eager and "
+                      "streamed --mesh schedules)")
+        elif args.stream:
             # non-divisible num_nodes auto-pads inside the plan (logged);
             # the pipelining/rescale flags pass through VERBATIM so a
             # combination the plan cannot honor (e.g. --a2a-chunks or
@@ -114,7 +155,8 @@ def main() -> None:
                 a2a_chunks=args.a2a_chunks,
                 pipeline_rounds=args.pipeline_rounds,
                 rescale=tuple(_parse_rescale(s) for s in args.rescale_at),
-                rescale_on_preempt=args.rescale_on_preempt)
+                rescale_on_preempt=args.rescale_on_preempt,
+                device_budget_bytes=budget)
             ckpt = None
             if args.ckpt_dir:
                 if plan.mode == "streamed_mesh":
@@ -130,7 +172,8 @@ def main() -> None:
             plan = ExecutionPlan(mode="eager", shards=dp,
                                  num_steps=args.steps,
                                  a2a_chunks=args.a2a_chunks,
-                                 pipeline_rounds=args.pipeline_rounds)
+                                 pipeline_rounds=args.pipeline_rounds,
+                                 device_budget_bytes=budget)
             ckpt = (CheckpointSpec(args.ckpt_dir)
                     if args.ckpt_dir else None)
         try:
@@ -142,8 +185,25 @@ def main() -> None:
             engine.resolve()
         except ValueError as e:
             raise SystemExit(f"invalid run configuration: {e}") from None
-        result = engine.fit()
+        try:
+            result = engine.fit()
+        except DeviceBudgetError as e:
+            # the budget gate refusing IS the answer the flag asks for —
+            # report it as a one-line CLI outcome, not a traceback
+            raise SystemExit(f"refused: {e}") from None
         rep = result.transfer_report
+        if args.sampled:
+            final = (f"{result.losses[-1]:.4f}" if result.losses else "n/a")
+            srep = result.sample_report
+            budget_txt = (f", budget {result.budget_report['required']}"
+                          f"/{result.budget_report['budget']} B"
+                          if result.budget_report else "")
+            print(f"sampled {srep.rounds} rounds on "
+                  f"{max(args.mesh, 1)} shards, final loss {final}, "
+                  f"staged {srep.staged_bytes} B, sampled edges "
+                  f"{srep.sampled_edges} (dropped {srep.dropped_edges} "
+                  f"edges / {srep.dropped_nodes} nodes){budget_txt}")
+            return
         if args.stream:
             final = (f"{result.losses[-1]:.4f}" if result.losses else "n/a")
             if plan.mode == "streamed_mesh":

@@ -36,6 +36,7 @@ on ``RunResult.rescale_report``).
 """
 
 from repro.elastic.controller import RescaleEvent, RescaleReport
+from repro.hoststore import DeviceBudgetError, SampleReport, SamplingSpec
 from repro.run.config import (CheckpointSpec, ResolvedRun, RunConfig,
                               RunResult)
 from repro.run.data import (DataSource, EdgeListDTDG, InMemoryDTDG,
@@ -49,9 +50,10 @@ from repro.run.plan import ExecutionPlan
 from repro.serve import IngestSpec, ServeConfig, ServeEngine, ServeResult
 
 __all__ = [
-    "CheckpointSpec", "DataSource", "EdgeListDTDG", "Engine",
-    "ExecutionPlan", "InMemoryDTDG", "IngestSpec", "RescaleEvent",
-    "RescaleReport", "ResolvedRun", "RunConfig", "RunResult",
-    "ServeConfig", "ServeEngine", "ServeResult", "SyntheticTrace",
-    "pad_dataset", "read_edgelist", "write_edgelist",
+    "CheckpointSpec", "DataSource", "DeviceBudgetError", "EdgeListDTDG",
+    "Engine", "ExecutionPlan", "InMemoryDTDG", "IngestSpec",
+    "RescaleEvent", "RescaleReport", "ResolvedRun", "RunConfig",
+    "RunResult", "SampleReport", "SamplingSpec", "ServeConfig",
+    "ServeEngine", "ServeResult", "SyntheticTrace", "pad_dataset",
+    "read_edgelist", "write_edgelist",
 ]

@@ -100,7 +100,11 @@ class RunResult:
     records the elastic events of a rescaled/checkpointed streamed_mesh
     run (realized width changes, per-segment stream bytes, preemption /
     resume cursors); rescaling is also pure schedule — the losses match
-    the fixed-width run.
+    the fixed-width run.  ``sample_report`` carries the sampled
+    schedule's host-sampling accounting (staged bytes, dropped lanes,
+    phase timings — ``repro.hoststore.SampleReport``); ``budget_report``
+    echoes the ``device_budget_bytes`` gate the run passed
+    (``{"required", "budget"}``, None when no budget was set).
     """
 
     state: TrainState
@@ -111,3 +115,5 @@ class RunResult:
     a2a_chunks: int = 1
     pipeline_rounds: bool = False
     rescale_report: RescaleReport | None = None
+    sample_report: Any = None       # hoststore.SampleReport (sampled mode)
+    budget_report: dict | None = None

@@ -20,6 +20,7 @@ and for exporting synthetic traces.
 from __future__ import annotations
 
 import re
+import zipfile
 from dataclasses import dataclass
 from pathlib import Path
 from typing import Protocol, runtime_checkable
@@ -111,6 +112,13 @@ class EdgeListDTDG:
     as for the synthetic traces (``dataset_from_snapshots``), so a
     written-then-loaded trace trains bit-identically to its in-memory
     original.
+
+    ``chunk_edges`` switches the read out-of-core: text files stream
+    line-by-line in ``chunk_edges``-row chunks and ``.npz`` members are
+    memory-mapped straight out of the archive (``_npz_memmaps``) — the
+    monolithic ``(E, 3)`` int64 row table is never materialized, only
+    the per-snapshot int32 edge lists.  The binned result is identical
+    to the in-memory read (round-trip tested).
     """
 
     path: str
@@ -118,9 +126,11 @@ class EdgeListDTDG:
     smoothing_mode: str = "none"
     window: int = 5
     edge_life: int = 5
+    chunk_edges: int | None = None  # out-of-core read: rows per chunk
 
     def build(self, num_nodes: int | None = None) -> DTDGDataset:
-        snaps, n_seen = read_edgelist(self.path)
+        snaps, n_seen = read_edgelist(self.path,
+                                      chunk_edges=self.chunk_edges)
         nominal = self.num_nodes or n_seen
         if nominal < n_seen:
             raise ValueError(f"num_nodes={nominal} but {self.path} "
@@ -171,7 +181,9 @@ def _tsv_num_steps(path: Path) -> int | None:
     return None
 
 
-def read_edgelist(path: str | Path) -> tuple[list[np.ndarray], int]:
+def read_edgelist(path: str | Path,
+                  chunk_edges: int | None = None
+                  ) -> tuple[list[np.ndarray], int]:
     """(snapshots, min num_nodes) from a timestamped edge-list file.
 
     Files written by ``write_edgelist`` carry a ``num_steps`` marker
@@ -180,8 +192,13 @@ def read_edgelist(path: str | Path) -> tuple[list[np.ndarray], int]:
     the marker are binned over ``[t.min(), t.max()]``: empty bins inside
     that span become empty snapshots, but empty bins outside it are
     unknowable and dropped.
+
+    ``chunk_edges`` enables the out-of-core read path (chunked text
+    scan / zip-member memmap) — same snapshots, bounded peak memory.
     """
     path = Path(path)
+    if chunk_edges is not None:
+        return _read_edgelist_chunked(path, chunk_edges)
     num_steps = None
     if path.suffix == ".npz":
         with np.load(path) as z:
@@ -237,3 +254,137 @@ def write_edgelist(path: str | Path,
     rows = np.stack([src, dst, t], axis=1)
     np.savetxt(path, rows, fmt="%d", delimiter="\t",
                header=f"src\tdst\tt\tnum_steps={num_steps}")
+
+
+# --------------------------------------------- out-of-core read path -------
+
+def _npz_memmaps(path: Path) -> dict[str, np.ndarray] | None:
+    """Zero-copy ``np.memmap`` views of an UNCOMPRESSED npz's members.
+
+    ``np.load(..., mmap_mode="r")`` silently ignores the mmap request
+    for ``.npz`` archives (it only ever mmaps bare ``.npy`` files), so
+    this locates each stored member's ``.npy`` payload inside the zip —
+    local file header at ``ZipInfo.header_offset``, then the npy header
+    — and maps the data region of the ARCHIVE file directly.  Returns
+    None when any member is deflated (no contiguous bytes to map; the
+    caller falls back to a regular load).
+    """
+    out: dict[str, np.ndarray] = {}
+    with zipfile.ZipFile(path) as z, open(path, "rb") as raw:
+        for zi in z.infolist():
+            if zi.compress_type != zipfile.ZIP_STORED:
+                return None
+            # local header: 30 fixed bytes + name + extra (the extra
+            # field can differ from the central directory's, so read it)
+            raw.seek(zi.header_offset)
+            hdr = raw.read(30)
+            if hdr[:4] != b"PK\x03\x04":
+                return None
+            name_len = int.from_bytes(hdr[26:28], "little")
+            extra_len = int.from_bytes(hdr[28:30], "little")
+            raw.seek(zi.header_offset + 30 + name_len + extra_len)
+            version = np.lib.format.read_magic(raw)
+            if version == (1, 0):
+                shape, fortran, dtype = np.lib.format.read_array_header_1_0(
+                    raw)
+            elif version == (2, 0):
+                shape, fortran, dtype = np.lib.format.read_array_header_2_0(
+                    raw)
+            else:
+                return None
+            name = zi.filename
+            if name.endswith(".npy"):
+                name = name[:-4]
+            out[name] = np.memmap(path, dtype=dtype, mode="r",
+                                  offset=raw.tell(), shape=shape,
+                                  order="F" if fortran else "C")
+    return out
+
+
+def _iter_tsv_chunks(path: Path, chunk_edges: int):
+    """Yield ``(<=chunk_edges, 3)`` int64 row blocks from a text edge
+    list without ever holding the whole table."""
+    buf: list[tuple[int, int, int]] = []
+    with open(path) as f:
+        for line in f:
+            s = line.strip()
+            if not s or s.startswith("#"):
+                continue
+            parts = s.split()
+            if len(parts) != 3:
+                raise ValueError(f"{path}: expected 'src dst t' rows, "
+                                 f"got {len(parts)} columns")
+            buf.append((int(parts[0]), int(parts[1]), int(parts[2])))
+            if len(buf) >= chunk_edges:
+                yield np.asarray(buf, dtype=np.int64)
+                buf = []
+    if buf:
+        yield np.asarray(buf, dtype=np.int64)
+
+
+def _iter_array_chunks(src, dst, t, chunk_edges: int):
+    """Yield row blocks from (possibly memory-mapped) column arrays —
+    each chunk is the only region pulled into memory."""
+    n = src.shape[0]
+    for lo in range(0, n, chunk_edges):
+        hi = min(lo + chunk_edges, n)
+        yield np.stack([np.asarray(src[lo:hi], dtype=np.int64),
+                        np.asarray(dst[lo:hi], dtype=np.int64),
+                        np.asarray(t[lo:hi], dtype=np.int64)], axis=1)
+
+
+def _read_edgelist_chunked(path: Path, chunk_edges: int
+                           ) -> tuple[list[np.ndarray], int]:
+    """Out-of-core ``read_edgelist``: same snapshots, bounded memory."""
+    if chunk_edges < 1:
+        raise ValueError(f"chunk_edges must be >= 1, got {chunk_edges}")
+    num_steps = None
+    if path.suffix == ".npz":
+        arrs = _npz_memmaps(path)
+        if arrs is None:    # deflated archive: no mappable bytes
+            with np.load(path) as z:
+                arrs = {k: z[k] for k in z.files}
+        if "edges" in arrs:
+            rows = arrs["edges"]
+            src, dst, t = rows[:, 0], rows[:, 1], rows[:, 2]
+        else:
+            src, dst, t = arrs["src"], arrs["dst"], arrs["t"]
+        if "num_steps" in arrs:
+            num_steps = int(np.asarray(arrs["num_steps"]))
+        chunks = _iter_array_chunks(src, dst, t, chunk_edges)
+    else:
+        num_steps = _tsv_num_steps(path)
+        chunks = _iter_tsv_chunks(path, chunk_edges)
+
+    # bin incrementally: per chunk, file-order edge runs per timestamp;
+    # concatenating runs in chunk order preserves file order per bin
+    parts: dict[int, list[np.ndarray]] = {}
+    total, n_seen = 0, 0
+    t_lo = t_hi = None
+    for rows in chunks:
+        if rows.shape[0] == 0:
+            continue
+        s, d, tt = rows[:, 0], rows[:, 1], rows[:, 2]
+        if s.min() < 0 or d.min() < 0:
+            raise ValueError(f"{path}: negative node ids")
+        total += rows.shape[0]
+        n_seen = max(n_seen, int(s.max()) + 1, int(d.max()) + 1)
+        lo, hi = int(tt.min()), int(tt.max())
+        t_lo = lo if t_lo is None else min(t_lo, lo)
+        t_hi = hi if t_hi is None else max(t_hi, hi)
+        edges = np.stack([s, d], axis=1).astype(np.int32)
+        for v in np.unique(tt):
+            parts.setdefault(int(v), []).append(edges[tt == v])
+    if total == 0:
+        raise ValueError(f"{path}: empty edge list")
+    if num_steps is not None:
+        if t_lo < 0 or t_hi >= num_steps:
+            raise ValueError(f"{path}: timestamps outside the declared "
+                             f"num_steps={num_steps}")
+        bins = range(0, num_steps)
+    else:
+        bins = range(t_lo, t_hi + 1)
+    empty = np.zeros((0, 2), dtype=np.int32)
+    snaps = [np.concatenate(parts[v], axis=0) if v in parts else empty
+             for v in bins]
+    return snaps, n_seen

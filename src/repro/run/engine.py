@@ -100,7 +100,8 @@ class Engine:
         rr = self.resolve()
         worker = {"eager": workers.fit_eager,
                   "streamed": workers.fit_streamed,
-                  "streamed_mesh": workers.fit_streamed_mesh}[rr.plan.mode]
+                  "streamed_mesh": workers.fit_streamed_mesh,
+                  "sampled": workers.fit_sampled}[rr.plan.mode]
         self._last = worker(rr)
         return self._last
 

@@ -16,7 +16,13 @@ to hard-code in ``if args.stream / if mesh is not None`` branches:
   does not divide over the shards, logging both adjustments;
 * the elastic rescale policy (``rescale`` / ``rescale_on_preempt``) —
   WHEN the snapshot-parallel width changes mid-run; executed by
-  ``repro.elastic`` at checkpoint-block boundaries.
+  ``repro.elastic`` at checkpoint-block boundaries;
+* the out-of-core sampled schedule (``sampled``): the trace stays
+  host-resident (``repro.hoststore``) and only fanout-sampled subgraphs
+  stream to the mesh — ``sampling`` holds the :class:`SamplingSpec`,
+  ``device_budget_bytes`` the simulated per-device graph-tensor budget
+  every schedule is gated against (full-graph schedules refuse a graph
+  that does not fit; sampling is how to train it anyway).
 """
 
 from __future__ import annotations
@@ -25,7 +31,9 @@ import math
 from dataclasses import dataclass
 from typing import Any, Callable
 
-MODES = ("eager", "streamed", "streamed_mesh")
+from repro.hoststore.spec import SamplingSpec
+
+MODES = ("eager", "streamed", "streamed_mesh", "sampled")
 
 
 @dataclass(frozen=True)
@@ -63,7 +71,7 @@ class ExecutionPlan:
       this off, SIGTERM checkpoints the cursor and exits cleanly).
     """
 
-    mode: str = "eager"             # eager | streamed | streamed_mesh
+    mode: str = "eager"             # eager|streamed|streamed_mesh|sampled
     shards: int = 1
     mesh: Any = None                # optional prebuilt Mesh (tests/shims)
     mesh_axis: str = "data"
@@ -76,11 +84,26 @@ class ExecutionPlan:
     auto_pad: bool = True
     rescale: tuple = ()             # ((block, new_p), ...) resize script
     rescale_on_preempt: int = 0     # SIGTERM shrink-to width (0 = off)
+    sampling: SamplingSpec | None = None    # sampled-schedule knobs
+    device_budget_bytes: int | None = None  # simulated per-device budget
 
     def validate(self) -> None:
         if self.mode not in MODES:
             raise ValueError(f"plan.mode must be one of {MODES}, "
                              f"got {self.mode!r}")
+        if self.mode == "sampled" and self.sampling is None:
+            raise ValueError("mode='sampled' needs plan.sampling="
+                             "SamplingSpec(batch_nodes, fanouts, ...)")
+        if self.sampling is not None:
+            if self.mode != "sampled":
+                raise ValueError("plan.sampling configures the sampled "
+                                 "schedule; it requires mode='sampled' "
+                                 f"(got {self.mode!r})")
+            self.sampling.validate()
+        if (self.device_budget_bytes is not None
+                and self.device_budget_bytes < 1):
+            raise ValueError("plan.device_budget_bytes must be >= 1 "
+                             "bytes (None = unlimited)")
         if self.shards < 1:
             raise ValueError(f"plan.shards must be >= 1, got {self.shards}")
         if self.prefetch_depth < 1:
@@ -139,7 +162,7 @@ class ExecutionPlan:
     @property
     def wants_mesh(self) -> bool:
         """True when this plan trains under a shard_map mesh."""
-        return (self.mode == "streamed_mesh"
+        return (self.mode in ("streamed_mesh", "sampled")
                 or (self.mode == "eager" and self.num_shards > 1))
 
     def build_mesh(self):
@@ -166,6 +189,11 @@ class ExecutionPlan:
         p = self.num_shards
         for w in self.rescale_widths:
             p = math.lcm(p, w)
+        if self.mode == "sampled":
+            # the temporal stage runs over the round node TABLE, which
+            # SamplingSpec.resolve pads to the mesh — the global vertex
+            # axis never has to divide (that's the point of sampling)
+            return num_nodes
         if not self.wants_mesh or num_nodes % p == 0:
             return num_nodes
         if not self.auto_pad:
@@ -181,13 +209,14 @@ class ExecutionPlan:
                         log_fn: Callable[[str], None] | None = None) -> int:
         """Checkpoint-block count adjusted for the streamed mesh.
 
-        ``streamed_mesh`` needs ``bsize % P == 0`` and ``T % bsize == 0``
-        (each round is one block, sliced over the shards).  When the
+        ``streamed_mesh`` and ``sampled`` need ``bsize % P == 0`` and
+        ``T % bsize == 0`` (each round is one block, sliced over the
+        shards).  When the
         requested blocking violates that, re-block via
         ``repro.ft.elastic.dyngnn_elastic_blocks`` (largest legal block
         <= the requested one) and log the adjustment.
         """
-        if self.mode != "streamed_mesh":
+        if self.mode not in ("streamed_mesh", "sampled"):
             return checkpoint_blocks
         p = self.num_shards
         nb = max(checkpoint_blocks, 1)

@@ -14,7 +14,16 @@ and drives the corresponding training loop:
   (``rescale`` / ``rescale_on_preempt``) or a checkpoint is configured
   it routes through ``repro.elastic.train_elastic_streamed`` — the
   segment loop that can change the snapshot-parallel width at
-  checkpoint-block boundaries and checkpoint/resume the data cursor.
+  checkpoint-block boundaries and checkpoint/resume the data cursor;
+* ``fit_sampled``       — out-of-core sampled training
+  (``repro.hoststore``): the trace stays host-resident in a
+  ``TemporalCSRStore`` and only fanout-sampled subgraph tensors stream
+  to the mesh.
+
+Every worker first gates against ``plan.device_budget_bytes``
+(``_budget_gate``) BEFORE allocating device graph tensors: full-graph
+schedules refuse a graph whose resident tensors exceed the budget
+(``DeviceBudgetError`` names the sampled schedule as the way out).
 
 These are the ONLY call sites of the stream training loops outside the
 deprecation shims; everything user-facing goes through the Engine.
@@ -31,6 +40,8 @@ from repro.ckpt.checkpoint import Checkpointer
 from repro.core import models as dyn_models
 from repro.ft.elastic import PreemptionGuard
 from repro.ft.straggler import StepTimer
+from repro import hoststore
+from repro.hoststore import budget as hostbudget
 from repro.optim import adamw
 from repro.run.config import ResolvedRun, RunResult
 from repro.stream import distributed as stream_dist
@@ -44,8 +55,22 @@ def _init(rr: ResolvedRun):
     return params, adamw.init_state(params)
 
 
+def _budget_gate(rr: ResolvedRun, resolved=None) -> dict | None:
+    """Gate the schedule against ``plan.device_budget_bytes`` BEFORE any
+    device graph tensor is allocated (raises ``DeviceBudgetError`` when
+    the resident graph tensors do not fit)."""
+    plan = rr.plan
+    return hostbudget.check_budget(
+        plan.mode, plan.device_budget_bytes,
+        num_steps=rr.ds.num_steps, win=rr.pipeline.bsize,
+        num_shards=plan.num_shards, max_edges=rr.pipeline.max_edges,
+        num_nodes=rr.ds.num_nodes,
+        feat_dim=rr.ds.frames.shape[-1], resolved=resolved)
+
+
 def fit_eager(rr: ResolvedRun) -> RunResult:
     plan = rr.plan
+    budget = _budget_gate(rr)
     num_steps = plan.num_steps
     opt_cfg = rr.opt_cfg or adamw.AdamWConfig(
         lr=1e-2, warmup_steps=10, total_steps=num_steps, weight_decay=0.0)
@@ -100,11 +125,12 @@ def fit_eager(rr: ResolvedRun) -> RunResult:
         step=min(num_steps, start_step + len(losses)))
     return RunResult(state=state, losses=losses,
                      transfer_report=rr.pipeline.transfer_bytes(),
-                     a2a_chunks=plan.a2a_chunks)
+                     a2a_chunks=plan.a2a_chunks, budget_report=budget)
 
 
 def fit_streamed(rr: ResolvedRun) -> RunResult:
     plan, ds, pipe = rr.plan, rr.ds, rr.pipeline
+    budget = _budget_gate(rr)
     opt_cfg = rr.opt_cfg or adamw.AdamWConfig(
         lr=1e-2, warmup_steps=10,
         total_steps=plan.num_epochs * ds.num_steps, weight_decay=0.0)
@@ -125,16 +151,18 @@ def fit_streamed(rr: ResolvedRun) -> RunResult:
     state = trainer.TrainState(params=st.params, opt_state=st.opt_state,
                                step=len(st.losses))
     return RunResult(state=state, losses=st.losses, stream_report=report,
-                     transfer_report=pipe.transfer_bytes())
+                     transfer_report=pipe.transfer_bytes(),
+                     budget_report=budget)
 
 
 def fit_streamed_mesh(rr: ResolvedRun) -> RunResult:
     plan, ds, pipe = rr.plan, rr.ds, rr.pipeline
+    budget = _budget_gate(rr)
     opt_cfg = rr.opt_cfg or adamw.AdamWConfig(
         lr=1e-2, warmup_steps=10,
         total_steps=plan.num_epochs * ds.num_steps, weight_decay=0.0)
     if plan.is_elastic or rr.checkpoint is not None:
-        return _fit_streamed_mesh_elastic(rr, opt_cfg)
+        return _fit_streamed_mesh_elastic(rr, opt_cfg, budget)
     params, opt_state = _init(rr)
     step_fn = rr.cache.get("dist_step")
     if step_fn is None:
@@ -162,11 +190,12 @@ def fit_streamed_mesh(rr: ResolvedRun) -> RunResult:
                      transfer_report=pipe.transfer_bytes(),
                      per_shard_bytes=st.per_shard_bytes,
                      a2a_chunks=plan.a2a_chunks,
-                     pipeline_rounds=plan.pipeline_rounds)
+                     pipeline_rounds=plan.pipeline_rounds,
+                     budget_report=budget)
 
 
-def _fit_streamed_mesh_elastic(rr: ResolvedRun,
-                               opt_cfg: adamw.AdamWConfig) -> RunResult:
+def _fit_streamed_mesh_elastic(rr: ResolvedRun, opt_cfg: adamw.AdamWConfig,
+                               budget: dict | None = None) -> RunResult:
     """Elastic / checkpointed variant of the streamed_mesh schedule.
 
     Same round protocol, driven in constant-width segments by
@@ -257,4 +286,45 @@ def _fit_streamed_mesh_elastic(rr: ResolvedRun,
                      per_shard_bytes=per_shard,
                      a2a_chunks=plan.a2a_chunks,
                      pipeline_rounds=plan.pipeline_rounds,
-                     rescale_report=st.report)
+                     rescale_report=st.report,
+                     budget_report=budget)
+
+
+def fit_sampled(rr: ResolvedRun) -> RunResult:
+    """Out-of-core sampled schedule: host-resident store + fanout-sampled
+    subgraph streaming (``repro.hoststore.train_sampled``)."""
+    plan, ds, pipe = rr.plan, rr.ds, rr.pipeline
+    spec = plan.sampling
+    resolved = spec.resolve(ds.num_nodes, pipe.bsize, plan.num_shards)
+    budget = _budget_gate(rr, resolved)
+    opt_cfg = rr.opt_cfg or adamw.AdamWConfig(
+        lr=1e-2, warmup_steps=10,
+        total_steps=plan.num_epochs * ds.num_steps, weight_decay=0.0)
+    params, opt_state = _init(rr)
+    store = rr.cache.get("host_store")
+    if store is None:
+        # SAME delta items as the device path: the store ingests the
+        # pipeline's IncrementalEncoder stream, no second decode
+        store = hoststore.TemporalCSRStore.from_stream(
+            pipe.host_stream(), ds.num_nodes)
+        rr.cache["host_store"] = store
+    step_fn = rr.cache.get("sampled_step")
+    if step_fn is None:
+        step_fn = hoststore.make_sampled_step(
+            rr.cfg, resolved, rr.mesh, opt_cfg, plan.mesh_axis,
+            a2a_chunks=plan.a2a_chunks)
+        rr.cache["sampled_step"] = step_fn
+    st = hoststore.train_sampled(
+        rr.cfg, store, np.asarray(ds.frames), np.asarray(ds.labels),
+        spec=spec, mesh=rr.mesh, axis=plan.mesh_axis,
+        block_size=pipe.bsize, num_epochs=plan.num_epochs,
+        overlap=plan.overlap, prefetch_depth=plan.prefetch_depth,
+        a2a_chunks=plan.a2a_chunks, opt_cfg=opt_cfg, params=params,
+        opt_state=opt_state, step_fn=step_fn, seed=rr.seed,
+        log_every=rr.log_every, log_fn=rr.log_fn)
+    state = trainer.TrainState(params=st.params, opt_state=st.opt_state,
+                               step=len(st.losses))
+    return RunResult(state=state, losses=st.losses,
+                     transfer_report=pipe.transfer_bytes(),
+                     a2a_chunks=plan.a2a_chunks,
+                     sample_report=st.report, budget_report=budget)

@@ -70,7 +70,8 @@ class DistStreamState:
 
 def make_dist_stream_step(cfg: mdl.DynGNNConfig, mesh,
                           opt_cfg: adamw.AdamWConfig, axis: str = "data",
-                          a2a_chunks: int = 1):
+                          a2a_chunks: int = 1,
+                          num_seeds: int | None = None):
     """Jitted per-round step: time-sharded reconstructed snapshots ->
     Laplacian weights on each shard -> snapshot-parallel block body
     (2 all-to-alls per layer) -> replicated mean CE -> AdamW update.
@@ -83,6 +84,12 @@ def make_dist_stream_step(cfg: mdl.DynGNNConfig, mesh,
     ``a2a_chunks=C`` splits each redistribution into C feature-sliced
     all-to-alls (the §6.5 overlap schedule) — math-identical, so the
     loss stream is pinned to the C=1 reference.
+
+    ``num_seeds`` is the sampled schedule's loss restriction
+    (``repro.hoststore``): the vertex axis is then a round-local node
+    TABLE whose first ``num_seeds`` lanes are the seed batch, and only
+    those lanes carry loss (mean over seeds).  ``None`` (full-graph
+    schedules) keeps the all-vertices mean.
     """
     if a2a_chunks < 1:
         raise ValueError(f"a2a_chunks must be >= 1, got {a2a_chunks}")
@@ -91,6 +98,8 @@ def make_dist_stream_step(cfg: mdl.DynGNNConfig, mesh,
     if n % num_procs:
         raise ValueError(f"num_nodes {n} must divide over {num_procs} "
                          f"snapshot shards (vertex-sharded temporal stage)")
+    if num_seeds is not None and not 1 <= num_seeds <= n:
+        raise ValueError(f"num_seeds {num_seeds} must lie in [1, {n}]")
     loop_edges, loop_ones = tl.make_self_loops(n)
     carry_specs = shardlib.stream_carry_specs(cfg, axis)
     b = shardlib.stream_batch_specs(axis)
@@ -107,8 +116,13 @@ def make_dist_stream_step(cfg: mdl.DynGNNConfig, mesh,
             cfg, params, axis, num_procs, carries,
             (frames, e_full, w_full, t0), a2a_chunks=a2a_chunks)
         nll = tl.slice_nll(params, h, labels)
-        total = jax.lax.psum(jnp.sum(nll), axis)
-        count = jnp.asarray(bsl * num_procs * n, jnp.float32)
+        if num_seeds is None:
+            total = jax.lax.psum(jnp.sum(nll), axis)
+            count = jnp.asarray(bsl * num_procs * n, jnp.float32)
+        else:
+            seed_mask = (jnp.arange(n) < num_seeds).astype(nll.dtype)
+            total = jax.lax.psum(jnp.sum(nll * seed_mask[None, :]), axis)
+            count = jnp.asarray(bsl * num_procs * num_seeds, jnp.float32)
         return total / count, new_carries
 
     loss_fn = shard_map(

@@ -1,0 +1,383 @@
+"""Out-of-core sampled training (``repro.hoststore``).
+
+The contracts PR 8 exists for:
+
+* the host ``TemporalCSRStore`` ingests the SAME ``IncrementalEncoder``
+  delta items as the device path and reconstructs every snapshot
+  exactly (delta ingest == full-sync ingest == the raw edge lists);
+* host-resident carries round-trip through gather/scatter losslessly;
+* with every vertex a seed and full fanout, ``schedule="sampled"``
+  reproduces the full-graph distributed streamed run (<= 1e-5 losses,
+  <= 1e-6 params) on the 8-device host mesh — and on 4;
+* truncated fanout still trains (bounded final-loss drift vs the
+  full-graph reference);
+* ``plan.device_budget_bytes`` makes full-graph schedules refuse a
+  graph whose per-round tensors do not fit while the sampled schedule
+  trains it, staging strictly fewer bytes.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro import hoststore as hs
+from repro.core.models import DynGNNConfig
+from repro.data.dyngnn import DTDGPipeline, synthetic_dataset
+from repro.launch.mesh import make_host_mesh
+from repro.stream import distributed as dist
+from repro.stream import encoder as enc
+
+N, T, NB = 48, 16, 2
+WIN = T // NB
+
+
+def _ds(model, seed=0):
+    smooth = {"tmgcn": "mproduct", "evolvegcn": "edgelife",
+              "cdgcn": "none"}[model]
+    ds = synthetic_dataset(N, T, density=2.0, churn=0.1,
+                           smoothing_mode=smooth, window=3, seed=seed)
+    cfg = DynGNNConfig(model=model, num_nodes=N, num_steps=T, window=3,
+                       checkpoint_blocks=NB)
+    return cfg, ds, np.asarray(ds.frames), np.asarray(ds.labels)
+
+
+def _canon(edges, values):
+    """(src, dst, value) rows in a canonical order for set comparison."""
+    rows = np.stack([edges[:, 0].astype(np.int64),
+                     edges[:, 1].astype(np.int64)], axis=1)
+    order = np.lexsort((values, rows[:, 0], rows[:, 1]))
+    return rows[order], values[order]
+
+
+# ============================================================ store =========
+
+@pytest.mark.parametrize("model", ["tmgcn", "cdgcn"])
+def test_store_matches_snapshots(model):
+    """Delta-stream ingest reconstructs every snapshot's edge list and
+    edge values exactly (order-independent)."""
+    _, ds, _, _ = _ds(model)
+    store = hs.TemporalCSRStore.from_snapshots(
+        ds.snapshots, ds.values, N, block_size=WIN)
+    assert store.num_steps == T
+    for t in range(T):
+        ref_v = (np.asarray(ds.values[t], dtype=np.float32)
+                 if ds.values is not None
+                 else np.ones(ds.snapshots[t].shape[0], np.float32))
+        got_e, got_v = _canon(store.edges(t), store.values_csr(t))
+        ref_e, ref_v = _canon(np.asarray(ds.snapshots[t]), ref_v)
+        assert np.array_equal(got_e, ref_e)
+        np.testing.assert_allclose(got_v, ref_v, rtol=0, atol=0)
+
+
+def test_store_delta_ingest_equals_full_sync():
+    """block_size=WIN (delta-heavy) and block_size=1 (every item a full
+    sync) build the same per-step graphs: identical indptr, identical
+    (src, value) multisets per dst bucket.  (Entry ORDER within a bucket
+    may differ — deltas mirror device order, survivors then adds — and
+    aggregation is order-invariant.)"""
+    _, ds, _, _ = _ds("cdgcn")
+    a = hs.TemporalCSRStore.from_snapshots(ds.snapshots, ds.values, N,
+                                           block_size=WIN)
+    b = hs.TemporalCSRStore.from_snapshots(ds.snapshots, ds.values, N,
+                                           block_size=1)
+    for t in range(T):
+        assert np.array_equal(a.csr(t).indptr, b.csr(t).indptr)
+        ea, va = _canon(a.edges(t), a.values_csr(t))
+        eb, vb = _canon(b.edges(t), b.values_csr(t))
+        assert np.array_equal(ea, eb)
+        assert np.array_equal(va, vb)
+
+
+def test_store_shares_encoder_items():
+    """The store consumes the pipeline's own host stream (one encode,
+    no second decode) — same result as encoding itself."""
+    _, ds, _, _ = _ds("cdgcn")
+    pipe = DTDGPipeline(ds, nb=NB)
+    via_pipe = hs.TemporalCSRStore.from_stream(pipe.host_stream(), N)
+    direct = hs.TemporalCSRStore.from_snapshots(ds.snapshots, ds.values,
+                                                N, block_size=WIN)
+    for t in range(T):
+        assert np.array_equal(via_pipe.csr(t).indices,
+                              direct.csr(t).indices)
+    assert via_pipe.nbytes == direct.nbytes
+    assert via_pipe.max_in_degree() == direct.max_in_degree()
+
+
+def test_store_rejects_delta_first():
+    _, ds, _, _ = _ds("cdgcn")
+    items = list(enc.iter_encode_stream(
+        ds.snapshots, ds.values, N, enc.padded_max_edges(ds.snapshots),
+        WIN, None))
+    store = hs.TemporalCSRStore(N)
+    with pytest.raises(ValueError, match="full sync"):
+        store.ingest(items[1])      # a delta, mid-block
+
+
+# ============================================================ carry =========
+
+@pytest.mark.parametrize("model", ["tmgcn", "cdgcn", "evolvegcn"])
+def test_carry_gather_scatter_roundtrip(model):
+    """scatter(gather(...)) is the identity, touched rows update, and
+    rows outside the table keep their previous state."""
+    from repro.core import models as mdl
+
+    cfg, _, _, _ = _ds(model)
+    params = mdl.init_params(jax.random.PRNGKey(0), cfg)
+    cs = hs.HostCarryStore(cfg, params)
+    ids = np.array([1, 5, 7, 40], dtype=np.int64)
+    pad = 8
+    g0 = cs.gather(ids, pad)
+    cs.scatter(ids, g0)
+    g1 = cs.gather(ids, pad)
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        assert np.array_equal(a, b)
+    # perturb the gathered rows, scatter, re-gather: rows moved
+    bumped = jax.tree.map(lambda x: x + 1.0, g0)
+    cs.scatter(ids, bumped)
+    g2 = cs.gather(ids, pad)
+    for a, b in zip(jax.tree.leaves(bumped), jax.tree.leaves(g2)):
+        if cs.axis is None:
+            assert np.array_equal(a, b)
+        else:
+            k = ids.shape[0]
+            sl = (slice(0, k) if cs.axis == 0
+                  else (slice(None), slice(0, k)))
+            assert np.array_equal(np.asarray(a)[sl], np.asarray(b)[sl])
+    if cs.axis is not None:
+        # untouched node keeps its (zero-init) state
+        other = cs.gather(np.array([2], dtype=np.int64), pad)
+        for leaf in jax.tree.leaves(other):
+            assert np.all(np.asarray(leaf) == 0.0)
+
+
+# ================================================= sampling pipeline ========
+
+def test_sample_round_deterministic_across_workers():
+    """The same (seed, epoch, round) samples identically no matter how
+    many worker threads run the per-step expansions."""
+    from concurrent.futures import ThreadPoolExecutor
+
+    _, ds, frames, labels = _ds("cdgcn")
+    store = hs.TemporalCSRStore.from_snapshots(ds.snapshots, ds.values, N,
+                                               block_size=WIN)
+    spec = hs.SamplingSpec(batch_nodes=12, fanouts=(3, 3), seed=5)
+    resolved = spec.resolve(N, WIN, 4)
+    outs = []
+    for workers in (1, 4):
+        with ThreadPoolExecutor(max_workers=workers) as pool:
+            outs.append(hs.sample_round(store, frames, labels, spec,
+                                        resolved, WIN, r=1, epoch=0,
+                                        pool=pool))
+    a, b = outs
+    assert np.array_equal(a.node_ids, b.node_ids)
+    for f in ("frames", "labels", "edges", "mask", "values"):
+        assert np.array_equal(getattr(a, f), getattr(b, f)), f
+
+
+def test_sample_round_budget_overflow_degrades():
+    """Tiny static budgets drop lanes (counted) but never change
+    shapes."""
+    from concurrent.futures import ThreadPoolExecutor
+
+    _, ds, frames, labels = _ds("cdgcn")
+    store = hs.TemporalCSRStore.from_snapshots(ds.snapshots, ds.values, N,
+                                               block_size=WIN)
+    spec = hs.SamplingSpec(batch_nodes=8, fanouts=(8, 8), seed=0,
+                           table_pad=12, max_edges=16)
+    resolved = spec.resolve(N, WIN, 4)
+    assert resolved.table_pad == 12 and resolved.edge_pad == 128
+    with ThreadPoolExecutor(max_workers=2) as pool:
+        rnd = hs.sample_round(store, frames, labels, spec, resolved, WIN,
+                              r=0, epoch=0, pool=pool)
+    assert rnd.dropped_nodes > 0
+    assert rnd.edges.shape == (WIN, 128, 2)
+    assert rnd.frames.shape == (WIN, 12, frames.shape[-1])
+    # surviving edges reference only in-table lanes
+    assert rnd.edges.max() < 12
+
+
+def test_draw_seeds_identity_and_random():
+    assert np.array_equal(hs.draw_seeds(10, 10, 0, 0, 0), np.arange(10))
+    assert np.array_equal(hs.draw_seeds(10, 99, 0, 0, 0), np.arange(10))
+    s = hs.draw_seeds(100, 10, seed=1, epoch=0, r=0)
+    assert s.shape == (10,) and np.unique(s).shape == (10,)
+    assert np.array_equal(s, hs.draw_seeds(100, 10, 1, 0, 0))
+    assert not np.array_equal(s, hs.draw_seeds(100, 10, 1, 0, 1))
+
+
+def test_sampling_spec_resolve():
+    spec = hs.SamplingSpec(batch_nodes=16, fanouts=(4, 4))
+    r = spec.resolve(num_nodes=1000, win=8, num_shards=8)
+    assert r.num_seeds == 16
+    assert r.table_pad % 8 == 0
+    assert r.edge_pad % 128 == 0
+    # table bounded by N
+    r2 = spec.resolve(num_nodes=48, win=8, num_shards=8)
+    assert r2.table_pad == 48
+    with pytest.raises(ValueError):
+        hs.SamplingSpec(batch_nodes=0).validate()
+    with pytest.raises(ValueError):
+        hs.SamplingSpec(batch_nodes=4, fanouts=()).validate()
+
+
+# ===================================================== equivalence ==========
+
+@pytest.mark.skipif(len(jax.devices()) < 8, reason="needs 8 host devices")
+@pytest.mark.parametrize("model", ["tmgcn", "cdgcn", "evolvegcn"])
+def test_full_fanout_matches_full_graph_reference(model):
+    """Every vertex a seed + fanout >= max in-degree: the sampled
+    schedule IS the full-graph distributed streamed run (<= 1e-5
+    losses, <= 1e-6 params) on the 8-device mesh."""
+    cfg, ds, frames, labels = _ds(model)
+    pipe = DTDGPipeline(ds, nb=NB)
+    mesh = make_host_mesh(data=8, model=1)
+    ref = dist.train_distributed_streamed(
+        cfg, ds.snapshots, ds.values, frames, labels, mesh=mesh,
+        block_size=WIN, num_epochs=2, stats=pipe.stream_stats,
+        max_edges=pipe.max_edges, log_fn=None)
+    store = hs.TemporalCSRStore.from_stream(pipe.host_stream(), N)
+    deg = store.max_in_degree()
+    spec = hs.SamplingSpec(batch_nodes=N, fanouts=(deg, deg), seed=0)
+    got = hs.train_sampled(cfg, store, frames, labels, spec=spec,
+                           mesh=mesh, block_size=WIN, num_epochs=2,
+                           log_fn=None)
+    assert len(got.losses) == len(ref.losses) == 2 * NB
+    np.testing.assert_allclose(got.losses, ref.losses, rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(ref.params),
+                    jax.tree.leaves(got.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-6)
+    assert got.report.dropped_nodes == 0
+    assert got.report.dropped_edges == 0
+
+
+def test_full_fanout_matches_reference_p4():
+    """Same equivalence on a 4-shard mesh (different table tiling)."""
+    cfg, ds, frames, labels = _ds("cdgcn")
+    pipe = DTDGPipeline(ds, nb=NB)
+    mesh = make_host_mesh(data=4, model=1)
+    ref = dist.train_distributed_streamed(
+        cfg, ds.snapshots, ds.values, frames, labels, mesh=mesh,
+        block_size=WIN, num_epochs=1, stats=pipe.stream_stats,
+        max_edges=pipe.max_edges, log_fn=None)
+    store = hs.TemporalCSRStore.from_stream(pipe.host_stream(), N)
+    deg = store.max_in_degree()
+    spec = hs.SamplingSpec(batch_nodes=N, fanouts=(deg, deg), seed=0)
+    got = hs.train_sampled(cfg, store, frames, labels, spec=spec,
+                           mesh=mesh, block_size=WIN, num_epochs=1,
+                           log_fn=None)
+    np.testing.assert_allclose(got.losses, ref.losses, rtol=1e-5)
+
+
+def test_truncated_fanout_converges():
+    """GraphSAGE-regime sanity: truncated fanout still trains, and its
+    final loss drifts a bounded amount from the full-graph reference."""
+    cfg, ds, frames, labels = _ds("cdgcn")
+    pipe = DTDGPipeline(ds, nb=NB)
+    mesh = make_host_mesh(data=4, model=1)
+    epochs = 4
+    ref = dist.train_distributed_streamed(
+        cfg, ds.snapshots, ds.values, frames, labels, mesh=mesh,
+        block_size=WIN, num_epochs=epochs, stats=pipe.stream_stats,
+        max_edges=pipe.max_edges, log_fn=None)
+    store = hs.TemporalCSRStore.from_stream(pipe.host_stream(), N)
+    spec = hs.SamplingSpec(batch_nodes=24, fanouts=(4, 4), seed=0)
+    got = hs.train_sampled(cfg, store, frames, labels, spec=spec,
+                           mesh=mesh, block_size=WIN, num_epochs=epochs,
+                           log_fn=None)
+    assert len(got.losses) == epochs * NB
+    # it trains (first-epoch mean -> last-epoch mean goes down) ...
+    first = np.mean(got.losses[:NB])
+    last = np.mean(got.losses[-NB:])
+    assert last < first
+    # ... and lands within a bounded drift of the full-graph final loss
+    assert abs(last - np.mean(ref.losses[-NB:])) < 0.1
+
+
+# ========================================================= budget ===========
+
+def test_budget_gate_numbers():
+    kw = dict(num_steps=T, win=WIN, num_shards=4, max_edges=256,
+              num_nodes=N, feat_dim=2)
+    full = hs.full_graph_round_bytes("streamed_mesh", **kw)
+    assert full == (WIN // 4) * (256 * 16 + N * 2 * 4 + N * 4)
+    assert hs.check_budget("streamed_mesh", None, **kw) is None
+    ok = hs.check_budget("streamed_mesh", full, **kw)
+    assert ok == {"required": full, "budget": full}
+    with pytest.raises(hs.DeviceBudgetError) as ei:
+        hs.check_budget("streamed_mesh", full - 1, **kw)
+    assert "sampled" in str(ei.value)
+
+
+def test_budget_refusal_and_sampled_fit():
+    """The win condition, engine-level: a budget the full-graph
+    schedules refuse is enough for the sampled schedule, which stages
+    strictly fewer graph bytes than the full round would."""
+    from repro.run import (Engine, ExecutionPlan, RunConfig, SamplingSpec,
+                           SyntheticTrace)
+
+    data = SyntheticTrace(num_nodes=N, num_steps=T, density=2.0, seed=3)
+    model = DynGNNConfig(model="cdgcn", num_nodes=N, num_steps=T,
+                         checkpoint_blocks=NB)
+    spec = SamplingSpec(batch_nodes=12, fanouts=(3, 3), seed=0,
+                        table_pad=24, max_edges=128)
+    # budget: exactly one sampled round — below every full-graph round
+    budget = hs.sampled_round_bytes(
+        spec.resolve(N, WIN, 4), win=WIN, num_shards=4, feat_dim=2)
+    for mode, shards in (("eager", 1), ("streamed", 1),
+                         ("streamed_mesh", 4)):
+        plan = ExecutionPlan(mode=mode, shards=shards,
+                             device_budget_bytes=budget)
+        with pytest.raises(hs.DeviceBudgetError):
+            Engine(RunConfig(model=model, data=data, plan=plan,
+                             log_fn=lambda s: None)).fit()
+    plan = ExecutionPlan(mode="sampled", shards=4, sampling=spec,
+                        device_budget_bytes=budget)
+    res = Engine(RunConfig(model=model, data=data, plan=plan,
+                           log_fn=lambda s: None)).fit()
+    assert res.budget_report is not None
+    # the full schedules raised above with THIS budget, so transitively
+    # sampled_required <= budget < every full-graph requirement
+    assert res.budget_report["required"] <= budget
+    assert len(res.losses) == NB
+    assert res.sample_report.rounds == NB
+    assert res.sample_report.staged_bytes > 0
+
+
+# ========================================================= engine ===========
+
+def test_engine_sampled_mode():
+    """mode='sampled' end-to-end through the Engine: losses, sample
+    report, and N not padded (the table axis is what tiles)."""
+    from repro.run import (Engine, ExecutionPlan, RunConfig, SamplingSpec,
+                           SyntheticTrace)
+
+    n_odd = 50                       # NOT a multiple of 4: sampled mode
+    data = SyntheticTrace(num_nodes=n_odd, num_steps=T, density=2.0,
+                          seed=1)
+    model = DynGNNConfig(model="cdgcn", num_nodes=n_odd, num_steps=T,
+                         checkpoint_blocks=NB)
+    plan = ExecutionPlan(mode="sampled", shards=4, num_epochs=2,
+                         sampling=SamplingSpec(batch_nodes=16,
+                                               fanouts=(4, 4), seed=2))
+    res = Engine(RunConfig(model=model, data=data, plan=plan,
+                           log_fn=lambda s: None)).fit()
+    assert len(res.losses) == 2 * NB
+    assert res.sample_report.rounds == 2 * NB
+    assert res.sample_report.table_fill_max <= 50
+    assert res.budget_report is None
+    assert all(np.isfinite(res.losses))
+
+
+def test_plan_validation_sampled():
+    from repro.run import ExecutionPlan, SamplingSpec
+
+    with pytest.raises(ValueError, match="needs plan.sampling"):
+        ExecutionPlan(mode="sampled").validate()
+    with pytest.raises(ValueError, match="requires mode='sampled'"):
+        ExecutionPlan(mode="eager",
+                      sampling=SamplingSpec(batch_nodes=4)).validate()
+    with pytest.raises(ValueError, match="device_budget_bytes"):
+        ExecutionPlan(device_budget_bytes=0).validate()
+    ExecutionPlan(mode="sampled", shards=4,
+                  sampling=SamplingSpec(batch_nodes=4)).validate()

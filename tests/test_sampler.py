@@ -1,0 +1,153 @@
+"""Tests for the host-side layered neighbor sampler
+(``repro.graph.sampler``): seed determinism, padded-lane mask
+invariants, local/global node-table consistency, CSR edge-position
+tracking, and a statistical inclusion-probability check for the uniform
+fanout draw."""
+
+import numpy as np
+import pytest
+
+from repro.graph import sampler as smp
+
+
+def _random_graph(n=40, e=300, seed=0):
+    rng = np.random.default_rng(seed)
+    edges = rng.integers(0, n, size=(e, 2)).astype(np.int32)
+    return edges, smp.CSRGraph.from_edges(edges, n)
+
+
+def _sample(graph, seeds, fanouts, seed):
+    return smp.sample_neighbors(graph, seeds,
+                                list(fanouts),
+                                np.random.default_rng(seed))
+
+
+# ------------------------------------------------------------ basics -------
+
+def test_csr_from_edges_roundtrip():
+    edges, g = _random_graph()
+    # row v of the incoming-edge CSR holds exactly the srcs of v's edges
+    for v in range(g.num_nodes):
+        lo, hi = g.indptr[v], g.indptr[v + 1]
+        expect = np.sort(edges[edges[:, 1] == v, 0])
+        assert np.array_equal(np.sort(g.indices[lo:hi]), expect)
+
+
+def test_seed_determinism():
+    _, g = _random_graph()
+    seeds = np.array([3, 7, 11, 19])
+    a = _sample(g, seeds, (3, 2), seed=42)
+    b = _sample(g, seeds, (3, 2), seed=42)
+    assert np.array_equal(a.node_ids, b.node_ids)
+    assert np.array_equal(a.node_mask, b.node_mask)
+    for ba, bb in zip(a.blocks, b.blocks, strict=True):
+        assert np.array_equal(ba.edges, bb.edges)
+        assert np.array_equal(ba.edge_mask, bb.edge_mask)
+        assert np.array_equal(ba.edge_pos, bb.edge_pos)
+    c = _sample(g, seeds, (3, 2), seed=43)
+    diff = any(not np.array_equal(ba.edges, bc.edges)
+               for ba, bc in zip(a.blocks, c.blocks, strict=True))
+    assert diff, "different PRNG seed should draw a different sample"
+
+
+# ------------------------------------------------- padded-lane masks -------
+
+def test_padded_lane_invariants():
+    _, g = _random_graph()
+    seeds = np.array([0, 1, 2])
+    sub = _sample(g, seeds, (4, 3), seed=1)
+    # static worst-case shapes
+    assert sub.node_ids.shape[0] == 3 + 3 * 4 + 3 * 4 * 3
+    assert sub.blocks[0].edges.shape == (12, 2)
+    assert sub.blocks[1].edges.shape == (36, 2)
+    # masks are {0,1} and prefix-shaped (valid lanes first)
+    for blk in sub.blocks:
+        m = blk.edge_mask
+        assert set(np.unique(m)) <= {0.0, 1.0}
+        k = int(m.sum())
+        assert np.all(m[:k] == 1.0) and np.all(m[k:] == 0.0)
+        # padded lanes are zeroed, never stale
+        assert np.all(blk.edges[k:] == 0)
+        assert np.all(blk.edge_pos[k:] == 0)
+    nm = sub.node_mask
+    kn = int(nm.sum())
+    assert np.all(nm[:kn] == 1.0) and np.all(nm[kn:] == 0.0)
+    assert np.all(sub.node_ids[kn:] == 0)
+
+
+# ------------------------------------- local/global table consistency ------
+
+def test_node_table_consistency():
+    edges, g = _random_graph()
+    seeds = np.array([5, 9, 21, 33])
+    sub = _sample(g, seeds, (3, 3), seed=7)
+    kn = int(sub.node_mask.sum())
+    table = sub.node_ids[:kn]
+    # seeds occupy [0, b) in seed order
+    assert np.array_equal(table[:4], seeds)
+    # valid table entries are unique
+    assert np.unique(table).shape[0] == kn
+    eset = {(int(s), int(d)) for s, d in edges}
+    for blk in sub.blocks:
+        ke = int(blk.edge_mask.sum())
+        loc = blk.edges[:ke]
+        # every local endpoint indexes a valid table row
+        assert loc.size == 0 or int(loc.max()) < kn
+        # mapping back through the table lands on real graph edges,
+        # and edge_pos points at exactly that (src, dst) CSR slot
+        for (ls, ld), pos in zip(loc, blk.edge_pos[:ke], strict=True):
+            gs, gd = int(table[ls]), int(table[ld])
+            assert (gs, gd) in eset
+            assert int(g.indices[pos]) == gs
+            lo, hi = g.indptr[gd], g.indptr[gd + 1]
+            assert lo <= pos < hi
+
+
+def test_first_hop_dsts_are_seeds():
+    _, g = _random_graph()
+    seeds = np.array([2, 17, 30])
+    sub = _sample(g, seeds, (5,), seed=3)
+    blk = sub.blocks[0]
+    ke = int(blk.edge_mask.sum())
+    assert ke > 0
+    assert np.all(blk.edges[:ke, 1] < 3)    # dst = a seed's local id
+
+
+def test_full_fanout_covers_in_neighborhood():
+    edges, g = _random_graph()
+    seeds = np.arange(g.num_nodes)
+    deg = np.diff(g.indptr).max()
+    sub = _sample(g, seeds, (int(deg),), seed=0)
+    blk = sub.blocks[0]
+    ke = int(blk.edge_mask.sum())
+    assert ke == edges.shape[0]              # every edge sampled once
+    table = sub.node_ids[:int(sub.node_mask.sum())]
+    got = {(int(table[s]), int(table[d])) for s, d in blk.edges[:ke]}
+    assert got == {(int(s), int(d)) for s, d in edges}
+
+
+# ------------------------------------------- inclusion probabilities -------
+
+def test_uniform_inclusion_probability():
+    """Fanout k from a degree-d neighborhood includes each neighbor
+    with probability k/d; check the empirical rate over repeats."""
+    n, d, k = 12, 10, 3
+    # node 0 has exactly d distinct in-neighbors (1..d)
+    edges = np.stack([np.arange(1, d + 1),
+                      np.zeros(d, dtype=np.int64)], axis=1).astype(np.int32)
+    g = smp.CSRGraph.from_edges(edges, n)
+    trials = 2000
+    counts = np.zeros(d)
+    for s in range(trials):
+        sub = _sample(g, np.array([0]), (k,), seed=s)
+        blk = sub.blocks[0]
+        ke = int(blk.edge_mask.sum())
+        assert ke == k                       # deg >= fanout: exactly k draws
+        table = sub.node_ids
+        picked = {int(table[ls]) for ls in blk.edges[:ke, 0]}
+        assert len(picked) == k              # without replacement
+        for v in picked:
+            counts[v - 1] += 1
+    rate = counts / trials
+    # binomial std ~ sqrt(p(1-p)/trials) ~ 0.01; 5 sigma margin
+    assert np.all(np.abs(rate - k / d) < 0.05), rate

@@ -10,7 +10,8 @@ Two jobs, both run by CI (the ``docs`` job) and by
   GitHub's slug rules).  Links that resolve outside the repo root are
   web-relative (e.g. the CI badge) and skipped, as are absolute URLs.
 * **example run** — every ```python fence in the EXAMPLE_DOCS files
-  (docs/run_api.md, docs/serve_api.md) executes, in file order, each
+  (docs/run_api.md, docs/serve_api.md, docs/sampling.md) executes, in
+  file order, each
   file in its own shared interpreter namespace (later blocks may use
   earlier blocks' variables).  The blocks are written tiny so each file
   trains in seconds.
@@ -27,7 +28,7 @@ import sys
 from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
-EXAMPLE_DOCS = ("run_api.md", "serve_api.md")
+EXAMPLE_DOCS = ("run_api.md", "serve_api.md", "sampling.md")
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
 FENCE_RE = re.compile(r"^```python\n(.*?)^```", re.MULTILINE | re.DOTALL)

@@ -1,0 +1,291 @@
+#!/usr/bin/env python
+"""Fetch + preprocess the paper's real DTDG traces (KONECT edge lists).
+
+The paper evaluates on temporal edge lists (epinions, flickr, youtube)
+that ship as KONECT archives: ``%``-commented text with
+``src dst [weight [timestamp]]`` rows and 1-based vertex ids.  This tool
+turns one of those into the repo's timestamped edge-list format
+(``src dst t`` rows, consecutive integer time bins — exactly what
+``repro.run.EdgeListDTDG`` loads, out-of-core via ``chunk_edges``):
+
+    python tools/fetch_data.py fetch --dataset epinions --dest data/
+    python tools/fetch_data.py preprocess --dataset epinions \\
+        --raw data/out.soc-sign-epinions --out data/epinions.tsv \\
+        --num-steps 32
+
+Checksums: every download is sha256-verified.  The registry pin is
+trust-on-first-use — the first fetch records the digest in a
+``<archive>.sha256`` sidecar next to the download (and prints it, so it
+can be pinned in ``DATASETS``); later fetches refuse a mismatch.
+``--expect-sha256`` overrides both.
+
+Offline fixture: CI has no network, so the committed test fixture
+(``tests/fixtures/epinions_tiny.tsv``) is derived by the SAME
+``parse_konect -> sub_slice -> bin_timestamps`` path from the
+deterministic KONECT-format sample written by the ``sample`` subcommand
+(a format-faithful stand-in for the real archive).  Regenerate with:
+
+    python tools/fetch_data.py sample --out /tmp/out.epinions-sample
+    python tools/fetch_data.py fixture --raw /tmp/out.epinions-sample \\
+        --out tests/fixtures/epinions_tiny.tsv --num-nodes 24 \\
+        --num-steps 8
+
+Against a real fetched archive, ``fixture --raw data/out.<name>`` cuts
+the analogous deterministic sub-slice of the genuine trace.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import sys
+import tarfile
+from dataclasses import dataclass
+from pathlib import Path
+
+import numpy as np
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+
+@dataclass(frozen=True)
+class DatasetSpec:
+    name: str
+    url: str
+    member: str                 # path of the edge list inside the archive
+    sha256: str | None = None   # pin (None = trust-on-first-use sidecar)
+
+
+DATASETS = {
+    "epinions": DatasetSpec(
+        name="epinions",
+        url="http://konect.cc/files/download.tsv.soc-sign-epinions.tar.bz2",
+        member="soc-sign-epinions/out.soc-sign-epinions"),
+    "youtube": DatasetSpec(
+        name="youtube",
+        url="http://konect.cc/files/download.tsv.youtube-u-growth.tar.bz2",
+        member="youtube-u-growth/out.youtube-u-growth"),
+}
+
+
+# ------------------------------------------------------------ checksum -----
+
+def sha256_file(path: Path, chunk: int = 1 << 20) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        while True:
+            block = f.read(chunk)
+            if not block:
+                break
+            h.update(block)
+    return h.hexdigest()
+
+
+def verify_checksum(path: Path, expect: str | None,
+                    pin: str | None) -> str:
+    """sha256-verify ``path`` against (in priority order) the CLI
+    ``expect``, the registry ``pin``, or the trust-on-first-use sidecar
+    ``<path>.sha256`` (created when none of the above exist)."""
+    digest = sha256_file(path)
+    sidecar = path.with_suffix(path.suffix + ".sha256")
+    want = expect or pin
+    if want is None and sidecar.exists():
+        want = sidecar.read_text().split()[0]
+    if want is None:
+        sidecar.write_text(f"{digest}  {path.name}\n")
+        print(f"recorded sha256 {digest} -> {sidecar.name} "
+              "(pin this in DATASETS)")
+        return digest
+    if digest != want:
+        raise SystemExit(f"checksum mismatch for {path}:\n"
+                         f"  expected {want}\n  got      {digest}")
+    print(f"sha256 OK: {digest}")
+    return digest
+
+
+# ------------------------------------------------------------- fetch -------
+
+def fetch(spec: DatasetSpec, dest_dir: Path,
+          expect_sha256: str | None = None) -> Path:
+    """Download + verify + extract; returns the raw edge-list path."""
+    import urllib.request
+
+    dest_dir.mkdir(parents=True, exist_ok=True)
+    archive = dest_dir / spec.url.rsplit("/", 1)[-1]
+    if not archive.exists():
+        print(f"downloading {spec.url}")
+        urllib.request.urlretrieve(spec.url, archive)
+    verify_checksum(archive, expect_sha256, spec.sha256)
+    raw = dest_dir / Path(spec.member).name
+    if not raw.exists():
+        with tarfile.open(archive) as tf:
+            member = tf.getmember(spec.member)
+            member.name = Path(spec.member).name     # no nested dirs
+            tf.extract(member, dest_dir, filter="data")
+    return raw
+
+
+# -------------------------------------------------------- preprocess -------
+
+def parse_konect(path: Path) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """KONECT rows -> (src, dst, timestamp) int64 arrays, file order.
+
+    Rows are ``src dst [weight [timestamp]]``; ``%`` lines are comments.
+    Rows without a timestamp column are dropped (the DTDG needs one).
+    """
+    srcs, dsts, times = [], [], []
+    with open(path) as f:
+        for line in f:
+            s = line.strip()
+            if not s or s.startswith("%") or s.startswith("#"):
+                continue
+            parts = s.split()
+            if len(parts) < 4:
+                continue                     # no timestamp: not temporal
+            srcs.append(int(parts[0]))
+            dsts.append(int(parts[1]))
+            times.append(int(float(parts[3])))
+    if not srcs:
+        raise SystemExit(f"{path}: no timestamped edges found")
+    return (np.asarray(srcs, np.int64), np.asarray(dsts, np.int64),
+            np.asarray(times, np.int64))
+
+
+def densify_ids(src: np.ndarray,
+                dst: np.ndarray) -> tuple[np.ndarray, np.ndarray, int]:
+    """Remap (1-based, gappy) vertex ids to dense 0-based ids."""
+    ids = np.unique(np.concatenate([src, dst]))
+    return (np.searchsorted(ids, src), np.searchsorted(ids, dst),
+            int(ids.shape[0]))
+
+
+def bin_timestamps(t: np.ndarray, num_steps: int) -> np.ndarray:
+    """Raw timestamps -> ``num_steps`` equal-width integer bins."""
+    lo, hi = int(t.min()), int(t.max())
+    span = max(hi - lo, 1)
+    bins = ((t - lo).astype(np.float64) * num_steps / (span + 1))
+    return np.minimum(bins.astype(np.int64), num_steps - 1)
+
+
+def preprocess(raw: Path, out: Path, num_steps: int) -> None:
+    """Raw KONECT edge list -> repo edge-list file (tsv or npz)."""
+    from repro.run.data import write_edgelist
+
+    src, dst, ts = parse_konect(raw)
+    src, dst, n = densify_ids(src, dst)
+    tb = bin_timestamps(ts, num_steps)
+    order = np.argsort(tb, kind="stable")    # bin-major, file order kept
+    edges = np.stack([src[order], dst[order]], axis=1).astype(np.int32)
+    tb = tb[order]
+    snaps = [edges[tb == k] for k in range(num_steps)]
+    write_edgelist(out, snaps)
+    print(f"{out}: {n} nodes, {edges.shape[0]} edges, "
+          f"{num_steps} snapshots")
+
+
+def sub_slice(src: np.ndarray, dst: np.ndarray, ts: np.ndarray,
+              num_nodes: int
+              ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Deterministic sub-slice: keep the first ``num_nodes`` distinct
+    vertices in file order and the edges internal to them."""
+    seen: dict[int, None] = {}
+    for a, b in zip(src.tolist(), dst.tolist(), strict=True):
+        if len(seen) >= num_nodes:
+            break
+        seen.setdefault(a)
+        if len(seen) < num_nodes:
+            seen.setdefault(b)
+    keep_ids = np.asarray(sorted(seen), dtype=np.int64)
+    mask = np.isin(src, keep_ids) & np.isin(dst, keep_ids)
+    return src[mask], dst[mask], ts[mask]
+
+
+def make_fixture(raw: Path, out: Path, num_nodes: int,
+                 num_steps: int) -> None:
+    """Tiny deterministic sub-slice -> committed offline fixture."""
+    from repro.run.data import write_edgelist
+
+    src, dst, ts = parse_konect(raw)
+    src, dst, ts = sub_slice(src, dst, ts, num_nodes)
+    if src.shape[0] == 0:
+        raise SystemExit("sub-slice is empty; raise --num-nodes")
+    src, dst, n = densify_ids(src, dst)
+    tb = bin_timestamps(ts, num_steps)
+    order = np.argsort(tb, kind="stable")
+    edges = np.stack([src[order], dst[order]], axis=1).astype(np.int32)
+    tb = tb[order]
+    snaps = [edges[tb == k] for k in range(num_steps)]
+    write_edgelist(out, snaps)
+    print(f"{out}: {n} nodes, {edges.shape[0]} edges, "
+          f"{num_steps} snapshots (deterministic sub-slice of {raw.name})")
+
+
+# ------------------------------------------------------------ sample -------
+
+def make_sample(out: Path, num_nodes: int = 120, num_edges: int = 900,
+                seed: int = 20260807) -> None:
+    """Deterministic KONECT-format sample (the offline stand-in the
+    committed fixture derives from; format-faithful: 1-based gappy ids,
+    signed weights, unix timestamps, % comment header)."""
+    rng = np.random.default_rng(seed)
+    # gappy 1-based id space, like real KONECT vertex columns
+    ids = 1 + np.sort(rng.choice(num_nodes * 3, size=num_nodes,
+                                 replace=False))
+    src = ids[rng.integers(0, num_nodes, num_edges)]
+    dst = ids[rng.integers(0, num_nodes, num_edges)]
+    w = rng.choice([-1, 1], num_edges)
+    t0 = 1_000_000_000
+    ts = np.sort(rng.integers(t0, t0 + 10_000_000, num_edges))
+    with open(out, "w") as f:
+        f.write("% sym unweighted\n% deterministic sample "
+                f"(tools/fetch_data.py sample, seed={seed})\n")
+        for a, b, c, d in zip(src, dst, w, ts, strict=True):
+            f.write(f"{a} {b} {c} {d}\n")
+    print(f"{out}: {num_edges} rows, seed={seed}")
+
+
+# --------------------------------------------------------------- CLI -------
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    f = sub.add_parser("fetch", help="download + checksum + extract")
+    f.add_argument("--dataset", choices=sorted(DATASETS), required=True)
+    f.add_argument("--dest", type=Path, default=Path("data"))
+    f.add_argument("--expect-sha256", default=None)
+    f.add_argument("--num-steps", type=int, default=32)
+    f.add_argument("--out", type=Path, default=None,
+                   help="also preprocess to this edge-list file")
+
+    p = sub.add_parser("preprocess", help="raw KONECT -> edge-list file")
+    p.add_argument("--raw", type=Path, required=True)
+    p.add_argument("--out", type=Path, required=True)
+    p.add_argument("--num-steps", type=int, default=32)
+
+    x = sub.add_parser("fixture", help="deterministic tiny sub-slice")
+    x.add_argument("--raw", type=Path, required=True)
+    x.add_argument("--out", type=Path, required=True)
+    x.add_argument("--num-nodes", type=int, default=24)
+    x.add_argument("--num-steps", type=int, default=8)
+
+    s = sub.add_parser("sample", help="offline KONECT-format sample")
+    s.add_argument("--out", type=Path, required=True)
+    s.add_argument("--seed", type=int, default=20260807)
+
+    a = ap.parse_args(argv)
+    if a.cmd == "fetch":
+        raw = fetch(DATASETS[a.dataset], a.dest, a.expect_sha256)
+        if a.out is not None:
+            preprocess(raw, a.out, a.num_steps)
+    elif a.cmd == "preprocess":
+        preprocess(a.raw, a.out, a.num_steps)
+    elif a.cmd == "fixture":
+        make_fixture(a.raw, a.out, a.num_nodes, a.num_steps)
+    elif a.cmd == "sample":
+        make_sample(a.out, seed=a.seed)
+
+
+if __name__ == "__main__":
+    main()
