@@ -48,6 +48,8 @@ def main() -> None:
         ("scaling", scaling_bench.run),
         ("rescale", lambda: scaling_bench.rescale_smoke(
             **({"n": 32, "t": 8} if smoke else {}))),
+        ("compressed", lambda: scaling_bench.compressed_round(
+            **({"n": 64, "t": 16} if smoke else {}))),
         ("sampled", lambda: scaling_bench.sampled_smoke(
             **({"n": 192, "t": 8} if smoke else {}))),
         ("partition_compare", partition_compare.run),

@@ -313,6 +313,79 @@ def rescale_smoke(model: str = "tmgcn", n: int = 64, t: int = 16) -> None:
            f"grew_replicas={grew} rounds={len(res.losses)}")
 
 
+def compressed_round(model: str = "tmgcn", n: int = 96, t: int = 16) -> None:
+    """Quantized wire smoke rows: measured (compiled-HLO) all-to-all
+    bytes of one round step under ``compression="int8_a2a"`` vs the f32
+    lowering — asserted <= 0.3x, scales included — the analytic model's
+    ratio next to it, plus the measured per-shard stream bytes and loss
+    drift of a short ``int8_all`` run against the uncompressed engine run
+    on the same trace.  Needs >= 4 host devices AND a window of >= 2
+    snapshots per shard so the delta wire has actual deltas to narrow
+    (records a skipped row otherwise).
+    """
+    from repro.core import partition
+    from repro.data.dyngnn import DTDGPipeline
+    from repro.stream import distributed as stream_dist
+
+    n_dev = len(jax.devices())
+    nb = 2
+    win = t // nb
+    p = 4
+    if n_dev < p or win // p < 2:
+        record(f"compressed_round/{model}/skipped", 0.0,
+               f"needs {p} devices (have {n_dev}) and win//P >= 2 "
+               f"(win={win})")
+        return
+    smooth = {"tmgcn": "mproduct", "cdgcn": "none",
+              "evolvegcn": "edgelife"}[model]
+    ds = synthetic_dataset(n, t, density=3.0, churn=0.1,
+                           smoothing_mode=smooth, seed=0)
+    pipe = DTDGPipeline(ds, nb=nb)
+    cfg = models.DynGNNConfig(model=model, num_nodes=n, num_steps=t,
+                              window=3, checkpoint_blocks=nb)
+    mesh = make_host_mesh(data=p, model=1)
+
+    def hlo_bytes(compression):
+        hlo = stream_dist.lowered_step_hlo(
+            cfg, mesh, win=win, max_edges=pipe.max_edges,
+            compression=compression)
+        return cv.hlo_collective_bytes(hlo)
+
+    f32 = hlo_bytes("none")["f32"]["bytes"]
+    q = hlo_bytes("int8_a2a")
+    q_total = q["s8"]["bytes"] + q.get("f32", {"bytes": 0})["bytes"]
+    measured = q_total / f32
+    assert measured <= 0.3, (
+        f"compressed a2a bytes {q_total} > 0.3x f32 {f32}")
+    dims = partition.a2a_payload_dims(cfg)
+    feat = dims[0][0]
+    modeled = (cv.alltoall_round_payload(win, n, feat, len(dims), p,
+                                         compression="int8_a2a")
+               / cv.alltoall_round_payload(win, n, feat, len(dims), p))
+    record(f"compressed_round/{model}/P{p}/a2a_bytes_ratio",
+           measured * 1e6,
+           f"measured={measured:.3f} modeled={modeled:.3f} "
+           f"s8={q['s8']['bytes']} f32={f32}")
+
+    def fit(compression):
+        engine = Engine(RunConfig(
+            model=cfg, data=InMemoryDTDG(ds, pipeline=pipe),
+            plan=ExecutionPlan(mode="streamed_mesh", shards=p,
+                               num_epochs=1, compression=compression),
+            optimizer=adamw.AdamWConfig(lr=1e-2, total_steps=100),
+            log_fn=_SILENT))
+        return engine.fit()
+
+    ref = fit("none")
+    got = fit("int8_all")
+    drift = max(abs(a - b) for a, b in zip(got.losses, ref.losses))
+    wire = sum(got.per_shard_bytes) / sum(ref.per_shard_bytes)
+    record(f"compressed_round/{model}/P{p}/stream_bytes_ratio",
+           wire * 1e6,
+           f"int8_wire={sum(got.per_shard_bytes)} "
+           f"f32_wire={sum(ref.per_shard_bytes)} loss_drift={drift:.2e}")
+
+
 def sampled_smoke(model: str = "cdgcn", n: int = 384, t: int = 8,
                   density: float = 3.0) -> None:
     """Out-of-core win condition: a simulated per-device budget that
@@ -428,6 +501,7 @@ def run() -> None:
     measured_strong_scaling("tmgcn")
     streamed_scaling("tmgcn")
     rescale_smoke("tmgcn")
+    compressed_round("tmgcn")
     sampled_smoke("cdgcn")
     for m in ("tmgcn", "evolvegcn"):
         modeled_weak_scaling(m)

@@ -29,6 +29,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core import models as mdl
+from repro.dist import compression as compression_lib
 from repro.core import temporal
 from repro.core.dtdg import DTDGBatch
 
@@ -49,7 +50,8 @@ def _axis_size(mesh: Mesh, axis) -> int:
 def _sp_block_body(cfg: mdl.DynGNNConfig, params: dict, axis,
                    num_procs: int, carries: list, blk,
                    comm_dtype=None, fused_labels: bool = False,
-                   a2a_chunks: int = 1):
+                   a2a_chunks: int = 1, compression: str = "none",
+                   comm_residuals: list | None = None):
     """One checkpoint block under snapshot partitioning (Fig. 3b).
 
     Local shapes: x (bsize/P, N, F); temporal carries are vertex-sharded
@@ -63,15 +65,34 @@ def _sp_block_body(cfg: mdl.DynGNNConfig, params: dict, axis,
         N->T redistribution is skipped entirely (the classifier is
         per-(t, u), so the loss decomposes over vertex shards).  Removes
         1 of the 2L all-to-alls per block.
+      * ``compression`` != "none" — int8 error-feedback quantization of
+        both redistributions (dist.compression.make_quantized_a2a).
+        ``comm_residuals`` must then carry one (res_t2n, res_n2t) pair
+        per layer in the PRE-a2a layouts (see ``a2a_payload_dims``), and
+        the body returns ``(new_carries, h, new_comm_residuals)``.
     """
     if fused_labels:
         x_b, e_b, w_b, t0, labels_b = blk
     else:
         x_b, e_b, w_b, t0 = blk
         labels_b = None
+    compression_lib.validate_mode(compression)
+    compress = compression_lib.compresses_a2a(compression)
+    if compress:
+        if comm_dtype is not None or fused_labels:
+            raise ValueError(
+                "compression composes with a2a_chunks only, not with "
+                "comm_dtype/fused_labels")
+        if comm_residuals is None:
+            raise ValueError(
+                "compression != 'none' requires comm_residuals "
+                "(init_comm_residuals)")
     p_idx = jax.lax.axis_index(axis)
     bsl = x_b.shape[0]                      # bsize / P local steps
     evolve = cfg.model == "evolvegcn"
+
+    def _feature_cuts(width):
+        return [width * c // a2a_chunks for c in range(1, a2a_chunks)]
 
     def a2a(y, split_axis, concat_axis):
         orig = y.dtype
@@ -81,19 +102,34 @@ def _sp_block_body(cfg: mdl.DynGNNConfig, params: dict, axis,
             # §6.5 overlap schedule: C independent all-to-alls over feature
             # slices, so the scheduler can run chunk c's redistribution
             # concurrently with chunk c-1's consumer compute.
-            cuts = [y.shape[-1] * c // a2a_chunks
-                    for c in range(1, a2a_chunks)]
             pieces = [jax.lax.all_to_all(p, axis, split_axis=split_axis,
                                          concat_axis=concat_axis, tiled=True)
-                      for p in jnp.split(y, cuts, axis=-1)]
+                      for p in jnp.split(y, _feature_cuts(y.shape[-1]),
+                                         axis=-1)]
             y = jnp.concatenate(pieces, axis=-1)
         else:
             y = jax.lax.all_to_all(y, axis, split_axis=split_axis,
                                    concat_axis=concat_axis, tiled=True)
         return y.astype(orig)
 
+    def a2a_q(y, res, split_axis, concat_axis):
+        # int8 redistribution with per-shard error feedback; chunking
+        # slices payload AND residual with the same feature cuts so each
+        # chunk keeps its own absmax scales.
+        qa = compression_lib.make_quantized_a2a(axis, num_procs,
+                                                split_axis, concat_axis)
+        if a2a_chunks > 1:
+            cuts = _feature_cuts(y.shape[-1])
+            outs = [qa(yp, rp)
+                    for yp, rp in zip(jnp.split(y, cuts, axis=-1),
+                                      jnp.split(res, cuts, axis=-1))]
+            return (jnp.concatenate([o for o, _ in outs], axis=-1),
+                    jnp.concatenate([r for _, r in outs], axis=-1))
+        return qa(y, res)
+
     h = x_b
     new_carries = []
+    new_comm_res = []
     loss_contrib = None
     for l in range(cfg.num_layers):
         last = l == cfg.num_layers - 1
@@ -121,7 +157,11 @@ def _sp_block_body(cfg: mdl.DynGNNConfig, params: dict, axis,
 
         h, _ = mdl.spatial_stage(cfg, lp, l, h, e_b, w_b, None, t0)
         # --- redistribution 1: T-sharded -> N-sharded (all-to-all) ---------
-        h = a2a(h, split_axis=1, concat_axis=0)
+        if compress:
+            res_t2n, res_n2t = comm_residuals[l]
+            h, nr1 = a2a_q(h, res_t2n, split_axis=1, concat_axis=0)
+        else:
+            h = a2a(h, split_axis=1, concat_axis=0)
         # --- temporal stage: full block timeline, local vertices -----------
         h, c_tm = mdl.temporal_stage(cfg, lp, l, h, carries[l], t0)
         new_carries.append(c_tm)
@@ -134,7 +174,14 @@ def _sp_block_body(cfg: mdl.DynGNNConfig, params: dict, axis,
             loss_contrib = jnp.sum(nll)
             return new_carries, loss_contrib
         # --- redistribution 2: N-sharded -> T-sharded ----------------------
-        h = a2a(h, split_axis=0, concat_axis=1)
+        if compress:
+            h, nr2 = a2a_q(h, res_n2t, split_axis=0, concat_axis=1)
+            new_comm_res.append((nr1, nr2))
+        else:
+            h = a2a(h, split_axis=0, concat_axis=1)
+    if compress:
+        # evolvegcn redistributes nothing, so new_comm_res is [] there
+        return new_carries, h, new_comm_res
     return new_carries, h
 
 
@@ -143,6 +190,21 @@ def _sp_block_body(cfg: mdl.DynGNNConfig, params: dict, axis,
 # reuses it directly so the online path shares every collective with the
 # offline shard_map path above.
 snapshot_block_body = _sp_block_body
+
+
+def a2a_payload_dims(cfg: mdl.DynGNNConfig) -> list[tuple[int, int]]:
+    """Per-layer feature widths ``(f_t2n, f_n2t)`` of the two
+    redistributions in ``snapshot_block_body``.
+
+    The T->N payload is the spatial-stage output (cdgcn concatenates the
+    aggregate with the GCN transform, so it is ``d_in + d_gcn`` wide);
+    the N->T payload is the temporal-stage output.  EvolveGCN
+    redistributes nothing (§5.5) — empty list.
+    """
+    if cfg.model == "evolvegcn":
+        return []
+    return [(d_in + d_gcn if cfg.model == "cdgcn" else d_out, d_out)
+            for d_in, d_gcn, d_out in cfg.layer_dims()]
 
 
 def snapshot_partition_forward(cfg: mdl.DynGNNConfig, mesh: Mesh,

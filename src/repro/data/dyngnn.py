@@ -126,11 +126,13 @@ class DTDGPipeline:
             self.ds.snapshots, self.ds.values, self.ds.num_nodes,
             self.max_edges, self.bsize, self.stream_stats)
 
-    def sharded_streams(self, num_shards: int):
-        """Per-shard time-slice streams for snapshot partitioning."""
+    def sharded_streams(self, num_shards: int, wire: str = "none"):
+        """Per-shard time-slice streams for snapshot partitioning
+        (``wire="int8"`` = the narrow delta format, see stream.wire)."""
         return stream_sharded.encode_time_sliced(
             self.ds.snapshots, self.ds.values, self.ds.num_nodes,
-            self.max_edges, self.bsize, num_shards, self.stream_stats)
+            self.max_edges, self.bsize, num_shards, self.stream_stats,
+            wire=wire)
 
     def blocked_arrays(self):
         """(frames, edges, edge_weights, labels) blocked (nb, bsize, ...)."""

@@ -40,16 +40,96 @@ def snapshot_partition_volume(t: int, n: int, feat: int, layers: int,
 
 
 def alltoall_round_payload(win: int, n: int, feat: int, layers: int,
-                           p: int, bytes_per: float = 4.0) -> float:
+                           p: int, bytes_per: float = 4.0,
+                           compression: str = "none",
+                           a2a_chunks: int = 1) -> float:
     """Bytes crossing the network in ONE streamed round of ``win``
     snapshots under snapshot partitioning: two all-to-alls per GCN layer
     over the (win, N, F) block, each moving the (P-1)/P off-device
     fraction.  Per SNAPSHOT this approaches 2*L*N*F*bytes_per from below
     as P grows — the fixed-volume property the streamed distributed
-    trainer inherits (total communication independent of P)."""
+    trainer inherits (total communication independent of P).
+
+    ``compression`` != "none" models the int8 quantized redistributions
+    (``dist.compression.make_quantized_a2a``): one byte per element plus
+    one (P,) f32 scale vector per all-to-all per shard — and each of the
+    2L redistributions lowers to ``a2a_chunks`` feature-sliced
+    all-to-alls, so the scale overhead grows with the chunk count while
+    the element payload does not.  The model is pinned element-for-
+    element to the lowered HLO in tests/test_compression_drift.py.
+    """
     if p <= 1:
         return 0.0
-    return 2.0 * layers * win * n * feat * (p - 1) / p * bytes_per
+    elems = 2.0 * layers * win * n * feat * (p - 1) / p
+    if compression == "none":
+        return elems * bytes_per
+    # int8 payload + the per-chunk scale a2a: each of the 2L*chunks
+    # quantized all-to-alls ships a (P,) f32 scale vector per shard, of
+    # which (P-1) entries cross the network; P shards total.
+    scale_bytes = 2.0 * layers * a2a_chunks * p * (p - 1) * 4.0
+    return elems * 1.0 + scale_bytes
+
+
+def index_width(max_index: int) -> float:
+    """Wire bytes per index under stream.wire narrowing (int16 when the
+    largest index fits, int32 otherwise)."""
+    return 2.0 if max_index <= 32767 else 4.0
+
+
+def delta_wire_bytes(drops: float, adds: float, num_edges: float, *,
+                     num_nodes: int, max_edges: int,
+                     wire: str = "none") -> float:
+    """Bytes of one delta payload, mirroring the per-item accounting of
+    ``SnapshotDelta.payload_bytes`` (f32 wire) and
+    ``stream.wire.QuantizedDelta.payload_bytes`` (int8 wire): drop
+    positions index the device edge list, adds carry two node ids, one
+    value per valid edge, plus the f32 scale on the quantized wire."""
+    if wire == "none":
+        return drops * 4.0 + adds * 8.0 + num_edges * 4.0
+    if wire != "int8":
+        raise ValueError(f"wire must be none|int8, got {wire!r}")
+    return (drops * index_width(max_edges - 1)
+            + adds * 2.0 * index_width(num_nodes - 1)
+            + num_edges * 1.0 + 4.0)
+
+
+_HLO_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+                    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4,
+                    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16}
+
+
+def hlo_collective_bytes(hlo_text: str, op: str = "all-to-all"
+                         ) -> dict[str, dict[str, int]]:
+    """Per-shard payload bytes of every ``op`` in a compiled HLO dump,
+    keyed by element dtype: ``{"s8": {"ops": 4, "bytes": 1536}, ...}``.
+
+    Parses the RESULT shapes of each op line (tuple-form collectives sum
+    their tuple elements — together they carry the whole local payload),
+    so measured bytes come from what XLA actually lowered, not from the
+    model being checked against it.
+    """
+    import re
+    out: dict[str, dict[str, int]] = {}
+    line_re = re.compile(r"= (.*?) " + re.escape(op) + r"(?:-start)?\(")
+    shape_re = re.compile(r"(\w+)\[([0-9,]*)\]")
+    for line in hlo_text.splitlines():
+        m = line_re.search(line)
+        if not m:
+            continue
+        shapes = [(d, dims) for d, dims in shape_re.findall(m.group(1))
+                  if d in _HLO_DTYPE_BYTES]
+        if not shapes:
+            continue
+        ent = out.setdefault(shapes[0][0], {"ops": 0, "bytes": 0})
+        ent["ops"] += 1
+        for dtype, dims in shapes:
+            elems = 1
+            for d in dims.split(","):
+                if d:
+                    elems *= int(d)
+            out.setdefault(dtype, {"ops": 0, "bytes": 0})
+            out[dtype]["bytes"] += elems * _HLO_DTYPE_BYTES[dtype]
+    return out
 
 
 def streamed_shard_volume(num_steps: int, p: int, block_size: int,

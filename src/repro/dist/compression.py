@@ -1,25 +1,61 @@
-"""int8 gradient compression with error feedback for DP aggregation.
+"""int8 wire compression with error feedback for collectives.
 
-Each shard quantizes (gradient + carried residual) to int8 with a local
-absmax scale, dequantizes, and psums the dequantized tensors; the
-quantization error is carried into the next step (error feedback), so the
-truncation never accumulates bias.  The reduction returns the MEAN over
-the axis — a drop-in for the uncompressed ``psum(g)/P`` data-parallel
-aggregate.
+Two users:
 
-The wire format modeled is 1 byte/element + one f32 scale per tensor
-(4x smaller than f32 all-reduce); on host meshes the psum still runs in
-f32, which changes bytes, not math.
+- ``compressed_psum`` — error-feedback int8 mean-reduction for DP
+  gradient aggregation.  Each shard quantizes (gradient + carried
+  residual) to int8 with a local absmax scale, dequantizes, and psums
+  the dequantized tensors; the quantization error is carried into the
+  next step (error feedback), so the truncation never accumulates bias.
+- ``make_quantized_a2a`` — error-feedback int8 all-to-all for the two
+  per-layer feature redistributions of the snapshot-partitioned forward
+  (``core.partition.snapshot_block_body``).  Each shard quantizes every
+  destination piece with its own absmax scale, ships int8 payload plus a
+  tiny f32 scale vector, and keeps the untransmitted error as a local
+  residual for the next round.  The backward rule is the transposed
+  quantized all-to-all (without error feedback — cotangents are not
+  reused across rounds), so gradient bytes shrink with activation bytes.
+
+The wire format modeled is 1 byte/element + one f32 scale per piece
+(~4x smaller than f32); on host meshes the collectives still run the
+dequantized f32 arrays, which changes bytes, not math — byte accounting
+lives in ``dist.comm_volume`` and is pinned to the lowered HLO by
+``tests/test_compression_drift.py``.
 """
 
 from __future__ import annotations
 
+from functools import partial
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 _QMAX = 127.0
+
+# ExecutionPlan.compression values: "none" keeps today's f32 paths
+# bit-exact; "int8_a2a" quantizes the two per-layer feature all-to-alls;
+# "int8_all" additionally narrows the host->device delta wire format
+# (see stream.wire).
+COMPRESSION_MODES = ("none", "int8_a2a", "int8_all")
+
+
+def validate_mode(compression: str) -> str:
+    if compression not in COMPRESSION_MODES:
+        raise ValueError(
+            f"compression must be one of {COMPRESSION_MODES}, "
+            f"got {compression!r}")
+    return compression
+
+
+def compresses_a2a(compression: str) -> bool:
+    """Whether this mode quantizes the feature all-to-alls."""
+    return validate_mode(compression) != "none"
+
+
+def wire_mode(compression: str) -> str:
+    """The ``stream.wire`` delta format implied by a compression mode."""
+    return "int8" if validate_mode(compression) == "int8_all" else "none"
 
 
 def init_residual(grads: Any) -> Any:
@@ -28,32 +64,148 @@ def init_residual(grads: Any) -> Any:
         lambda g: jnp.zeros(jnp.shape(g), jnp.float32), grads)
 
 
-def _quantize(g: jax.Array) -> tuple[jax.Array, jax.Array]:
-    scale = jnp.max(jnp.abs(g)) / _QMAX
-    scale = jnp.maximum(scale, jnp.finfo(jnp.float32).tiny)
-    q = jnp.clip(jnp.round(g / scale), -_QMAX, _QMAX).astype(jnp.int8)
+def quantize(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Absmax int8 quantization: ``g ~= q * scale``.
+
+    The scale is clamped to [tiny, finfo.max] so all-zero tensors
+    quantize to zeros (not NaN) and ±inf inputs saturate to ±127
+    (inf/finite_max is inf, which clips cleanly; inf/inf would be NaN).
+    """
+    g32 = g.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(g32)) / _QMAX
+    scale = jnp.clip(scale, jnp.finfo(jnp.float32).tiny,
+                     jnp.finfo(jnp.float32).max)
+    q = jnp.clip(jnp.round(g32 / scale), -_QMAX, _QMAX).astype(jnp.int8)
     return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+# kept under the historical name: tests and benchmarks poke it directly
+_quantize = quantize
+
+
+def ef_quantize(g: jax.Array, res: jax.Array
+                ) -> tuple[jax.Array, jax.Array]:
+    """One error-feedback step: quantize ``g + res``, return the
+    dequantized value actually transmitted and the new residual.
+
+    By construction ``deq == (g + res) - new_res`` exactly, so over K
+    steps the transmitted sum telescopes:
+    ``sum(deq_k) == sum(g_k) + res_0 - res_K``.
+    """
+    g32 = g.astype(jnp.float32) + res
+    q, scale = quantize(g32)
+    deq = dequantize(q, scale)
+    return deq, g32 - deq
+
+
+@partial(jax.jit, static_argnames=("axis",))
+def _psum_leaf(g, res, *, axis):
+    p = jax.lax.psum(jnp.ones((), jnp.float32), axis)
+    deq, new_res = ef_quantize(g, res)
+    red = jax.lax.psum(deq, axis) / p
+    return red.astype(g.dtype), new_res
 
 
 def compressed_psum(grads: Any, axis, residual: Any) -> tuple[Any, Any]:
     """Error-feedback int8 mean-reduction over a mesh ``axis``.
 
     Returns (reduced_mean_tree, new_residual_tree).  Must be called inside
-    ``shard_map``; the residual stays shard-local.
+    ``shard_map``; the residual stays shard-local.  One jitted leaf fn
+    applied via ``jax.tree.map`` — tracing cost is per unique leaf
+    shape/dtype, not per leaf, so deep parameter trees stay cheap.
     """
-    p = jax.lax.psum(jnp.ones((), jnp.float32), axis)
+    out = jax.tree.map(lambda g, r: _psum_leaf(g, r, axis=axis),
+                       grads, residual)
+    treedef = jax.tree.structure(grads)
+    return jax.tree.transpose(treedef, jax.tree.structure((0, 0)), out)
 
-    def one(g, res):
-        g32 = g.astype(jnp.float32) + res
-        q, scale = _quantize(g32)
-        deq = q.astype(jnp.float32) * scale
-        new_res = g32 - deq
-        red = jax.lax.psum(deq, axis) / p
-        return red.astype(g.dtype), new_res
 
-    flat_g, treedef = jax.tree.flatten(grads)
-    flat_r = jax.tree.leaves(residual)
-    out = [one(g, r) for g, r in zip(flat_g, flat_r, strict=True)]
-    red = jax.tree.unflatten(treedef, [o[0] for o in out])
-    new_res = jax.tree.unflatten(treedef, [o[1] for o in out])
-    return red, new_res
+def _split_pieces(y: jax.Array, p: int, split_axis: int) -> list[jax.Array]:
+    return jnp.split(y, p, axis=split_axis)
+
+
+def _quantize_pieces(y32: jax.Array, p: int, split_axis: int
+                     ) -> tuple[jax.Array, jax.Array]:
+    """Per-destination-piece absmax quantization along ``split_axis``.
+
+    Returns the int8 array (same shape as ``y32``) and a ``(p,)`` f32
+    scale vector, one scale per destination shard.
+    """
+    pieces = _split_pieces(y32, p, split_axis)
+    qs, scales = zip(*(quantize(pc) for pc in pieces))
+    return (jnp.concatenate(qs, axis=split_axis),
+            jnp.stack(list(scales)))
+
+
+def _dequantize_pieces(q: jax.Array, scales: jax.Array, p: int,
+                       piece_axis: int) -> jax.Array:
+    """Inverse of ``_quantize_pieces`` with pieces along ``piece_axis``
+    (the concat axis after an all-to-all, the split axis before one)."""
+    pieces = _split_pieces(q, p, piece_axis)
+    return jnp.concatenate(
+        [dequantize(pc, scales[i]) for i, pc in enumerate(pieces)],
+        axis=piece_axis)
+
+
+def _a2a_int8(y32: jax.Array, axis, p: int, split_axis: int,
+              concat_axis: int) -> tuple[jax.Array, jax.Array]:
+    """Quantized tiled all-to-all of an f32 array.
+
+    Returns (dequantized output, what this shard locally transmitted
+    after dequantization) — the second value is what error feedback
+    subtracts from ``y32`` to form the residual.
+    """
+    q, scales = _quantize_pieces(y32, p, split_axis)
+    sent = _dequantize_pieces(q, scales, p, split_axis)
+    q_out = jax.lax.all_to_all(q, axis, split_axis=split_axis,
+                               concat_axis=concat_axis, tiled=True)
+    s_out = jax.lax.all_to_all(scales.reshape(p, 1), axis, split_axis=0,
+                               concat_axis=1, tiled=True).reshape(p)
+    return _dequantize_pieces(q_out, s_out, p, concat_axis), sent
+
+
+def quantized_all_to_all(y: jax.Array, axis, p: int, split_axis: int,
+                         concat_axis: int) -> jax.Array:
+    """int8 all-to-all without error feedback (used for cotangents)."""
+    out, _ = _a2a_int8(y.astype(jnp.float32), axis, p, split_axis,
+                       concat_axis)
+    return out.astype(y.dtype)
+
+
+def make_quantized_a2a(axis, p: int, split_axis: int, concat_axis: int):
+    """Error-feedback int8 all-to-all: ``(y, res) -> (out, new_res)``.
+
+    Forward ships int8 payload + a (p,) f32 scale vector; the
+    untransmitted quantization error lands in ``new_res`` and is added
+    back before quantizing the next round (so truncation never
+    accumulates bias in the loss stream).  Backward is the TRANSPOSED
+    quantized all-to-all of the output cotangent, without error feedback
+    — the residual in/out pair is non-differentiable (``new_res`` rides
+    the aux output of ``value_and_grad``, whose cotangent is zero).
+    """
+
+    def _impl(y, res):
+        y32 = y.astype(jnp.float32) + res
+        out, sent = _a2a_int8(y32, axis, p, split_axis, concat_axis)
+        return out.astype(y.dtype), y32 - sent
+
+    @jax.custom_vjp
+    def qa2a(y, res):
+        return _impl(y, res)
+
+    def _fwd(y, res):
+        return _impl(y, res), jnp.zeros((0,), y.dtype)
+
+    def _bwd(saved, g):
+        g_out, _g_res = g  # new_res rides the aux output: cotangent zero
+        g_y = quantized_all_to_all(g_out, axis, p, split_axis=concat_axis,
+                                   concat_axis=split_axis)
+        # the transposed all-to-all restores y's shape; res shares it
+        return g_y.astype(saved.dtype), jnp.zeros(g_y.shape, jnp.float32)
+
+    qa2a.defvjp(_fwd, _bwd)
+    return qa2a

@@ -37,7 +37,8 @@ def overlap_time_model(t_comp: float, t_comm: float, chunks: int) -> dict:
 
 def round_time_model(t_transfer: float, t_spatial: float, t_a2a: float,
                      t_temporal: float, chunks: int = 1,
-                     pipeline_rounds: bool = False) -> dict:
+                     pipeline_rounds: bool = False,
+                     a2a_wire_ratio: float = 1.0) -> dict:
     """Steady-state time of ONE distributed streamed round with C chunks.
 
     The round has four phases (the serial schedule runs them back to
@@ -58,22 +59,36 @@ def round_time_model(t_transfer: float, t_spatial: float, t_a2a: float,
       with round r's compute + collectives, so in steady state the
       per-round time is ``max(transfer, inner)``.
 
-    Degenerate cases are exact: C=1 and no round pipelining reproduce the
-    serial sum; the model is monotone non-increasing in C.
+    ``a2a_wire_ratio`` scales the a2a phase for wire compression
+    (``ExecutionPlan.compression``): pass the modeled compressed/f32 byte
+    ratio — ``alltoall_round_payload(..., compression=...) /
+    alltoall_round_payload(...)`` — under the bandwidth-bound assumption
+    that redistribution time tracks bytes on the wire.  1.0 (default)
+    models the uncompressed round; the serial reference keeps the
+    UNCOMPRESSED a2a time so ``speedup`` reports the combined
+    pipelining + compression gain against today's serial round.
+
+    Degenerate cases are exact: C=1, no round pipelining, and wire ratio
+    1.0 reproduce the serial sum; the model is monotone non-increasing
+    in C and in the wire ratio.
     """
     chunks = max(int(chunks), 1)
+    if a2a_wire_ratio <= 0:
+        raise ValueError(f"a2a_wire_ratio must be > 0, "
+                         f"got {a2a_wire_ratio}")
     comp = t_spatial + t_temporal
     serial = t_transfer + comp + t_a2a
+    t_a2a_wire = t_a2a * a2a_wire_ratio
     # C=1 degenerates exactly: max + min/1 == comp + t_a2a
-    inner = max(comp, t_a2a) + min(comp, t_a2a) / chunks
+    inner = max(comp, t_a2a_wire) + min(comp, t_a2a_wire) / chunks
     pipelined = max(t_transfer, inner) if pipeline_rounds \
         else t_transfer + inner
     return {"serial_s": serial, "pipelined_s": pipelined,
-            "inner_s": inner,
+            "inner_s": inner, "a2a_wire_ratio": a2a_wire_ratio,
             "speedup": serial / pipelined if pipelined > 0 else 1.0,
             "chunks": chunks, "pipeline_rounds": pipeline_rounds,
             "phases_s": {"transfer": t_transfer, "spatial": t_spatial,
-                         "a2a": t_a2a, "temporal": t_temporal}}
+                         "a2a": t_a2a_wire, "temporal": t_temporal}}
 
 
 def snapshot_partition_forward_overlapped(cfg, mesh, num_chunks: int = 2,

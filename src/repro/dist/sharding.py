@@ -95,6 +95,22 @@ def stream_carry_specs(cfg, axis="data") -> list:
     return specs
 
 
+def stream_comm_residual_specs(cfg, axis="data") -> list:
+    """Specs for the per-layer error-feedback residuals of the quantized
+    all-to-alls (``partition.a2a_payload_dims`` gives the widths).
+
+    Each layer carries a ``(res_t2n, res_n2t)`` pair in the PRE-a2a
+    layout of its redistribution: the T->N residual lives in the
+    time-sharded domain (win, N, f_t2n), the N->T residual in the
+    vertex-sharded domain (win, N, f_n2t).  EvolveGCN has no
+    redistributions, hence no residuals.
+    """
+    if cfg.model == "evolvegcn":
+        return []
+    return [(P(axis, None, None), P(None, axis, None))
+            for _ in range(cfg.num_layers)]
+
+
 def shard_devices(mesh: Mesh, axis: str = "data") -> list:
     """One representative device per shard along ``axis`` (which must be
     the leading mesh axis): the placement target for per-shard delta

@@ -62,6 +62,12 @@ def main() -> None:
                          "delta-apply/staging before forcing round r's "
                          "loss (double-buffered edge rings; losses "
                          "unchanged)")
+    ap.add_argument("--compression", default="none",
+                    choices=["none", "int8_a2a", "int8_all"],
+                    help="with --stream --mesh: quantized wire formats — "
+                         "int8_a2a = error-feedback int8 all-to-alls, "
+                         "int8_all = also the narrow host->device delta "
+                         "wire (drift-bounded, not bit-exact)")
     ap.add_argument("--rescale-at", action="append", default=[],
                     metavar="BLOCK:P",
                     help="with --stream --mesh: elastically rescale the "
@@ -136,6 +142,7 @@ def main() -> None:
                                  num_epochs=args.epochs,
                                  overlap=not args.no_overlap,
                                  a2a_chunks=args.a2a_chunks,
+                                 compression=args.compression,
                                  sampling=spec, device_budget_bytes=budget)
             ckpt = None
             if args.ckpt_dir:
@@ -154,6 +161,7 @@ def main() -> None:
                 overlap=not args.no_overlap,
                 a2a_chunks=args.a2a_chunks,
                 pipeline_rounds=args.pipeline_rounds,
+                compression=args.compression,
                 rescale=tuple(_parse_rescale(s) for s in args.rescale_at),
                 rescale_on_preempt=args.rescale_on_preempt,
                 device_budget_bytes=budget)
@@ -173,6 +181,7 @@ def main() -> None:
                                  num_steps=args.steps,
                                  a2a_chunks=args.a2a_chunks,
                                  pipeline_rounds=args.pipeline_rounds,
+                                 compression=args.compression,
                                  device_budget_bytes=budget)
             ckpt = (CheckpointSpec(args.ckpt_dir)
                     if args.ckpt_dir else None)
@@ -230,11 +239,13 @@ def main() -> None:
                 # time-sliced streams (extra slice-boundary fulls), not
                 # the single-device global stream
                 per_dev = result.per_shard_bytes
+                comp_txt = (f", compression {result.compression}"
+                            if result.compression != "none" else "")
                 print(f"streamed {result.state.step} block rounds on "
                       f"{args.mesh} shards, final loss {final}, "
                       f"per-device stream {max(per_dev)} B (total "
                       f"{sum(per_dev) / max(rep['naive'], 1):.3f} of "
-                      "naive)")
+                      f"naive){comp_txt}")
             else:
                 print(f"streamed {result.state.step} snapshot steps, "
                       f"final loss {final}, transfer ratio "

@@ -96,7 +96,10 @@ class RunResult:
     per-device stream payloads of the streamed_mesh schedule.
     ``a2a_chunks`` / ``pipeline_rounds`` echo the overlap knobs the run
     actually executed with (pure schedule knobs — two results that
-    differ only here carry identical ``losses``).  ``rescale_report``
+    differ only here carry identical ``losses``).  ``compression`` echoes
+    the wire-compression mode (NOT a pure schedule knob: quantized runs
+    drift within the bound pinned by tests/test_compression_drift.py;
+    ``"none"`` stays bit-identical).  ``rescale_report``
     records the elastic events of a rescaled/checkpointed streamed_mesh
     run (realized width changes, per-segment stream bytes, preemption /
     resume cursors); rescaling is also pure schedule — the losses match
@@ -114,6 +117,7 @@ class RunResult:
     per_shard_bytes: list[int] | None = None
     a2a_chunks: int = 1
     pipeline_rounds: bool = False
+    compression: str = "none"
     rescale_report: RescaleReport | None = None
     sample_report: Any = None       # hoststore.SampleReport (sampled mode)
     budget_report: dict | None = None

@@ -52,6 +52,13 @@ class Engine:
                 f"and 'streamed_mesh' (got {plan.mode!r}); the "
                 "single-device streamed schedule does not checkpoint yet "
                 "— drop the CheckpointSpec or switch modes")
+        if c.checkpoint is not None and plan.compression != "none":
+            raise ValueError(
+                "RunConfig.checkpoint routes streamed_mesh through the "
+                "elastic segment loop, which does not thread the "
+                "error-feedback residuals of plan.compression="
+                f"{plan.compression!r}; drop the CheckpointSpec or use "
+                "compression='none'")
 
         nominal = c.data.num_nodes
         ds = None

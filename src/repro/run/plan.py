@@ -34,6 +34,7 @@ from typing import Any, Callable
 from repro.hoststore.spec import SamplingSpec
 
 MODES = ("eager", "streamed", "streamed_mesh", "sampled")
+COMPRESSIONS = ("none", "int8_a2a", "int8_all")
 
 
 @dataclass(frozen=True)
@@ -59,6 +60,15 @@ class ExecutionPlan:
       staging while round r's temporal-stage collectives execute
       (one round in flight; losses pinned to the serial schedule).
 
+    Wire compression (streamed_mesh; NOT loss-pinned — drift is bounded
+    by the numerics tier, tests/test_compression_drift.py):
+
+    * ``compression`` — ``"int8_a2a"`` quantizes the two per-layer
+      feature all-to-alls to int8 with per-shard error feedback
+      (``repro.dist.compression``); ``"int8_all"`` additionally narrows
+      the host->device delta wire format (``repro.stream.wire``).
+      ``"none"`` (default) is bit-identical to the uncompressed trainer.
+
     Elastic rescale policy (streamed_mesh; executed by ``repro.elastic``,
     also pure schedule — losses stay pinned to the serial reference):
 
@@ -81,6 +91,7 @@ class ExecutionPlan:
     prefetch_depth: int = 2
     a2a_chunks: int = 1             # chunked all-to-alls (mesh schedules)
     pipeline_rounds: bool = False   # round-level pipelining (streamed_mesh)
+    compression: str = "none"       # wire compression (streamed_mesh)
     auto_pad: bool = True
     rescale: tuple = ()             # ((block, new_p), ...) resize script
     rescale_on_preempt: int = 0     # SIGTERM shrink-to width (0 = off)
@@ -126,6 +137,22 @@ class ExecutionPlan:
             raise ValueError("plan.pipeline_rounds pipelines the "
                              "distributed streamed round loop; it requires "
                              "mode='streamed_mesh'")
+        if self.compression not in COMPRESSIONS:
+            raise ValueError(f"plan.compression must be one of "
+                             f"{COMPRESSIONS}, got {self.compression!r}")
+        if self.compression != "none":
+            if self.mode != "streamed_mesh":
+                raise ValueError(
+                    "plan.compression quantizes the distributed stream's "
+                    "wire formats (shard_map all-to-alls + host->device "
+                    "deltas); it requires mode='streamed_mesh' "
+                    f"(got {self.mode!r})")
+            if self.is_elastic:
+                raise ValueError(
+                    "plan.compression is not wired through the elastic "
+                    "segment loop (error-feedback residuals would need "
+                    "re-sharding at every rescale boundary); drop "
+                    "rescale/rescale_on_preempt or use compression='none'")
         if self.rescale_on_preempt < 0:
             raise ValueError("plan.rescale_on_preempt is a shrink-to "
                              "width (0 = off); it cannot be negative")

@@ -38,6 +38,7 @@ import numpy as np
 
 from repro.ckpt.checkpoint import Checkpointer
 from repro.core import models as dyn_models
+from repro.dist import compression as compression_lib
 from repro.ft.elastic import PreemptionGuard
 from repro.ft.straggler import StepTimer
 from repro import hoststore
@@ -168,11 +169,12 @@ def fit_streamed_mesh(rr: ResolvedRun) -> RunResult:
     if step_fn is None:
         step_fn = stream_dist.make_dist_stream_step(
             rr.cfg, rr.mesh, opt_cfg, plan.mesh_axis,
-            a2a_chunks=plan.a2a_chunks)
+            a2a_chunks=plan.a2a_chunks, compression=plan.compression)
         rr.cache["dist_step"] = step_fn
     shard_streams = rr.cache.get("shard_streams")
     if shard_streams is None:
-        shard_streams = pipe.sharded_streams(plan.num_shards)
+        shard_streams = pipe.sharded_streams(
+            plan.num_shards, wire=compression_lib.wire_mode(plan.compression))
         rr.cache["shard_streams"] = shard_streams
     st = stream_dist.train_distributed_streamed(
         rr.cfg, ds.snapshots, ds.values, np.asarray(ds.frames),
@@ -180,6 +182,7 @@ def fit_streamed_mesh(rr: ResolvedRun) -> RunResult:
         block_size=pipe.bsize, num_epochs=plan.num_epochs,
         overlap=plan.overlap, prefetch_depth=plan.prefetch_depth,
         a2a_chunks=plan.a2a_chunks, pipeline_rounds=plan.pipeline_rounds,
+        compression=plan.compression,
         opt_cfg=opt_cfg, params=params, opt_state=opt_state,
         stats=pipe.stream_stats, max_edges=pipe.max_edges,
         step_fn=step_fn, shard_streams=shard_streams,
@@ -191,6 +194,7 @@ def fit_streamed_mesh(rr: ResolvedRun) -> RunResult:
                      per_shard_bytes=st.per_shard_bytes,
                      a2a_chunks=plan.a2a_chunks,
                      pipeline_rounds=plan.pipeline_rounds,
+                     compression=plan.compression,
                      budget_report=budget)
 
 

@@ -48,6 +48,7 @@ from jax.sharding import NamedSharding
 from repro.compat import shard_map
 from repro.core import models as mdl
 from repro.core import partition
+from repro.dist import compression as compression_lib
 from repro.dist import sharding as shardlib
 from repro.optim import adamw
 from repro.stream import encoder as enc
@@ -71,7 +72,8 @@ class DistStreamState:
 def make_dist_stream_step(cfg: mdl.DynGNNConfig, mesh,
                           opt_cfg: adamw.AdamWConfig, axis: str = "data",
                           a2a_chunks: int = 1,
-                          num_seeds: int | None = None):
+                          num_seeds: int | None = None,
+                          compression: str = "none"):
     """Jitted per-round step: time-sharded reconstructed snapshots ->
     Laplacian weights on each shard -> snapshot-parallel block body
     (2 all-to-alls per layer) -> replicated mean CE -> AdamW update.
@@ -90,9 +92,17 @@ def make_dist_stream_step(cfg: mdl.DynGNNConfig, mesh,
     TABLE whose first ``num_seeds`` lanes are the seed batch, and only
     those lanes carry loss (mean over seeds).  ``None`` (full-graph
     schedules) keeps the all-vertices mean.
+
+    ``compression`` != "none" quantizes the redistributions to int8 with
+    per-shard error feedback (``dist.compression``).  The step then takes
+    the residual tree as a 4th argument (after carries, see
+    ``init_comm_residuals``) and returns it updated:
+    ``(params, opt_state, carries, comm_res, loss)``.  With "none" the
+    signature and jaxpr are exactly today's — bit-identical losses.
     """
     if a2a_chunks < 1:
         raise ValueError(f"a2a_chunks must be >= 1, got {a2a_chunks}")
+    compression_lib.validate_mode(compression)
     num_procs = mesh.shape[axis]
     n = cfg.num_nodes
     if n % num_procs:
@@ -104,18 +114,7 @@ def make_dist_stream_step(cfg: mdl.DynGNNConfig, mesh,
     carry_specs = shardlib.stream_carry_specs(cfg, axis)
     b = shardlib.stream_batch_specs(axis)
 
-    def sharded_loss(params, carries, frames, edges, mask, values, labels,
-                     t0):
-        # local: frames (win/P, N, F); edges (win/P, E, 2); labels (win/P, N)
-        bsl = frames.shape[0]
-        # same preamble as the single-device slice step, on the local slice
-        # (per-snapshot Laplacian weights: local math, no collectives)
-        e_full, w_full = tl.slice_weights_with_loops(
-            n, loop_edges, loop_ones, edges, mask, values)
-        new_carries, h = partition.snapshot_block_body(
-            cfg, params, axis, num_procs, carries,
-            (frames, e_full, w_full, t0), a2a_chunks=a2a_chunks)
-        nll = tl.slice_nll(params, h, labels)
+    def _loss_tail(nll, bsl):
         if num_seeds is None:
             total = jax.lax.psum(jnp.sum(nll), axis)
             count = jnp.asarray(bsl * num_procs * n, jnp.float32)
@@ -123,24 +122,75 @@ def make_dist_stream_step(cfg: mdl.DynGNNConfig, mesh,
             seed_mask = (jnp.arange(n) < num_seeds).astype(nll.dtype)
             total = jax.lax.psum(jnp.sum(nll * seed_mask[None, :]), axis)
             count = jnp.asarray(bsl * num_procs * num_seeds, jnp.float32)
-        return total / count, new_carries
+        return total / count
+
+    if compression == "none":
+        def sharded_loss(params, carries, frames, edges, mask, values,
+                         labels, t0):
+            # local: frames (win/P, N, F); edges (win/P, E, 2);
+            # labels (win/P, N)
+            bsl = frames.shape[0]
+            # same preamble as the single-device slice step, on the local
+            # slice (per-snapshot Laplacian weights: no collectives)
+            e_full, w_full = tl.slice_weights_with_loops(
+                n, loop_edges, loop_ones, edges, mask, values)
+            new_carries, h = partition.snapshot_block_body(
+                cfg, params, axis, num_procs, carries,
+                (frames, e_full, w_full, t0), a2a_chunks=a2a_chunks)
+            nll = tl.slice_nll(params, h, labels)
+            return _loss_tail(nll, bsl), new_carries
+
+        loss_fn = shard_map(
+            sharded_loss, mesh=mesh,
+            in_specs=(P(), carry_specs, b["frames"], b["edges"], b["mask"],
+                      b["values"], b["labels"], P()),
+            out_specs=(P(), carry_specs),
+            check_vma=False)
+
+        @jax.jit
+        def step(params, opt_state, carries, frames, edges, mask, values,
+                 labels, t0):
+            (loss, new_carries), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, carries, frames, edges, mask,
+                                       values, labels, t0)
+            params2, opt2 = adamw.apply_updates(opt_cfg, params, grads,
+                                                opt_state)
+            return params2, opt2, new_carries, loss
+
+        return step
+
+    res_specs = shardlib.stream_comm_residual_specs(cfg, axis)
+
+    def sharded_loss_q(params, carries, comm_res, frames, edges, mask,
+                       values, labels, t0):
+        bsl = frames.shape[0]
+        e_full, w_full = tl.slice_weights_with_loops(
+            n, loop_edges, loop_ones, edges, mask, values)
+        new_carries, h, new_res = partition.snapshot_block_body(
+            cfg, params, axis, num_procs, carries,
+            (frames, e_full, w_full, t0), a2a_chunks=a2a_chunks,
+            compression=compression, comm_residuals=comm_res)
+        nll = tl.slice_nll(params, h, labels)
+        # new_res rides the aux output: value_and_grad gives it a zero
+        # cotangent, matching the non-differentiable residual carry.
+        return _loss_tail(nll, bsl), (new_carries, new_res)
 
     loss_fn = shard_map(
-        sharded_loss, mesh=mesh,
-        in_specs=(P(), carry_specs, b["frames"], b["edges"], b["mask"],
-                  b["values"], b["labels"], P()),
-        out_specs=(P(), carry_specs),
+        sharded_loss_q, mesh=mesh,
+        in_specs=(P(), carry_specs, res_specs, b["frames"], b["edges"],
+                  b["mask"], b["values"], b["labels"], P()),
+        out_specs=(P(), (carry_specs, res_specs)),
         check_vma=False)
 
     @jax.jit
-    def step(params, opt_state, carries, frames, edges, mask, values,
-             labels, t0):
-        (loss, new_carries), grads = jax.value_and_grad(
-            loss_fn, has_aux=True)(params, carries, frames, edges, mask,
-                                   values, labels, t0)
+    def step(params, opt_state, carries, comm_res, frames, edges, mask,
+             values, labels, t0):
+        (loss, (new_carries, new_res)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, carries, comm_res, frames,
+                                   edges, mask, values, labels, t0)
         params2, opt2 = adamw.apply_updates(opt_cfg, params, grads,
                                             opt_state)
-        return params2, opt2, new_carries, loss
+        return params2, opt2, new_carries, new_res, loss
 
     return step
 
@@ -151,6 +201,49 @@ def init_sharded_carries(cfg: mdl.DynGNNConfig, params: dict, mesh,
     carries = mdl.init_carries(cfg, params)
     shardings = shardlib.named(mesh, shardlib.stream_carry_specs(cfg, axis))
     return jax.tree.map(jax.device_put, carries, shardings)
+
+
+def init_comm_residuals(cfg: mdl.DynGNNConfig, win: int, mesh,
+                        axis: str = "data"):
+    """Zero error-feedback residuals for the quantized redistributions,
+    placed with their stream shardings: one ``(res_t2n, res_n2t)`` pair
+    per layer in the PRE-all-to-all layouts (empty for EvolveGCN)."""
+    res = [(jnp.zeros((win, cfg.num_nodes, f1), jnp.float32),
+            jnp.zeros((win, cfg.num_nodes, f2), jnp.float32))
+           for f1, f2 in partition.a2a_payload_dims(cfg)]
+    shardings = shardlib.named(
+        mesh, shardlib.stream_comm_residual_specs(cfg, axis))
+    return jax.tree.map(jax.device_put, res, shardings)
+
+
+def lowered_step_hlo(cfg: mdl.DynGNNConfig, mesh, *, win: int,
+                     max_edges: int, axis: str = "data",
+                     a2a_chunks: int = 1, compression: str = "none",
+                     opt_cfg: adamw.AdamWConfig | None = None) -> str:
+    """Compiled HLO text of one round step over zero-valued inputs.
+
+    Shared by the structural byte-accounting tests and
+    ``benchmarks/scaling_bench.compressed_round`` so both measure the
+    SAME lowering (``dist.comm_volume.hlo_collective_bytes`` parses it).
+    """
+    opt_cfg = opt_cfg or adamw.AdamWConfig(lr=1e-2, warmup_steps=1,
+                                           total_steps=1)
+    step = make_dist_stream_step(cfg, mesh, opt_cfg, axis,
+                                 a2a_chunks=a2a_chunks,
+                                 compression=compression)
+    # shape-only trace: the key never reaches training
+    params = mdl.init_params(jax.random.PRNGKey(0), cfg)  # dynlint: allow[prng]
+    opt_state = adamw.init_state(params)
+    carries = init_sharded_carries(cfg, params, mesh, axis)
+    n = cfg.num_nodes
+    args = [params, opt_state, carries]
+    if compression != "none":
+        args.append(init_comm_residuals(cfg, win, mesh, axis))
+    args += [jnp.zeros((win, n, cfg.feat_in)),
+             jnp.zeros((win, max_edges, 2), jnp.int32),
+             jnp.zeros((win, max_edges)), jnp.zeros((win, max_edges)),
+             jnp.zeros((win, n), jnp.int32), jnp.int32(0)]
+    return step.lower(*args).compile().as_text()
 
 
 def dist_round_stream(shard_streams, frames, labels, win: int, bsl: int,
@@ -230,6 +323,7 @@ def train_distributed_streamed(cfg: mdl.DynGNNConfig, snapshots, values,
                                prefetch_depth: int = 2,
                                a2a_chunks: int = 1,
                                pipeline_rounds: bool = False,
+                               compression: str = "none",
                                opt_cfg: adamw.AdamWConfig | None = None,
                                params: dict | None = None, opt_state=None,
                                stats: enc.DeltaStats | None = None,
@@ -264,6 +358,16 @@ def train_distributed_streamed(cfg: mdl.DynGNNConfig, snapshots, values,
     ``sharded.encode_time_sliced`` with matching (cfg, mesh, block,
     a2a_chunks) args.
 
+    ``compression`` ("none" | "int8_a2a" | "int8_all") turns on int8
+    error-feedback quantization of the per-layer all-to-alls; "int8_all"
+    additionally encodes the per-shard delta streams on the narrow
+    ``stream.wire`` format (quantized edge values + int16 indices where
+    num_nodes/max_edges allow).  "none" is bit-identical to the
+    uncompressed trainer; the compressed loss streams are drift-bounded
+    by ``tests/test_compression_drift.py``.  A caller-provided
+    ``step_fn``/``shard_streams`` must have been built with the same
+    compression mode.
+
     ``start_round`` / ``carries`` / ``stop_fn`` are the resumable-from-
     block entry the elastic rescale subsystem (``repro.elastic``) drives
     segments through: run the rounds of ONE epoch from checkpoint-block
@@ -277,6 +381,8 @@ def train_distributed_streamed(cfg: mdl.DynGNNConfig, snapshots, values,
     """
     t_steps = len(snapshots)
     num_procs = mesh.shape[axis]
+    compression_lib.validate_mode(compression)
+    use_comp = compression_lib.compresses_a2a(compression)
     win = block_size or max(t_steps // max(cfg.checkpoint_blocks, 1), 1)
     if win % num_procs:
         raise ValueError(f"block_size {win} must divide into {num_procs} "
@@ -306,7 +412,8 @@ def train_distributed_streamed(cfg: mdl.DynGNNConfig, snapshots, values,
     if shard_streams is None:
         shard_streams = stream_sharded.encode_time_sliced(
             snapshots, values, cfg.num_nodes, max_edges, win, num_procs,
-            stats, start_step=start_round * win)
+            stats, start_step=start_round * win,
+            wire=compression_lib.wire_mode(compression))
     per_shard_bytes = [sum(i.payload_bytes for i in s)
                        for s in shard_streams]
 
@@ -314,7 +421,8 @@ def train_distributed_streamed(cfg: mdl.DynGNNConfig, snapshots, values,
     b = shardlib.stream_batch_specs(axis)
     if step_fn is None:
         step_fn = make_dist_stream_step(cfg, mesh, opt_cfg, axis,
-                                        a2a_chunks=a2a_chunks)
+                                        a2a_chunks=a2a_chunks,
+                                        compression=compression)
     stage_fn = make_round_stage_fn(mesh, axis)
     e_pad = max_edges
     # pipeline_rounds double-buffers the per-shard rings: round r uses
@@ -361,13 +469,23 @@ def train_distributed_streamed(cfg: mdl.DynGNNConfig, snapshots, values,
         carries = (initial_carries if initial_carries is not None
                    else init_sharded_carries(cfg, params, mesh, axis))
         initial_carries = None           # later epochs start fresh
+        # error-feedback residuals restart at zero with the carries: they
+        # are an optimization state of the quantizer, not model state
+        comm_res = (init_comm_residuals(cfg, win, mesh, axis)
+                    if use_comp else None)
         in_flight = None        # round r-1's device loss (pipeline_rounds)
         try:
             for r, (items, fr_g, lab_g) in enumerate(rounds):
                 assembled = reconstruct_round(r, items, appliers, stackers)
-                params, opt_state, carries, loss = step_fn(
-                    params, opt_state, carries, fr_g, *assembled, lab_g,
-                    jnp.int32((start_round + r) * win))
+                if use_comp:
+                    params, opt_state, carries, comm_res, loss = step_fn(
+                        params, opt_state, carries, comm_res, fr_g,
+                        *assembled, lab_g,
+                        jnp.int32((start_round + r) * win))
+                else:
+                    params, opt_state, carries, loss = step_fn(
+                        params, opt_state, carries, fr_g, *assembled,
+                        lab_g, jnp.int32((start_round + r) * win))
                 if pipeline_rounds:
                     # force the PREVIOUS round only now: round r's
                     # delta-applies and step are already dispatched, so

@@ -27,6 +27,7 @@ from typing import Iterator
 import numpy as np
 
 from repro.core.graphdiff import FullSnapshot, SnapshotDelta, _edge_key
+from repro.stream import wire as wirelib
 
 
 class ChurnOverflowError(ValueError):
@@ -200,11 +201,17 @@ class IncrementalEncoder:
       it on ``report``; long-running streams degrade instead of crashing.
     * ``"raise"`` — propagate :class:`ChurnOverflowError` (strict mode
       for offline encoding where stats are authoritative).
+
+    ``wire="int8"`` emits deltas on the narrow ``stream.wire`` format
+    (:class:`~repro.stream.wire.QuantizedDelta`: int16/int32 indices,
+    int8 masks, absmax-int8 values).  Full snapshots — block boundaries
+    AND overflow resyncs — always stay on the lossless f32 format, so
+    value quantization error never survives a re-base.
     """
 
     def __init__(self, num_nodes: int, max_edges: int, block_size: int,
                  drop_pad: int, add_pad: int, on_overflow: str = "resync",
-                 report: StreamReport | None = None):
+                 report: StreamReport | None = None, wire: str = "none"):
         if on_overflow not in ("resync", "raise"):
             raise ValueError(f"on_overflow must be resync|raise, "
                              f"got {on_overflow!r}")
@@ -215,6 +222,7 @@ class IncrementalEncoder:
         self.add_pad = add_pad
         self.on_overflow = on_overflow
         self.report = report
+        self.wire = wirelib.validate_wire(wire)
         self.step = 0
         self._dev: _DeviceMirror | None = None
         self._warned = False
@@ -237,6 +245,9 @@ class IncrementalEncoder:
             item, self._dev = _delta_step(
                 self._dev, snap, vals, self.num_nodes, self.max_edges,
                 self.drop_pad, self.add_pad)
+            if self.wire != "none":
+                item = wirelib.quantize_delta(item, self.num_nodes,
+                                              self.max_edges)
             return item
         except ChurnOverflowError as err:
             if self.on_overflow == "raise":
@@ -260,19 +271,20 @@ def iter_encode_stream(snapshots: list[np.ndarray],
                        num_nodes: int, max_edges: int, block_size: int,
                        stats: DeltaStats | None = None,
                        on_overflow: str = "resync",
-                       report: StreamReport | None = None
-                       ) -> Iterator[FullSnapshot | SnapshotDelta]:
+                       report: StreamReport | None = None,
+                       wire: str = "none") -> Iterator:
     """Lazily encode the trace (the form the prefetch thread consumes).
 
     A loop over :class:`IncrementalEncoder` (which documents the
-    ``on_overflow`` modes) with stats-sized delta pads measured from the
-    trace when not provided.
+    ``on_overflow`` and ``wire`` modes) with stats-sized delta pads
+    measured from the trace when not provided.
     """
     if stats is None:
         stats = measure_stats(snapshots, num_nodes, block_size, max_edges)
     inc = IncrementalEncoder(num_nodes, max_edges, block_size,
                              stats.max_drops, stats.max_adds,
-                             on_overflow=on_overflow, report=report)
+                             on_overflow=on_overflow, report=report,
+                             wire=wire)
     for i, snap in enumerate(snapshots):
         yield inc.encode(snap, values[i] if values is not None else None)
 
@@ -282,8 +294,9 @@ def encode_stream_fast(snapshots: list[np.ndarray],
                        num_nodes: int, max_edges: int, block_size: int,
                        stats: DeltaStats | None = None,
                        on_overflow: str = "resync",
-                       report: StreamReport | None = None
-                       ) -> list[FullSnapshot | SnapshotDelta]:
+                       report: StreamReport | None = None,
+                       wire: str = "none") -> list:
     """Drop-in replacement for ``core.graphdiff.encode_stream``."""
     return list(iter_encode_stream(snapshots, values, num_nodes, max_edges,
-                                   block_size, stats, on_overflow, report))
+                                   block_size, stats, on_overflow, report,
+                                   wire=wire))

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from repro import sanitize
 from repro.core import graphdiff
 from repro.core.graphdiff import FullSnapshot, SnapshotDelta
+from repro.stream.wire import QuantizedDelta
 
 _SENTINEL = object()
 
@@ -139,6 +140,16 @@ def stage_item(item: Any, device=None) -> Any:
                              add_mask=put(item.add_mask),
                              values=put(item.values),
                              num_edges=item.num_edges)
+    if isinstance(item, QuantizedDelta):
+        # the narrow dtypes cross the host->device link as-is; widening
+        # happens on device inside the decode jit (DeltaApplier)
+        return QuantizedDelta(drop_pos=put(item.drop_pos),
+                              drop_mask=put(item.drop_mask),
+                              add_edges=put(item.add_edges),
+                              add_mask=put(item.add_mask),
+                              values_q=put(item.values_q),
+                              values_scale=item.values_scale,
+                              num_edges=item.num_edges)
     return put(item)
 
 
@@ -148,6 +159,23 @@ def stage_item(item: Any, device=None) -> Any:
 # per epoch.  Device placement still follows the committed inputs.
 _APPLY_DONATING = jax.jit(graphdiff.apply_delta, donate_argnums=(0, 1))
 _APPLY_PLAIN = jax.jit(graphdiff.apply_delta)
+
+
+def _decode_apply(prev_edges, prev_mask, drop_pos, drop_mask, add_edges,
+                  add_mask):
+    """Widen a QuantizedDelta's narrow wire dtypes on device, then apply
+    — one fused jit so the decode costs no extra device round."""
+    return graphdiff.apply_delta(
+        prev_edges, prev_mask, drop_pos.astype(jnp.int32),
+        drop_mask.astype(jnp.float32), add_edges.astype(jnp.int32),
+        add_mask.astype(jnp.float32))
+
+
+_DECODE_DONATING = jax.jit(_decode_apply, donate_argnums=(0, 1))
+_DECODE_PLAIN = jax.jit(_decode_apply)
+# scale rides as an ARRAY argument: a python-float scale would bake a new
+# constant (and a recompile) into the jit per delta
+_DEQUANT = jax.jit(lambda q, scale: q.astype(jnp.float32) * scale)
 
 
 class DeltaApplier:
@@ -171,22 +199,36 @@ class DeltaApplier:
             self.mask = jax.device_put(self.mask, device)
         self._apply = (sanitize.guard_donated(_APPLY_DONATING, (0, 1))
                        if donate else _APPLY_PLAIN)
+        self._decode = (sanitize.guard_donated(_DECODE_DONATING, (0, 1))
+                        if donate else _DECODE_PLAIN)
 
-    def consume(self, item: FullSnapshot | SnapshotDelta
-                ) -> tuple[jax.Array, jax.Array, jax.Array]:
-        """-> (edges, mask, values) device arrays for this step."""
+    def consume(self, item) -> tuple[jax.Array, jax.Array, jax.Array]:
+        """-> (edges, mask, values) device arrays for this step.
+
+        Accepts FullSnapshot, SnapshotDelta, and the narrow-wire
+        QuantizedDelta (widened + dequantized on device).
+        """
         if isinstance(item, FullSnapshot):
             self.edges = jnp.asarray(item.edges)
             self.mask = jnp.asarray(item.mask)
+            values = jnp.asarray(item.values)
+        elif isinstance(item, QuantizedDelta):
+            self.edges, self.mask = self._decode(
+                self.edges, self.mask, jnp.asarray(item.drop_pos),
+                jnp.asarray(item.drop_mask), jnp.asarray(item.add_edges),
+                jnp.asarray(item.add_mask))
+            values = _DEQUANT(jnp.asarray(item.values_q),
+                              jnp.asarray(item.values_scale))
         else:
             self.edges, self.mask = self._apply(
                 self.edges, self.mask, jnp.asarray(item.drop_pos),
                 jnp.asarray(item.drop_mask), jnp.asarray(item.add_edges),
                 jnp.asarray(item.add_mask))
+            values = jnp.asarray(item.values)
         # The documented ring contract (SlotStacker): these aliases are
         # donated by the NEXT consume — callers copy before then.  Under
         # REPRO_SANITIZE=1 a stale read raises instead of going silent.
-        return self.edges, self.mask, jnp.asarray(item.values)  # dynlint: allow[donation]
+        return self.edges, self.mask, values  # dynlint: allow[donation]
 
 
 class SlotStacker:

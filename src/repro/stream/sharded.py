@@ -40,7 +40,7 @@ def encode_time_sliced(snapshots: list[np.ndarray],
                        num_nodes: int, max_edges: int, block_size: int,
                        num_shards: int,
                        stats: enc.DeltaStats | None = None,
-                       start_step: int = 0
+                       start_step: int = 0, wire: str = "none"
                        ) -> list[list[FullSnapshot | SnapshotDelta]]:
     """Per-shard streams: ``out[s][i]`` transfers shard s's i-th owned step.
 
@@ -57,6 +57,10 @@ def encode_time_sliced(snapshots: list[np.ndarray],
     every slice opens with a self-contained ``FullSnapshot`` — no shard
     ever needs decoder state from before the boundary, so the re-sliced
     tail is identical to the tail of a from-zero encoding.
+
+    ``wire="int8"`` puts every delta on the narrow ``stream.wire``
+    format (slice-boundary fulls stay lossless f32 — see
+    ``IncrementalEncoder``).
     """
     if start_step % block_size:
         raise ValueError(f"start_step {start_step} must be a checkpoint-"
@@ -74,7 +78,8 @@ def encode_time_sliced(snapshots: list[np.ndarray],
         snaps_s = [snapshots[t] for t in steps]
         vals_s = [values[t] for t in steps] if values is not None else None
         out.append(enc.encode_stream_fast(snaps_s, vals_s, num_nodes,
-                                          max_edges, bsl, stats))
+                                          max_edges, bsl, stats,
+                                          wire=wire))
     return out
 
 

@@ -1,0 +1,318 @@
+"""The drift-bounded numerics tier for quantized wire formats.
+
+Unlike the overlap/pipelining knobs (pure schedule, bit-exact), the
+``compression`` knob CHANGES numerics.  This tier pins what "changes"
+means:
+
+* compressed runs (int8 error-feedback all-to-alls, narrow delta wire)
+  track the uncompressed loss stream within an absolute drift bound on
+  the 8-device mesh, across the a2a_chunks x pipeline_rounds matrix;
+* ``compression="none"`` stays BIT-identical to the pre-knob trainer —
+  the knob must cost nothing when off;
+* EvolveGCN (no feature all-to-alls, §5.5) is bit-exact even under
+  ``int8_a2a`` — there is nothing on the wire to quantize;
+* byte accounting is structural, not modeled-only: the compiled HLO of
+  the round step is parsed (``dist.comm_volume.hlo_collective_bytes``)
+  and checked element-for-element against ``alltoall_round_payload``,
+  with compressed all-to-all bytes <= 0.3x the f32 lowering;
+* the narrow host->device delta wire decodes to the same snapshots
+  (edges/mask exact, values within scale/2), narrows indices by range,
+  shrinks payload bytes, and leaves resync FullSnapshots lossless;
+* the Engine surface validates and echoes the knob.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import partition
+from repro.core.graphdiff import FullSnapshot, SnapshotDelta
+from repro.core.models import DynGNNConfig
+from repro.data.dyngnn import synthetic_dataset
+from repro.dist import comm_volume as cv
+from repro.launch.mesh import make_host_mesh
+from repro.stream import distributed as dist
+from repro.stream import encoder as enc
+from repro.stream import prefetch
+from repro.stream import sharded as stream_sharded
+from repro.stream import wire as wirelib
+
+N, T, NB = 48, 16, 2
+WIN = T // NB
+DRIFT_ATOL = 1e-3   # measured ~3e-6 at P=8 over 2 epochs; 1e-3 is the
+                    # contract: quantization must never walk the loss
+
+
+def _ds(model, seed=0):
+    smooth = {"tmgcn": "mproduct", "evolvegcn": "edgelife",
+              "cdgcn": "none"}[model]
+    ds = synthetic_dataset(N, T, density=2.0, churn=0.1,
+                           smoothing_mode=smooth, window=3, seed=seed)
+    cfg = DynGNNConfig(model=model, num_nodes=N, num_steps=T, window=3,
+                      checkpoint_blocks=NB)
+    return cfg, ds, np.asarray(ds.frames), np.asarray(ds.labels)
+
+
+needs8 = pytest.mark.skipif(len(jax.devices()) < 8,
+                            reason="needs 8 host devices")
+
+
+@pytest.fixture(scope="module")
+def _ref_p8():
+    """Uncompressed reference runs on the 8-device mesh, one per model."""
+    mesh = make_host_mesh(data=8, model=1)
+    out = {}
+    for model in ("tmgcn", "cdgcn", "evolvegcn"):
+        cfg, ds, frames, labels = _ds(model)
+        ref = dist.train_distributed_streamed(
+            cfg, ds.snapshots, ds.values, frames, labels, mesh=mesh,
+            num_epochs=2)
+        out[model] = (cfg, ds, frames, labels, ref)
+    return mesh, out
+
+
+# ------------------------------------------------------ drift bounds -------
+
+@needs8
+@pytest.mark.parametrize("pipeline", [False, True])
+@pytest.mark.parametrize("chunks", [1, 2])
+def test_int8_a2a_drift_bounded_across_schedule_matrix(chunks, pipeline,
+                                                       _ref_p8):
+    """int8_a2a tracks the uncompressed loss stream within DRIFT_ATOL on
+    every (a2a_chunks, pipeline_rounds) combination — the schedule knobs
+    must not compound the quantization drift."""
+    mesh, runs = _ref_p8
+    cfg, ds, frames, labels, ref = runs["tmgcn"]
+    got = dist.train_distributed_streamed(
+        cfg, ds.snapshots, ds.values, frames, labels, mesh=mesh,
+        num_epochs=2, a2a_chunks=chunks, pipeline_rounds=pipeline,
+        compression="int8_a2a")
+    assert len(got.losses) == len(ref.losses) == 2 * NB
+    np.testing.assert_allclose(got.losses, ref.losses, atol=DRIFT_ATOL)
+
+
+@needs8
+@pytest.mark.parametrize("model", ["tmgcn", "cdgcn"])
+def test_int8_all_drift_bounded(model, _ref_p8):
+    """The full wire stack (quantized a2a + narrow delta wire) stays
+    within the same drift bound per model family."""
+    mesh, runs = _ref_p8
+    cfg, ds, frames, labels, ref = runs[model]
+    got = dist.train_distributed_streamed(
+        cfg, ds.snapshots, ds.values, frames, labels, mesh=mesh,
+        num_epochs=2, compression="int8_all")
+    np.testing.assert_allclose(got.losses, ref.losses, atol=DRIFT_ATOL)
+
+
+@needs8
+def test_compression_none_is_bit_exact(_ref_p8):
+    """compression='none' costs nothing: losses AND final params are
+    bitwise identical to the trainer without the knob."""
+    mesh, runs = _ref_p8
+    cfg, ds, frames, labels, ref = runs["tmgcn"]
+    got = dist.train_distributed_streamed(
+        cfg, ds.snapshots, ds.values, frames, labels, mesh=mesh,
+        num_epochs=2, compression="none")
+    assert got.losses == ref.losses
+    for a, b in zip(jax.tree.leaves(ref.params),
+                    jax.tree.leaves(got.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@needs8
+def test_evolvegcn_int8_a2a_is_bit_exact(_ref_p8):
+    """EvolveGCN redistributes nothing (§5.5): quantizing its (absent)
+    all-to-alls must be a bitwise no-op, not a small drift."""
+    mesh, runs = _ref_p8
+    cfg, ds, frames, labels, ref = runs["evolvegcn"]
+    got = dist.train_distributed_streamed(
+        cfg, ds.snapshots, ds.values, frames, labels, mesh=mesh,
+        num_epochs=2, compression="int8_a2a")
+    assert got.losses == ref.losses
+
+
+# ----------------------------------------------- structural byte audit -----
+
+def _hlo_stats(model="tmgcn", chunks=1, compression="none"):
+    cfg, ds, frames, labels = _ds(model)
+    mesh = make_host_mesh(data=4, model=1)
+    hlo = dist.lowered_step_hlo(cfg, mesh, win=WIN, max_edges=128,
+                                a2a_chunks=chunks, compression=compression)
+    return cfg, cv.hlo_collective_bytes(hlo)
+
+
+def test_compressed_a2a_bytes_under_point3_of_f32():
+    """Acceptance: measured (HLO) all-to-all bytes under int8_a2a are
+    <= 0.3x the f32 lowering, scales included."""
+    _, f32 = _hlo_stats(compression="none")
+    _, q = _hlo_stats(compression="int8_a2a")
+    f32_bytes = f32["f32"]["bytes"]
+    q_bytes = q["s8"]["bytes"] + q.get("f32", {"bytes": 0})["bytes"]
+    assert f32_bytes > 0
+    assert q_bytes <= 0.3 * f32_bytes
+
+
+def test_hlo_matches_payload_model_element_for_element():
+    """The analytic model and the lowering agree exactly: per-shard s8
+    elements (fwd+bwd) come from partition.a2a_payload_dims, and the
+    modeled network-crossing bytes equal per-shard fwd elements x (P-1)
+    plus the scale vectors."""
+    p, bsl = 4, WIN // 4
+    for chunks in (1, 2):
+        cfg, q = _hlo_stats(chunks=chunks, compression="int8_a2a")
+        dims = partition.a2a_payload_dims(cfg)
+        fwd_elems = sum(bsl * N * (f1 + f2) for f1, f2 in dims)
+        # one byte per element; backward doubles the op set
+        assert q["s8"]["bytes"] == 2 * fwd_elems
+        assert q["s8"]["ops"] == 2 * 2 * len(dims) * chunks
+        # scale vectors: one (P,) f32 per quantized all-to-all
+        assert q["f32"]["bytes"] == 2 * 2 * len(dims) * chunks * p * 4
+        feats = {f1 for f1, _ in dims} | {f2 for _, f2 in dims}
+        assert len(feats) == 1          # uniform width: the model's feat
+        modeled = cv.alltoall_round_payload(
+            WIN, N, feats.pop(), len(dims), p, compression="int8_a2a",
+            a2a_chunks=chunks)
+        assert modeled == fwd_elems * (p - 1) + \
+            2 * len(dims) * chunks * p * (p - 1) * 4
+
+
+def test_chunking_multiplies_ops_not_payload():
+    _, q1 = _hlo_stats(chunks=1, compression="int8_a2a")
+    _, q2 = _hlo_stats(chunks=2, compression="int8_a2a")
+    assert q2["s8"]["ops"] == 2 * q1["s8"]["ops"]
+    assert q2["s8"]["bytes"] == q1["s8"]["bytes"]
+    # each extra chunk ships its own scale vector
+    assert q2["f32"]["bytes"] == 2 * q1["f32"]["bytes"]
+
+
+def test_evolvegcn_lowers_no_collectives_either_way():
+    for compression in ("none", "int8_a2a"):
+        _, stats = _hlo_stats("evolvegcn", compression=compression)
+        assert stats == {}
+
+
+# ------------------------------------------------- narrow delta wire -------
+
+def _decode_stream(items, max_edges):
+    applier = prefetch.DeltaApplier(max_edges, donate=False)
+    return [tuple(np.asarray(a) for a in applier.consume(it))
+            for it in items]
+
+
+def test_quantized_delta_wire_decodes_equivalently():
+    """int8 wire vs f32 wire, decoded through the same ring: edges and
+    mask identical, values within half a quantization step."""
+    cfg, ds, frames, labels = _ds("tmgcn")
+    max_edges = enc.padded_max_edges(ds.snapshots)
+    f32 = enc.encode_stream_fast(ds.snapshots, ds.values, N, max_edges,
+                                 WIN)
+    q = enc.encode_stream_fast(ds.snapshots, ds.values, N, max_edges,
+                               WIN, wire="int8")
+    assert len(f32) == len(q)
+    # delta items actually exist (bsl >= 2) and fulls stay lossless f32
+    kinds = [type(it) for it in q]
+    assert wirelib.QuantizedDelta in kinds and FullSnapshot in kinds
+    for it_f, it_q in zip(f32, q):
+        if isinstance(it_f, FullSnapshot):
+            assert isinstance(it_q, FullSnapshot)
+            np.testing.assert_array_equal(it_f.values, it_q.values)
+    for (e_f, m_f, v_f), (e_q, m_q, v_q), item in zip(
+            _decode_stream(f32, max_edges), _decode_stream(q, max_edges),
+            q):
+        np.testing.assert_array_equal(e_f, e_q)
+        np.testing.assert_array_equal(m_f, m_q)
+        if isinstance(item, wirelib.QuantizedDelta):
+            step = float(item.values_scale)
+            assert np.max(np.abs(v_f - v_q)) <= 0.5 * step * (1 + 1e-5)
+        else:
+            np.testing.assert_array_equal(v_f, v_q)
+
+
+def test_index_width_narrows_by_range():
+    assert wirelib.index_dtype(32767) == np.int16
+    assert wirelib.index_dtype(32768) == np.int32
+    assert cv.index_width(32767) == 2.0
+    assert cv.index_width(32768) == 4.0
+    delta = SnapshotDelta(
+        drop_pos=np.asarray([1, 2], np.int32),
+        drop_mask=np.asarray([1.0, 1.0], np.float32),
+        add_edges=np.zeros((2, 2), np.int32),
+        add_mask=np.asarray([1.0, 0.0], np.float32),
+        values=np.ones((8,), np.float32), num_edges=5)
+    small = wirelib.quantize_delta(delta, num_nodes=100, max_edges=8)
+    assert small.drop_pos.dtype == np.int16
+    assert small.add_edges.dtype == np.int16
+    big = wirelib.quantize_delta(delta, num_nodes=40000, max_edges=8)
+    assert big.add_edges.dtype == np.int32
+    assert big.drop_pos.dtype == np.int16    # positions index max_edges
+
+
+def test_narrow_wire_shrinks_shard_payload_bytes():
+    """Per-shard stream bytes under wire='int8' < f32 wire (P=4 so each
+    shard's slice has real deltas, not just boundary fulls), matching
+    the analytic ``delta_wire_bytes`` direction."""
+    cfg, ds, frames, labels = _ds("tmgcn")
+    max_edges = enc.padded_max_edges(ds.snapshots)
+    stats = enc.measure_stats(ds.snapshots, N, WIN, max_edges)
+    f32 = stream_sharded.encode_time_sliced(
+        ds.snapshots, ds.values, N, max_edges, WIN, 4, stats)
+    q = stream_sharded.encode_time_sliced(
+        ds.snapshots, ds.values, N, max_edges, WIN, 4, stats, wire="int8")
+    for s_f, s_q in zip(f32, q):
+        b_f = sum(it.payload_bytes for it in s_f)
+        b_q = sum(it.payload_bytes for it in s_q)
+        assert b_q < b_f
+    assert cv.delta_wire_bytes(4, 4, 100, num_nodes=N, max_edges=128,
+                               wire="int8") < \
+        cv.delta_wire_bytes(4, 4, 100, num_nodes=N, max_edges=128)
+
+
+# ------------------------------------------------------- run surface -------
+
+def test_plan_validates_compression():
+    from repro.run import ExecutionPlan
+    ExecutionPlan(mode="streamed_mesh", shards=4,
+                  compression="int8_a2a").validate()
+    with pytest.raises(ValueError, match="compression"):
+        ExecutionPlan(compression="int8_a2a").validate()       # eager
+    with pytest.raises(ValueError, match="compression"):
+        ExecutionPlan(mode="streamed_mesh", shards=4,
+                      compression="int9").validate()
+    with pytest.raises(ValueError, match="elastic"):
+        ExecutionPlan(mode="streamed_mesh", shards=4,
+                      compression="int8_a2a",
+                      rescale=((1, 2),)).validate()
+
+
+def test_engine_rejects_checkpoint_with_compression(tmp_path):
+    from repro.run import (CheckpointSpec, Engine, ExecutionPlan,
+                           RunConfig, SyntheticTrace)
+    cfg, ds, frames, labels = _ds("tmgcn")
+    run = RunConfig(
+        model=cfg, data=SyntheticTrace(num_nodes=N, num_steps=T),
+        plan=ExecutionPlan(mode="streamed_mesh", shards=4,
+                           compression="int8_a2a"),
+        checkpoint=CheckpointSpec(str(tmp_path)))
+    with pytest.raises(ValueError, match="compression"):
+        Engine(run).resolve()
+
+
+def test_engine_echoes_compression_mode():
+    from repro.run import Engine, ExecutionPlan, RunConfig, SyntheticTrace
+    cfg, ds, frames, labels = _ds("tmgcn")
+    data = SyntheticTrace(num_nodes=N, num_steps=T, density=2.0,
+                          smoothing_mode="mproduct", window=3)
+    results = {}
+    for mode in ("none", "int8_all"):
+        plan = ExecutionPlan(mode="streamed_mesh", shards=4,
+                             num_epochs=1, compression=mode)
+        results[mode] = Engine(RunConfig(
+            model=cfg, data=data, plan=plan,
+            log_fn=lambda m: None)).fit()
+        assert results[mode].compression == mode
+    # the narrow wire also shows up in the per-shard byte accounting
+    assert (sum(results["int8_all"].per_shard_bytes)
+            < sum(results["none"].per_shard_bytes))
+    assert abs(results["int8_all"].losses[-1]
+               - results["none"].losses[-1]) <= DRIFT_ATOL

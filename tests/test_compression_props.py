@@ -1,0 +1,71 @@
+"""Hypothesis property sweeps for the int8 quantizer core
+(``repro.dist.compression``) — the randomized side of the numerics tier.
+
+* round-trip error <= scale/2 per element across magnitudes spanning six
+  decades, wire dtype always int8;
+* the error-feedback identity ``deq == (g + res) - new_res`` telescopes
+  over any K steps: the transmitted sum equals the true sum plus the
+  residual ledger delta, so truncation is carried, never dropped;
+* per-piece quantization (the all-to-all wire layout) round-trips every
+  piece within its own scale/2 for any legal piece count.
+
+Deterministic corner cases (all-zero, denormal, ±inf) and the mesh tests
+live in ``test_compression.py``, which runs without hypothesis.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.dist import compression
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (see requirements.txt)")
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31), n=st.integers(1, 400),
+       scale_pow=st.integers(-3, 3))
+def test_quantize_roundtrip_half_step(seed, n, scale_pow):
+    rng = np.random.default_rng(seed)
+    g = (rng.normal(size=(n,)) * 10.0 ** scale_pow).astype(np.float32)
+    q, scale = compression.quantize(jnp.asarray(g))
+    assert q.dtype == jnp.int8
+    deq = np.asarray(compression.dequantize(q, scale))
+    assert np.max(np.abs(deq - g)) <= 0.5 * float(scale) * (1 + 1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31), k=st.integers(1, 10))
+def test_error_feedback_telescopes(seed, k):
+    rng = np.random.default_rng(seed)
+    gs = rng.normal(size=(k, 64)).astype(np.float32)
+    res = jnp.zeros((64,), jnp.float32)
+    total = np.zeros((64,), np.float64)
+    for g in gs:
+        deq, res = compression.ef_quantize(jnp.asarray(g), res)
+        total += np.asarray(deq, np.float64)
+    want = gs.astype(np.float64).sum(axis=0) - np.asarray(res, np.float64)
+    np.testing.assert_allclose(total, want, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31), p=st.sampled_from([1, 2, 4, 8]),
+       rows=st.integers(1, 4))
+def test_per_piece_quantization_roundtrip(seed, p, rows):
+    """Each destination piece round-trips within ITS OWN scale/2 — a
+    hot piece must not inflate the error of a quiet one."""
+    rng = np.random.default_rng(seed)
+    mags = 10.0 ** rng.integers(-2, 3, size=p)
+    y = (rng.normal(size=(p * rows, 6)) *
+         np.repeat(mags, rows)[:, None]).astype(np.float32)
+    q, scales = compression._quantize_pieces(jnp.asarray(y), p, 0)
+    deq = np.asarray(compression._dequantize_pieces(q, scales, p, 0))
+    for i in range(p):
+        piece = slice(i * rows, (i + 1) * rows)
+        err = np.max(np.abs(deq[piece] - y[piece]))
+        assert err <= 0.5 * float(scales[i]) * (1 + 1e-5)
