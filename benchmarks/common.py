@@ -1,8 +1,12 @@
-"""Shared benchmark utilities: timing + CSV emission."""
+"""Shared benchmark utilities: timing + CSV emission + JSON artifacts."""
 
 from __future__ import annotations
 
+import datetime
+import json
+import subprocess
 import time
+from pathlib import Path
 from typing import Callable
 
 import jax
@@ -32,3 +36,34 @@ def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
 
 def header() -> None:
     print("name,us_per_call,derived", flush=True)
+
+
+def repo_sha() -> str:
+    """HEAD commit of the repo the benchmark ran in ('' outside git)."""
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10, check=True).stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        return ""
+
+
+def write_bench_json(json_dir: str | Path, suite: str,
+                     rows: list[tuple[str, float, str]],
+                     wall_s: float, failed: bool) -> Path:
+    """One ``BENCH_<suite>.json`` artifact per section (CI uploads these
+    so run-over-run regressions are diffable without re-parsing logs)."""
+    out = Path(json_dir) / f"BENCH_{suite}.json"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    doc = {
+        "suite": suite,
+        "sha": repo_sha(),
+        "created": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+        "wall_s": round(wall_s, 3),
+        "failed": failed,
+        "rows": [{"name": n, "us_per_call": round(us, 3), "derived": d}
+                 for n, us, d in rows],
+    }
+    out.write_text(json.dumps(doc, indent=1) + "\n")
+    return out

@@ -15,17 +15,24 @@ Emits ``name,us_per_call,derived`` CSV rows:
   * serve_bench          — online serving: warm vs cold query latency
                            (p50/p95 at batch 1/8/64) + live-ingest
                            events/s
+  * obs_bench            — repro.obs tracer overhead: asserts the
+                           disabled tracer costs <2% on a hot loop, and
+                           reports the enabled-tracer cost for scale
 
 ``--smoke`` runs tiny shapes (the CI smoke job); ``--only a,b`` restricts
-to named sections.
+to named sections; ``--json-dir DIR`` additionally writes one
+``BENCH_<section>.json`` artifact per section (suite name, repo SHA,
+wall time, the CSV rows) for CI upload.
 """
 
 from __future__ import annotations
 
 import argparse
 import sys
+import time
 import traceback
 
+from benchmarks import common
 from benchmarks.common import header
 
 
@@ -35,12 +42,15 @@ def main() -> None:
                     help="tiny shapes for CI (seconds, not minutes)")
     ap.add_argument("--only", default="",
                     help="comma-separated section names to run")
+    ap.add_argument("--json-dir", default="",
+                    help="write one BENCH_<section>.json artifact per "
+                         "section into this directory")
     args = ap.parse_args()
 
     header()
     from benchmarks import (checkpoint_bench, graphdiff_bench, kernel_bench,
-                            overlap_bench, partition_compare, scaling_bench,
-                            serve_bench)
+                            obs_bench, overlap_bench, partition_compare,
+                            scaling_bench, serve_bench)
     smoke = args.smoke
     sections = [
         ("graphdiff", lambda: graphdiff_bench.run(
@@ -60,6 +70,8 @@ def main() -> None:
         ("serve", lambda: serve_bench.run(
             **({"n": 96, "windows": 12, "events": 1200,
                 "batches": (1, 8), "iters": 4} if smoke else {}))),
+        ("obs", lambda: obs_bench.run(
+            **({"units": 200, "reps": 3} if smoke else {}))),
     ]
     only = {s.strip() for s in args.only.split(",") if s.strip()}
     if only:
@@ -70,12 +82,20 @@ def main() -> None:
     failures = 0
     for name, fn in sections:
         print(f"# --- {name} ---", flush=True)
+        first_row = len(common.ROWS)
+        t0 = time.perf_counter()
+        failed = False
         try:
             fn()
         except Exception:  # noqa: BLE001
             failures += 1
+            failed = True
             print(f"# SECTION FAILED: {name}", flush=True)
             traceback.print_exc()
+        if args.json_dir:
+            common.write_bench_json(args.json_dir, name,
+                                    common.ROWS[first_row:],
+                                    time.perf_counter() - t0, failed)
     if failures:
         sys.exit(1)
 

@@ -33,12 +33,13 @@ legal width, since the checkpoint is mesh-agnostic (``repro.ckpt``).
 
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 
 import jax
 
+from repro import obs
 from repro.core import models as mdl
+from repro.ft.straggler import StepTimer
 from repro.elastic import reshard
 from repro.elastic.controller import (RescaleController, RescaleEvent,
                                       RescaleReport)
@@ -200,6 +201,8 @@ def train_elastic_streamed(cfg, snapshots, values, frames, labels, *,
     completed = True
     p = controller.initial_p
     r = start_cursor
+    # one EWMA watchdog across every segment (reset at each rescale)
+    timer = StepTimer()
 
     def save(blocking=False):
         if ckpt is not None:
@@ -214,23 +217,30 @@ def train_elastic_streamed(cfg, snapshots, values, frames, labels, *,
             carries = None                  # epoch boundary: fresh carries
         new_p, cause = controller.width_at(r, p)
         if new_p != p:
-            t0 = time.perf_counter()
-            mesh2 = rt.mesh(new_p)
-            payload = reshard.rescale_payload_bytes(params, opt_state,
-                                                    carries, p, new_p)
-            params = reshard.replicate_on(mesh2, params)
-            opt_state = reshard.replicate_on(mesh2, opt_state)
-            if carries is not None:
-                carries = reshard.reshard_carries(cfg, carries, mesh2, axis)
-            # stream recompose is part of the same boundary: re-slice the
-            # remaining timeline for the new width so the measured
-            # recompose time covers re-encode + re-shard
-            rt.shard_streams(new_p, rb, snapshots, values, max_edges, win,
-                             stats)
-            dt = time.perf_counter() - t0
+            with obs.stopwatch("elastic.rescale", cat="elastic", block=r,
+                               old_p=p, new_p=new_p, cause=cause) as sw:
+                mesh2 = rt.mesh(new_p)
+                payload = reshard.rescale_payload_bytes(params, opt_state,
+                                                        carries, p, new_p)
+                params = reshard.replicate_on(mesh2, params)
+                opt_state = reshard.replicate_on(mesh2, opt_state)
+                if carries is not None:
+                    carries = reshard.reshard_carries(cfg, carries, mesh2,
+                                                      axis)
+                # stream recompose is part of the same boundary: re-slice
+                # the remaining timeline for the new width so the measured
+                # recompose time covers re-encode + re-shard
+                rt.shard_streams(new_p, rb, snapshots, values, max_edges,
+                                 win, stats)
+            dt = sw.seconds
             report.events.append(RescaleEvent(
                 block=r, old_p=p, new_p=new_p, payload_bytes=payload,
                 recompose_s=dt, cause=cause))
+            obs.inc("elastic.rescales")
+            obs.inc("elastic.payload_bytes", payload)
+            # the expected round time changes with the width: restart the
+            # EWMA so the watchdog re-seeds on the new mesh's pace
+            timer.reset()
             if log_fn is not None:
                 log_fn(f"elastic: rescale P {p} -> {new_p} at block {r} "
                        f"({cause}; payload {payload} B, recompose "
@@ -266,7 +276,7 @@ def train_elastic_streamed(cfg, snapshots, values, frames, labels, *,
             shard_streams=seg_streams, start_round=rb, carries=carries,
             stop_fn=(lambda _blk: controller.interrupt())
             if controller.guard is not None else None,
-            log_every=log_every, log_fn=log_fn)
+            log_every=log_every, log_fn=log_fn, step_timer=timer)
         params, opt_state, carries = st.params, st.opt_state, st.carries
         losses.extend(st.losses)
         r += len(st.losses)

@@ -23,9 +23,34 @@ from dataclasses import dataclass, field
 
 
 class StepTimer:
-    def __init__(self, window: int = 50, threshold_std: float = 3.0):
+    """EWMA step-time watchdog.
+
+    Keeps exponentially weighted moving estimates of the step-time mean
+    and variance with smoothing factor ``alpha = 2 / (window + 1)`` (the
+    span convention, so ``window`` keeps its old meaning: roughly how
+    many recent steps dominate the estimate).  A step is flagged when
+    ``dt > mean + threshold_std * sqrt(var)`` once ``min_steps``
+    observations have seeded the estimate; the estimate is updated
+    *after* the check so an outlier cannot mask itself.  The incremental
+    variance update is the standard EW form::
+
+        diff  = dt - mean
+        mean += alpha * diff
+        var   = (1 - alpha) * (var + alpha * diff**2)
+
+    ``times`` still holds the last ``window`` raw durations — the
+    ``BackupShardSchedule`` planner wants the raw tail, not the
+    smoothed moments.
+    """
+
+    def __init__(self, window: int = 50, threshold_std: float = 3.0,
+                 min_steps: int = 10):
         self.window = window
         self.threshold_std = threshold_std
+        self.min_steps = min_steps
+        self.alpha = 2.0 / (window + 1)
+        self.mean = 0.0
+        self.var = 0.0
         self.times: deque[float] = deque(maxlen=window)
         self._t0: float | None = None
         self.flagged_steps: list[int] = []
@@ -44,15 +69,33 @@ class StepTimer:
         """Returns True if this step is a straggler outlier."""
         self.step_idx += 1
         flag = False
-        if len(self.times) >= 10:
-            mean = sum(self.times) / len(self.times)
-            var = sum((t - mean) ** 2 for t in self.times) / len(self.times)
-            std = max(var ** 0.5, 1e-9)
-            if dt > mean + self.threshold_std * std:
+        if self.step_idx > self.min_steps:
+            std = max(self.var ** 0.5, 1e-9)
+            if dt > self.mean + self.threshold_std * std:
                 flag = True
                 self.flagged_steps.append(self.step_idx)
+                from repro import obs      # lazy: flag path only
+                obs.inc("straggler.flags")
+        if self.step_idx == 1:
+            self.mean = dt
+            self.var = 0.0
+        else:
+            diff = dt - self.mean
+            incr = self.alpha * diff
+            self.mean += incr
+            self.var = (1.0 - self.alpha) * (self.var + diff * incr)
         self.times.append(dt)
         return flag
+
+    def reset(self) -> None:
+        """Forget all state — e.g. after an elastic re-mesh changes the
+        expected step time."""
+        self.mean = 0.0
+        self.var = 0.0
+        self.times.clear()
+        self.flagged_steps.clear()
+        self.step_idx = 0
+        self._t0 = None
 
     @property
     def straggler_rate(self) -> float:

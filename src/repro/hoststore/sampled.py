@@ -34,7 +34,6 @@ main thread — no cross-thread attribute writes at all.
 
 from __future__ import annotations
 
-import time
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 
@@ -42,6 +41,7 @@ import jax
 import numpy as np
 from jax.sharding import NamedSharding
 
+from repro import obs
 from repro.dist import sharding as shardlib
 from repro.graph import sampler as smp
 from repro.hoststore.spec import ResolvedSampling, SamplingSpec
@@ -73,6 +73,13 @@ class SampleReport:
         self.sample_seconds += rnd.sample_s
         self.stage_seconds += rnd.stage_s
         self.table_fill_max = max(self.table_fill_max, len(rnd.node_ids))
+        # mirror into the shared namespace (docs/observability.md);
+        # fold() runs on the main thread, so the registry sees the same
+        # happens-before edge the report does
+        obs.inc("sample.rounds")
+        obs.inc("sample.dropped_nodes", rnd.dropped_nodes)
+        obs.inc("sample.dropped_edges", rnd.dropped_edges)
+        obs.inc("sample.staged_bytes", rnd.staged_bytes)
 
 
 @dataclass
@@ -167,8 +174,20 @@ def sample_round(store: TemporalCSRStore, frames: np.ndarray,
                  resolved: ResolvedSampling, win: int, r: int, epoch: int,
                  pool: ThreadPoolExecutor) -> SampleRound:
     """Sample one round: per-step expansions in worker threads, merged
-    into one table + fixed-size padded tensors."""
-    tic = time.perf_counter()
+    into one table + fixed-size padded tensors.  Runs on the prefetch
+    thread; its span/timing rides back on ``SampleRound.sample_s``."""
+    with obs.stopwatch("sample.round", cat="sample", round=r,
+                       epoch=epoch) as sw:
+        rnd = _sample_round_body(store, frames, labels, spec, resolved,
+                                 win, r, epoch, pool)
+    rnd.sample_s = sw.seconds
+    return rnd
+
+
+def _sample_round_body(store: TemporalCSRStore, frames: np.ndarray,
+                       labels: np.ndarray, spec: SamplingSpec,
+                       resolved: ResolvedSampling, win: int, r: int,
+                       epoch: int, pool: ThreadPoolExecutor) -> SampleRound:
     t0 = r * win
     n = store.num_nodes
     seeds = draw_seeds(n, resolved.num_seeds, spec.seed, epoch, r)
@@ -224,7 +243,6 @@ def sample_round(store: TemporalCSRStore, frames: np.ndarray,
 
     return SampleRound(r=r, t0=t0, node_ids=table, frames=f_sub,
                        labels=l_sub, edges=edges, mask=mask, values=values,
-                       sample_s=time.perf_counter() - tic,
                        sampled_edges=sampled_edges,
                        dropped_nodes=dropped_nodes,
                        dropped_edges=dropped_edges)
@@ -274,22 +292,23 @@ class SampledSliceStream:
         sh = self._shardings
 
         def stage(rnd: SampleRound) -> StagedRound:
-            tic = time.perf_counter()
-            put = jax.device_put
-            staged = StagedRound(
-                r=rnd.r, t0=rnd.t0, node_ids=rnd.node_ids,
-                frames=put(rnd.frames, sh["frames"]),
-                labels=put(rnd.labels, sh["labels"]),
-                edges=put(rnd.edges, sh["edges"]),
-                mask=put(rnd.mask, sh["mask"]),
-                values=put(rnd.values, sh["values"]),
-                sample_s=rnd.sample_s, sampled_edges=rnd.sampled_edges,
-                dropped_nodes=rnd.dropped_nodes,
-                dropped_edges=rnd.dropped_edges)
-            staged.staged_bytes = (rnd.frames.nbytes + rnd.labels.nbytes
-                                   + rnd.edges.nbytes + rnd.mask.nbytes
-                                   + rnd.values.nbytes)
-            staged.stage_s = time.perf_counter() - tic
+            with obs.stopwatch("sample.stage", cat="sample",
+                               round=rnd.r) as sw:
+                put = jax.device_put
+                staged = StagedRound(
+                    r=rnd.r, t0=rnd.t0, node_ids=rnd.node_ids,
+                    frames=put(rnd.frames, sh["frames"]),
+                    labels=put(rnd.labels, sh["labels"]),
+                    edges=put(rnd.edges, sh["edges"]),
+                    mask=put(rnd.mask, sh["mask"]),
+                    values=put(rnd.values, sh["values"]),
+                    sample_s=rnd.sample_s, sampled_edges=rnd.sampled_edges,
+                    dropped_nodes=rnd.dropped_nodes,
+                    dropped_edges=rnd.dropped_edges)
+                staged.staged_bytes = (rnd.frames.nbytes + rnd.labels.nbytes
+                                       + rnd.edges.nbytes + rnd.mask.nbytes
+                                       + rnd.values.nbytes)
+            staged.stage_s = sw.seconds
             return staged
 
         return stage

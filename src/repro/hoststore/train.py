@@ -21,13 +21,13 @@ drift the convergence test bounds.
 from __future__ import annotations
 
 import dataclasses
-import time
 from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import models as mdl
 from repro.dist import sharding as shardlib
 from repro.hoststore.carry import HostCarryStore
@@ -139,21 +139,24 @@ def train_sampled(cfg: mdl.DynGNNConfig, store: TemporalCSRStore,
                 # carries CANNOT prefetch: round r's gather depends on
                 # round r-1's scatter (the host-resident state is the
                 # cross-round data dependency)
-                tic = time.perf_counter()
-                host_carries = carry_store.gather(staged.node_ids,
-                                                  resolved.table_pad)
-                carries = jax.tree.map(jax.device_put, host_carries,
-                                       carry_shardings)
-                staged.staged_bytes += sum(
-                    leaf.nbytes for leaf in jax.tree.leaves(host_carries))
-                params, opt_state, new_carries, loss = step_fn(
-                    params, opt_state, carries, staged.frames,
-                    staged.edges, staged.mask, staged.values,
-                    staged.labels, jnp.int32(staged.t0))
-                carry_store.scatter(staged.node_ids, new_carries)
-                emit(loss)
+                with obs.stopwatch("round", cat="round", round=staged.r,
+                                   epoch=epoch, schedule="sampled") as sw:
+                    host_carries = carry_store.gather(staged.node_ids,
+                                                      resolved.table_pad)
+                    carries = jax.tree.map(jax.device_put, host_carries,
+                                           carry_shardings)
+                    staged.staged_bytes += sum(
+                        leaf.nbytes
+                        for leaf in jax.tree.leaves(host_carries))
+                    params, opt_state, new_carries, loss = step_fn(
+                        params, opt_state, carries, staged.frames,
+                        staged.edges, staged.mask, staged.values,
+                        staged.labels, jnp.int32(staged.t0))
+                    sw.fence(loss)
+                    carry_store.scatter(staged.node_ids, new_carries)
+                    emit(loss)
                 report.fold(staged)
-                report.step_seconds += time.perf_counter() - tic
+                report.step_seconds += sw.seconds
         finally:
             if isinstance(rounds, PrefetchIterator):
                 rounds.close()

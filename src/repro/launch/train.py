@@ -19,6 +19,25 @@ import jax
 import numpy as np
 
 
+def _finish_trace(path: str | None, result=None) -> None:
+    """Export the session trace (``--trace``) and, for mesh runs,
+    print the model-vs-measured calibration summary."""
+    if not path:
+        return
+    from repro import obs
+    trc = obs.get_tracer()
+    out = obs.export_trace(path)
+    dropped = f" ({trc.dropped} spans dropped)" if trc.dropped else ""
+    print(f"trace: {len(trc.spans())} spans -> {out}{dropped}")
+    if result is not None and result.per_shard_bytes is not None:
+        # int8 wire formats quarter the a2a bytes the model predicts
+        ratio = 0.25 if result.compression != "none" else 1.0
+        rep = obs.calibration_report(
+            trc.spans(), chunks=result.a2a_chunks,
+            pipeline_rounds=result.pipeline_rounds, a2a_wire_ratio=ratio)
+        print(rep.summary())
+
+
 def _parse_rescale(spec: str) -> tuple[int, int]:
     """'BLOCK:P' -> (block, new_p) for the plan's rescale schedule."""
     try:
@@ -92,7 +111,16 @@ def main() -> None:
                     help="dyngnn only: simulated per-device cap on "
                          "round-resident graph tensors; over-budget "
                          "schedules refuse with DeviceBudgetError")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="enable the repro.obs tracer and export a "
+                         "Perfetto-loadable Chrome trace of the run "
+                         "(phase spans + counters; .jsonl for one event "
+                         "per line); mesh runs also print the "
+                         "round_time_model calibration residuals")
     args = ap.parse_args()
+    if args.trace:
+        from repro import obs
+        obs.configure(enabled=True)
     if args.sampled and args.stream:
         raise SystemExit("--sampled is its own schedule; drop --stream")
     if (args.sample_batch or args.fanout != "10,10") and not args.sampled:
@@ -200,6 +228,7 @@ def main() -> None:
             # the budget gate refusing IS the answer the flag asks for —
             # report it as a one-line CLI outcome, not a traceback
             raise SystemExit(f"refused: {e}") from None
+        _finish_trace(args.trace, result)
         rep = result.transfer_report
         if args.sampled:
             final = (f"{result.losses[-1]:.4f}" if result.losses else "n/a")
@@ -289,6 +318,7 @@ def main() -> None:
             args_c[0], args_c[1] = params, opt_state
             if i % max(args.steps // 10, 1) == 0:
                 print(f"step {i} loss {float(loss):.4f}")
+    _finish_trace(args.trace)
     print("done")
 
 

@@ -1,0 +1,85 @@
+"""Counter/gauge registry: one dotted namespace for the repo's counters.
+
+Absorbs the ad-hoc tallies that previously lived on per-subsystem report
+objects (encoder resyncs, dropped sample lanes, compressed payload
+bytes, guard trips, straggler flags) behind a single thread-safe
+registry.  The legacy report fields stay populated — the registry is the
+*shared* view, keyed by a stable dotted namespace:
+
+======================  ================================================
+``stream.resyncs``       encoder stats-pad overflows -> full-frame resync
+``stream.rounds``        distributed rounds consumed
+``stream.payload_bytes`` wire bytes moved by the distributed stream
+``prefetch.items``       items staged by prefetch worker threads
+``sample.*``             fanout-sampler drops / staged bytes / rounds
+``serve.*``              ingest events, advances, queries, tokens
+``sanitize.guard_trips`` ThreadAffinityGuard rejections
+``elastic.*``            rescale events / payload bytes
+``straggler.flags``      StepTimer EWMA outlier flags
+======================  ================================================
+
+Counters are monotonic within a process; use ``snapshot()`` +
+``delta(before)`` to scope them to one run (that is how
+``RunResult.metrics`` / ``ServeResult.metrics`` are produced).
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Any
+
+__all__ = ["MetricsRegistry", "REGISTRY"]
+
+
+class MetricsRegistry:
+    """Thread-safe counters (monotonic adds) + gauges (last value)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._counters: dict[str, float] = {}
+        self._gauges: dict[str, float] = {}
+
+    # ------------------------------------------------------------ write
+
+    def inc(self, name: str, value: float = 1) -> None:
+        """Add ``value`` to counter ``name`` (created at 0)."""
+        with self._lock:
+            self._counters[name] = self._counters.get(name, 0) + value
+
+    def gauge(self, name: str, value: float) -> None:
+        """Set gauge ``name`` to its latest ``value``."""
+        with self._lock:
+            self._gauges[name] = value
+
+    # ------------------------------------------------------------- read
+
+    def get(self, name: str, default: float = 0) -> float:
+        with self._lock:
+            if name in self._counters:
+                return self._counters[name]
+            return self._gauges.get(name, default)
+
+    def snapshot(self) -> dict[str, Any]:
+        """Deep copy: ``{"counters": {...}, "gauges": {...}}``."""
+        with self._lock:
+            return {"counters": dict(self._counters),
+                    "gauges": dict(self._gauges)}
+
+    def delta(self, before: dict[str, Any]) -> dict[str, Any]:
+        """Counters since a ``snapshot()`` (zero-delta keys omitted);
+        gauges are last-value, not differenced."""
+        now = self.snapshot()
+        base = before.get("counters", {})
+        counters = {k: v - base.get(k, 0)
+                    for k, v in now["counters"].items()
+                    if v != base.get(k, 0)}
+        return {"counters": counters, "gauges": now["gauges"]}
+
+    def clear(self) -> None:
+        with self._lock:
+            self._counters.clear()
+            self._gauges.clear()
+
+
+#: Process-global registry — the one namespace every subsystem feeds.
+REGISTRY = MetricsRegistry()

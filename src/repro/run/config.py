@@ -108,6 +108,9 @@ class RunResult:
     phase timings — ``repro.hoststore.SampleReport``); ``budget_report``
     echoes the ``device_budget_bytes`` gate the run passed
     (``{"required", "budget"}``, None when no budget was set).
+    ``metrics`` is the ``repro.obs`` registry delta scoped to this fit
+    (counters/gauges namespaced per ``docs/observability.md``) plus a
+    per-name summary of the spans the fit recorded under ``"spans"``.
     """
 
     state: TrainState
@@ -121,3 +124,4 @@ class RunResult:
     rescale_report: RescaleReport | None = None
     sample_report: Any = None       # hoststore.SampleReport (sampled mode)
     budget_report: dict | None = None
+    metrics: dict | None = None     # obs counter delta + span summary

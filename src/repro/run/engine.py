@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro import obs
 from repro.data.dyngnn import DTDGPipeline
 from repro.run import workers
 from repro.run.config import ResolvedRun, RunConfig, RunResult
@@ -109,7 +110,15 @@ class Engine:
                   "streamed": workers.fit_streamed,
                   "streamed_mesh": workers.fit_streamed_mesh,
                   "sampled": workers.fit_sampled}[rr.plan.mode]
+        # scope the obs registry / span stream to this fit: the delta of
+        # everything the worker increments and records becomes
+        # RunResult.metrics (mirrors ServeEngine.result())
+        base = obs.metrics_snapshot()
+        trc = obs.get_tracer()
+        spans0 = trc.recorded
         self._last = worker(rr)
+        self._last.metrics = obs.metrics().delta(base)
+        self._last.metrics["spans"] = trc.summary(trc.spans_since(spans0))
         return self._last
 
     def resume(self) -> RunResult:

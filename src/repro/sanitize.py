@@ -99,6 +99,8 @@ class ThreadAffinityGuard:
                 self._depth += 1
                 return self
             self.trips += 1
+            from repro import obs
+            obs.inc("sanitize.guard_trips")
             raise RuntimeError(
                 f"{self.name}: concurrent entry from thread {me} while "
                 f"thread {self._owner} holds the resident state — "

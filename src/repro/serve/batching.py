@@ -21,11 +21,12 @@ The run function owns the actual compute: it receives one padded
 from __future__ import annotations
 
 import queue
-import time
 from dataclasses import dataclass, field
 from typing import Callable
 
 import numpy as np
+
+from repro import obs
 
 
 @dataclass
@@ -74,7 +75,9 @@ class QueryBatcher:
         rows = np.asarray(rows)
         if rows.shape[0] == 0:
             raise ValueError("empty query")
-        p = PendingQuery(rows=rows, submitted_at=time.perf_counter())
+        # span-clock timestamp: latency shares the tracer's clock, so
+        # submit -> flush waits line up with spans in an exported trace
+        p = PendingQuery(rows=rows, submitted_at=obs.now_s())
         try:
             self._q.put_nowait(p)
         except queue.Full:
@@ -95,19 +98,21 @@ class QueryBatcher:
         pending = self._drain()
         if not pending:
             return []
-        t0 = time.perf_counter()
-        rows = np.concatenate([p.rows for p in pending], axis=0)
-        cap = self.buckets[-1]
-        chunks = []
-        for lo in range(0, rows.shape[0], cap):
-            chunk = rows[lo:lo + cap]
-            b = self.bucket_for(chunk.shape[0])
-            padded = np.zeros((b,) + chunk.shape[1:], dtype=chunk.dtype)
-            padded[:chunk.shape[0]] = chunk
-            chunks.append(np.asarray(self.run_fn(padded))[:chunk.shape[0]])
-            self.stats.batches += 1
-        scores = np.concatenate(chunks, axis=0)
-        done = time.perf_counter()
+        with obs.stopwatch("serve.query.flush", cat="serve",
+                           queries=len(pending)) as sw:
+            rows = np.concatenate([p.rows for p in pending], axis=0)
+            cap = self.buckets[-1]
+            chunks = []
+            for lo in range(0, rows.shape[0], cap):
+                chunk = rows[lo:lo + cap]
+                b = self.bucket_for(chunk.shape[0])
+                padded = np.zeros((b,) + chunk.shape[1:], dtype=chunk.dtype)
+                padded[:chunk.shape[0]] = chunk
+                chunks.append(
+                    np.asarray(self.run_fn(padded))[:chunk.shape[0]])
+                self.stats.batches += 1
+            scores = np.concatenate(chunks, axis=0)
+        done = sw.start_s + sw.seconds       # flush end, on the span clock
         off = 0
         for p in pending:
             n = p.rows.shape[0]
@@ -116,7 +121,9 @@ class QueryBatcher:
             self.stats.latencies_ms.append((done - p.submitted_at) * 1e3)
         self.stats.queries += len(pending)
         self.stats.rows += rows.shape[0]
-        self.stats.seconds += done - t0
+        self.stats.seconds += sw.seconds
+        obs.inc("serve.queries", len(pending))
+        obs.inc("serve.query_rows", int(rows.shape[0]))
         return pending
 
     def query(self, rows) -> np.ndarray:

@@ -190,6 +190,9 @@ class ServeResult:
     ingest_seconds: float = 0.0
     query_seconds: float = 0.0
     query_latencies_ms: list[float] = field(default_factory=list)
+    # repro.obs registry delta scoped to this session (counters/gauges
+    # namespaced per docs/observability.md) + per-name span summary
+    metrics: dict | None = None
 
     def latency_ms(self, pct: float) -> float:
         if not self.query_latencies_ms:

@@ -25,13 +25,11 @@ events/s ingest, resyncs).  Full reference: ``docs/serve_api.md``.
 
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import sanitize
+from repro import obs, sanitize
 from repro.core import models as mdl
 from repro.serve.batching import QueryBatcher
 from repro.serve.config import IngestSpec, ServeConfig, ServeResult
@@ -79,6 +77,10 @@ class ServeEngine:
         self.family, self.model = _resolve(config)
         self.report = StreamReport()
         self._result = ServeResult(family=self.family, arch=config.arch)
+        # scope the shared registry to this session: result() reports
+        # the delta against this baseline as ServeResult.metrics
+        self._metrics_base = obs.metrics_snapshot()
+        self._spans_base = obs.get_tracer().recorded
         key = jax.random.PRNGKey(config.seed)
         self._rng = np.random.default_rng(config.seed)
         if self.family == "dyngnn":
@@ -141,10 +143,12 @@ class ServeEngine:
         """Push live CTDG events into the open-window buffer."""
         self._family_guard("ingest", "dyngnn")
         with self._guard:
-            t0 = time.perf_counter()
-            n = self.ingester.push(stream)
-            self._result.ingest_seconds += time.perf_counter() - t0
+            with obs.stopwatch("serve.ingest", cat="serve") as sw:
+                n = self.ingester.push(stream)
+            self._result.ingest_seconds += sw.seconds
             self._result.events_ingested = n
+            # push() returns the running total -> gauge, not counter
+            obs.gauge("serve.events_ingested", n)
             return n
 
     def advance(self, windows: int = 1) -> jax.Array:
@@ -160,17 +164,20 @@ class ServeEngine:
         with self._guard:
             self._node_batcher.flush()
             self._link_batcher.flush()
-            t0 = time.perf_counter()
-            for _ in range(windows):
-                item, frame = self.ingester.close_window()
-                t_idx = self.ingester.next_window - 1
-                item, frame = stage_item((item, frame))
-                edges, mask, vals = self.applier.consume(item)
-                self.z, self.carries = self._advance(
-                    self.params, self.carries, frame, edges, mask, vals,
-                    jnp.int32(t_idx))
-            jax.block_until_ready(self.z)
-            self._result.ingest_seconds += time.perf_counter() - t0
+            with obs.stopwatch("serve.advance", cat="serve",
+                               windows=windows) as sw:
+                for _ in range(windows):
+                    t_idx = self.ingester.next_window
+                    with obs.span("serve.window", cat="serve", t=t_idx):
+                        item, frame = self.ingester.close_window()
+                        item, frame = stage_item((item, frame))
+                        edges, mask, vals = self.applier.consume(item)
+                        self.z, self.carries = self._advance(
+                            self.params, self.carries, frame, edges, mask,
+                            vals, jnp.int32(t_idx))
+                    obs.inc("serve.windows_advanced")
+                jax.block_until_ready(self.z)
+            self._result.ingest_seconds += sw.seconds
             self._result.windows_advanced = self.ingester.next_window
             self._result.resyncs = self.report.resyncs
             return self.z
@@ -266,23 +273,26 @@ class ServeEngine:
             prompts = self._rng.integers(0, cfg.vocab_size,
                                          (b, sc.prompt_len))
         prompts = jnp.asarray(np.asarray(prompts), jnp.int32)
-        t0 = time.perf_counter()
-        logits, cache = self._prefill(self.params, prompts)
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        out = [tok]
-        for _ in range(sc.max_tokens - 1):
-            logits, cache = self._decode(self.params, cache, tok)
+        with obs.stopwatch("serve.generate", cat="serve",
+                           batch=int(prompts.shape[0])) as sw:
+            logits, cache = self._prefill(self.params, prompts)
             tok = jnp.argmax(logits, -1).astype(jnp.int32)
-            out.append(tok)
-        tokens = np.asarray(jax.block_until_ready(
-            jnp.stack(out, axis=1)))
-        dt = time.perf_counter() - t0
+            out = [tok]
+            for _ in range(sc.max_tokens - 1):
+                logits, cache = self._decode(self.params, cache, tok)
+                tok = jnp.argmax(logits, -1).astype(jnp.int32)
+                out.append(tok)
+            tokens = np.asarray(jax.block_until_ready(
+                jnp.stack(out, axis=1)))
+        dt = sw.seconds
         r = self._result
         r.queries += int(prompts.shape[0])
         r.query_batches += 1
         r.tokens_generated += tokens.size
         r.query_seconds += dt
         r.query_latencies_ms.append(dt * 1e3)
+        obs.inc("serve.queries", int(prompts.shape[0]))
+        obs.inc("serve.tokens_generated", tokens.size)
         return tokens
 
     # ------------------------------------------------------------ recsys ---
@@ -319,15 +329,16 @@ class ServeEngine:
         if batch is None:
             batch = self.synthetic_requests(
                 batch_size or self.config.batch_sizes[-1])
-        t0 = time.perf_counter()
-        scores = np.asarray(jax.block_until_ready(
-            self._fwd(self.params, batch)))
-        dt = time.perf_counter() - t0
+        with obs.stopwatch("serve.score", cat="serve") as sw:
+            scores = np.asarray(jax.block_until_ready(
+                self._fwd(self.params, batch)))
+        dt = sw.seconds
         r = self._result
         r.queries += int(scores.shape[0])
         r.query_batches += 1
         r.query_seconds += dt
         r.query_latencies_ms.append(dt * 1e3)
+        obs.inc("serve.queries", int(scores.shape[0]))
         return scores
 
     # ------------------------------------------------------------ result ---
@@ -349,6 +360,10 @@ class ServeEngine:
                                     + self._link_batcher.stats.latencies_ms)
             r.events_ingested = self.ingester.events_ingested
             r.resyncs = self.report.resyncs
+        trc = obs.get_tracer()
+        r.metrics = obs.metrics().delta(self._metrics_base)
+        r.metrics["spans"] = trc.summary(
+            trc.spans_since(self._spans_base))
         return r
 
 

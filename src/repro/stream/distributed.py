@@ -45,11 +45,13 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding
 
+from repro import obs
 from repro.compat import shard_map
 from repro.core import models as mdl
 from repro.core import partition
 from repro.dist import compression as compression_lib
 from repro.dist import sharding as shardlib
+from repro.ft.straggler import StepTimer
 from repro.optim import adamw
 from repro.stream import encoder as enc
 from repro.stream import sharded as stream_sharded
@@ -67,6 +69,7 @@ class DistStreamState:
     losses: list
     per_shard_bytes: list = field(default_factory=list)
     carries: object = None          # final temporal carries (mesh-sharded)
+    step_timer: object = None       # the run's StepTimer (EWMA watchdog)
 
 
 def make_dist_stream_step(cfg: mdl.DynGNNConfig, mesh,
@@ -316,6 +319,66 @@ def _assemble(mesh, spec, shard_blocks, global_shape):
         global_shape, NamedSharding(mesh, spec), list(shard_blocks))
 
 
+def _dist_phase_probe(cfg, opt_cfg, params, opt_state, fr_g, assembled,
+                      lab_g, t0) -> tuple[float, float]:
+    """One-time comp-reference measurement for derived phase spans.
+
+    The round step is one fused jit, so the spatial / a2a / temporal
+    phases cannot be fenced individually inside it.  Mirror the
+    methodology of ``benchmarks/overlap_bench.pipelined_round``: compile
+    the SAME step on a single-shard mesh (where the two all-to-alls
+    degenerate to local copies) and time it on this round's actual data
+    — that is the round's communication-free compute reference.  Per
+    round, ``a2a = step - comp_ref`` and the remaining compute splits
+    between the spatial and temporal stages by their analytic flop
+    ratio (the same split the overlap benchmark feeds
+    ``round_time_model``).  Returns ``(comp_ref_s, f_spatial)``.
+    """
+    from repro.launch.mesh import make_host_mesh
+    mesh1 = make_host_mesh(data=1)
+    step1 = make_dist_stream_step(cfg, mesh1, opt_cfg)
+    host = [np.asarray(x) for x in (fr_g, *assembled, lab_g)]
+    params_h = jax.tree.map(np.asarray, params)
+    opt_h = jax.tree.map(np.asarray, opt_state)
+    carries1 = init_sharded_carries(cfg, params_h, mesh1)
+    trc = obs.get_tracer()
+
+    def run():
+        out = step1(params_h, opt_h, carries1, *host, jnp.int32(t0))
+        jax.block_until_ready(out[-1])
+
+    run()                                        # compile + warm
+    best = None
+    for _ in range(2):
+        with trc.stopwatch("round.probe", cat="probe") as sw:
+            run()
+        best = sw.seconds if best is None else min(best, sw.seconds)
+    mask = np.asarray(assembled[1])
+    e_mean = float(mask.sum()) / mask.shape[0]
+    feat = cfg.hidden
+    fl_spatial = 2 * e_mean * 2 * feat + 2 * cfg.num_nodes * feat * feat
+    fl_temporal = 2 * cfg.window * cfg.num_nodes * feat * feat
+    f_sp = fl_spatial / (fl_spatial + fl_temporal)
+    return best, f_sp
+
+
+def _emit_phase_spans(trc, gr: int, step_span, comp_ref: float,
+                      f_sp: float) -> None:
+    """Derived spatial/a2a/temporal child spans inside one measured
+    ``round.step`` span (marked ``derived`` — see docs/observability.md)."""
+    step_s = step_span.dur_s
+    a2a_s = max(step_s - comp_ref, 0.0)
+    comp_s = step_s - a2a_s
+    sp_s = f_sp * comp_s
+    t0 = step_span.start_s
+    trc.add_span("round.spatial", t0, sp_s, cat="phase.derived",
+                 round=gr, derived=True)
+    trc.add_span("round.a2a", t0 + sp_s, a2a_s, cat="phase.derived",
+                 round=gr, derived=True)
+    trc.add_span("round.temporal", t0 + sp_s + a2a_s, comp_s - sp_s,
+                 cat="phase.derived", round=gr, derived=True)
+
+
 def train_distributed_streamed(cfg: mdl.DynGNNConfig, snapshots, values,
                                frames, labels, *, mesh, axis: str = "data",
                                block_size: int | None = None,
@@ -332,7 +395,9 @@ def train_distributed_streamed(cfg: mdl.DynGNNConfig, snapshots, values,
                                start_round: int = 0, carries=None,
                                stop_fn=None, seed: int = 0,
                                log_every: int = 10,
-                               log_fn=None) -> DistStreamState:
+                               log_fn=None,
+                               step_timer: StepTimer | None = None
+                               ) -> DistStreamState:
     """Stream the trace through snapshot-parallel distributed training.
 
     One round per checkpoint block (``win = block_size`` snapshots): shard
@@ -378,6 +443,15 @@ def train_distributed_streamed(cfg: mdl.DynGNNConfig, snapshots, values,
     ``DistStreamState.carries`` so the caller can re-shard them onto a
     different mesh and continue — these knobs never change the losses of
     the rounds that do run.
+
+    Every round is observed through ``repro.obs`` (one wall-clock
+    ``round`` stopwatch per round feeding the ``step_timer`` EWMA
+    watchdog — pass one to share it across elastic segments).  When the
+    global tracer is enabled the loop additionally records fenced
+    ``round.transfer`` / ``round.step`` spans plus the derived
+    spatial/a2a/temporal phase spans from the one-time comp-reference
+    probe (``_dist_phase_probe``); fencing serializes the schedule, so
+    traced runs measure the serial round (docs/observability.md).
     """
     t_steps = len(snapshots)
     num_procs = mesh.shape[axis]
@@ -454,6 +528,17 @@ def train_distributed_streamed(cfg: mdl.DynGNNConfig, snapshots, values,
     losses: list[float] = []
     initial_carries = carries
     stopped = False
+    timer = step_timer if step_timer is not None else StepTimer()
+    trc = obs.get_tracer()
+    # derived phase spans need fenced (execution-timed) measurements and
+    # the comp-reference probe; both are opt-in via the tracer config
+    derive_phases = trc.enabled and trc.phases and trc.fencing
+    probe: tuple[float, float] | None = None      # (comp_ref_s, f_spatial)
+    obs.inc("stream.payload_bytes", sum(per_shard_bytes))
+    # span round index: monotonic across epochs (the model-time index
+    # ``gr`` deliberately restarts each epoch, which would collide trace
+    # rounds and calibration keys)
+    ridx = start_round
     for _ in range(num_epochs):
         host = dist_round_stream(shard_streams, frames, labels, win, bsl,
                                  start_round=start_round)
@@ -476,26 +561,44 @@ def train_distributed_streamed(cfg: mdl.DynGNNConfig, snapshots, values,
         in_flight = None        # round r-1's device loss (pipeline_rounds)
         try:
             for r, (items, fr_g, lab_g) in enumerate(rounds):
-                assembled = reconstruct_round(r, items, appliers, stackers)
-                if use_comp:
-                    params, opt_state, carries, comm_res, loss = step_fn(
-                        params, opt_state, carries, comm_res, fr_g,
-                        *assembled, lab_g,
-                        jnp.int32((start_round + r) * win))
-                else:
-                    params, opt_state, carries, loss = step_fn(
-                        params, opt_state, carries, fr_g, *assembled,
-                        lab_g, jnp.int32((start_round + r) * win))
-                if pipeline_rounds:
-                    # force the PREVIOUS round only now: round r's
-                    # delta-applies and step are already dispatched, so
-                    # they execute while the host blocks on loss r-1.
-                    if in_flight is not None:
-                        emit(in_flight)
-                    in_flight = loss
-                else:
-                    emit(loss)
-                if stop_fn is not None and stop_fn(start_round + r):
+                gr = start_round + r
+                with trc.stopwatch("round", cat="round", round=ridx,
+                                   p=num_procs, win=win) as round_sw:
+                    with trc.span("round.transfer", round=ridx) as tr_sp:
+                        assembled = reconstruct_round(r, items, appliers,
+                                                      stackers)
+                        tr_sp.fence(assembled)
+                    with trc.span("round.step", round=ridx) as st_sp:
+                        if use_comp:
+                            params, opt_state, carries, comm_res, loss = \
+                                step_fn(params, opt_state, carries,
+                                        comm_res, fr_g, *assembled, lab_g,
+                                        jnp.int32(gr * win))
+                        else:
+                            params, opt_state, carries, loss = step_fn(
+                                params, opt_state, carries, fr_g,
+                                *assembled, lab_g, jnp.int32(gr * win))
+                        st_sp.fence(loss)
+                    if pipeline_rounds:
+                        # force the PREVIOUS round only now: round r's
+                        # delta-applies and step are already dispatched,
+                        # so they execute while the host blocks on loss
+                        # r-1.
+                        if in_flight is not None:
+                            emit(in_flight)
+                        in_flight = loss
+                    else:
+                        emit(loss)
+                obs.inc("stream.rounds")
+                timer.observe(round_sw.seconds)  # counts straggler.flags
+                if derive_phases:
+                    if probe is None:
+                        probe = _dist_phase_probe(
+                            cfg, opt_cfg, params, opt_state, fr_g,
+                            assembled, lab_g, gr * win)
+                    _emit_phase_spans(trc, ridx, st_sp, *probe)
+                ridx += 1
+                if stop_fn is not None and stop_fn(gr):
                     stopped = True
                     break
             if in_flight is not None:   # drain the pipelined epoch tail
@@ -507,4 +610,4 @@ def train_distributed_streamed(cfg: mdl.DynGNNConfig, snapshots, values,
             break
     return DistStreamState(params=params, opt_state=opt_state,
                            losses=losses, per_shard_bytes=per_shard_bytes,
-                           carries=carries)
+                           carries=carries, step_timer=timer)

@@ -26,6 +26,7 @@ from typing import Iterator
 
 import numpy as np
 
+from repro import obs
 from repro.core.graphdiff import FullSnapshot, SnapshotDelta, _edge_key
 from repro.stream import wire as wirelib
 
@@ -60,6 +61,8 @@ class StreamReport:
         self.worst_drops = max(self.worst_drops, err.drops)
         self.worst_adds = max(self.worst_adds, err.adds)
         self.resync_steps.append(step)
+        # mirror into the shared namespace (docs/observability.md)
+        obs.inc("stream.resyncs")
 
 
 @dataclass(frozen=True)

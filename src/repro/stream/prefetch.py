@@ -22,7 +22,7 @@ from typing import Any, Callable, Iterable, Iterator
 import jax
 import jax.numpy as jnp
 
-from repro import sanitize
+from repro import obs, sanitize
 from repro.core import graphdiff
 from repro.core.graphdiff import FullSnapshot, SnapshotDelta
 from repro.stream.wire import QuantizedDelta
@@ -72,11 +72,17 @@ class PrefetchIterator:
         return False
 
     def _worker(self, it: Iterator) -> None:
+        trc = obs.get_tracer()
         try:
             for item in it:
                 if self._stop.is_set():
                     return
-                if not self._put(self._stage(item)):
+                # staging span lives on the worker thread's trace track,
+                # so overlap with the consumer's round spans is visible
+                with trc.span("prefetch.stage", cat="prefetch"):
+                    staged = self._stage(item)
+                obs.inc("prefetch.items")
+                if not self._put(staged):
                     return
         except BaseException as e:  # noqa: BLE001 — re-raised on consumer
             self._err = e
@@ -89,7 +95,8 @@ class PrefetchIterator:
     def __next__(self):
         if self._done:
             raise StopIteration
-        item = self._q.get()
+        with obs.span("prefetch.wait", cat="prefetch"):
+            item = self._q.get()
         if item is _SENTINEL:
             self._done = True
             if self._err is not None:

@@ -13,7 +13,7 @@ if str(REPO) not in sys.path:
 
 from tools.dynlint import core  # noqa: E402
 from tools.dynlint.passes import (donation, interpret_mode, locks,  # noqa: E402
-                                  prng, shard_axes, static_shapes)
+                                  prng, shard_axes, static_shapes, timing)
 
 
 def run_pass(pass_mod, code, path="src/repro/fixture.py"):
@@ -443,6 +443,71 @@ def test_cli_select_subset(tmp_path):
     bad.write_text('spec = P("data", None)\n')
     assert core.main([str(bad), "--select", "prng"]) == 0
     assert core.main([str(bad), "--select", "shard_axes"]) == 1
+
+
+# -------------------------------------------------------------- timing ------
+
+def test_timing_flags_raw_clock_reads():
+    bad = """
+    import time
+
+    def measure(fn):
+        t0 = time.perf_counter()
+        fn()
+        return time.monotonic() - t0
+    """
+    fs = run_pass(timing, bad)
+    assert len(fs) == 2
+    assert "perf_counter" in fs[0].message and "repro.obs" in fs[0].message
+
+
+def test_timing_flags_aliased_and_from_imports():
+    bad = """
+    import time as clock
+    from time import perf_counter_ns as tick
+
+    def f():
+        return clock.perf_counter_ns() + tick()
+    """
+    fs = run_pass(timing, bad)
+    assert len(fs) == 2
+
+
+def test_timing_ignores_wall_clock_and_other_modules():
+    good = """
+    import time
+
+    def stamp():
+        return time.time()          # wall clock: provenance, not perf
+
+    def nap():
+        time.sleep(0.1)
+
+    class T:
+        def perf_counter(self):     # not the time module
+            return 0
+    t = T().perf_counter()
+    """
+    assert run_pass(timing, good) == []
+
+
+def test_timing_exempts_obs_ft_and_out_of_src():
+    code = """
+    import time
+    t0 = time.perf_counter()
+    """
+    assert run_pass(timing, code, path="src/repro/obs/trace.py") == []
+    assert run_pass(timing, code, path="src/repro/ft/straggler.py") == []
+    assert run_pass(timing, code, path="benchmarks/common.py") == []
+    assert len(run_pass(timing, code, path="src/repro/stream/x.py")) == 1
+
+
+def test_timing_pragma_allows():
+    code = """
+    import time
+    t0 = time.perf_counter()  # dynlint: allow[timing]
+    """
+    assert run_pass(timing, code) == []
 
 
 def test_repo_src_is_dynlint_clean():

@@ -157,6 +157,81 @@ def test_straggler_timer_flags_outliers():
     assert t.straggler_rate > 0
 
 
+def test_straggler_timer_ewma_recurrence():
+    """The smoothed moments follow the documented EW update exactly:
+    mean += alpha*diff; var = (1-alpha)*(var + alpha*diff^2)."""
+    t = straggler.StepTimer(window=9, threshold_std=3.0, min_steps=3)
+    assert t.alpha == pytest.approx(2.0 / 10.0)
+    seq = [0.10, 0.12, 0.08, 0.11, 0.30, 0.10]
+    mean, var = seq[0], 0.0
+    t.observe(seq[0])
+    for dt in seq[1:]:
+        t.observe(dt)
+        diff = dt - mean
+        mean += t.alpha * diff
+        var = (1 - t.alpha) * (var + t.alpha * diff * diff)
+    assert t.mean == pytest.approx(mean)
+    assert t.var == pytest.approx(var)
+    assert t.step_idx == len(seq)
+    assert list(t.times) == seq
+
+
+def test_straggler_timer_outlier_cannot_mask_itself():
+    """The flag check runs BEFORE the EWMA update, so a huge step is
+    judged against the pre-outlier estimate."""
+    t = straggler.StepTimer(window=50, threshold_std=3.0, min_steps=5)
+    for _ in range(20):
+        t.observe(0.1)
+    assert t.observe(5.0) is True
+    assert t.flagged_steps == [21]
+
+
+def test_straggler_timer_reset():
+    t = straggler.StepTimer(window=10, min_steps=2)
+    for _ in range(8):
+        t.observe(0.2)
+    t.observe(9.0)
+    t.reset()
+    assert t.mean == 0.0 and t.var == 0.0 and t.step_idx == 0
+    assert not t.times and not t.flagged_steps
+    # post-reset the estimate re-seeds from scratch: a step that would
+    # have been flagged against the old mean passes quietly
+    assert t.observe(9.0) is False
+    assert t.mean == pytest.approx(9.0)
+
+
+def test_straggler_timer_counts_flags_in_obs():
+    from repro import obs
+    before = obs.metrics_snapshot()
+    t = straggler.StepTimer(window=50, threshold_std=3.0, min_steps=5)
+    for _ in range(20):
+        t.observe(0.1)
+    t.observe(5.0)
+    d = obs.metrics().delta(before)
+    assert d["counters"]["straggler.flags"] == 1
+
+
+def test_step_timer_wired_through_distributed_stream():
+    """An injected StepTimer observes every distributed round."""
+    from repro.core.models import DynGNNConfig
+    from repro.data.dyngnn import synthetic_dataset
+    from repro.launch.mesh import make_host_mesh
+    from repro.stream import distributed as dist
+    n, t_steps, nb = 48, 16, 2
+    ds = synthetic_dataset(n, t_steps, density=2.0, churn=0.1,
+                           smoothing_mode="mproduct", window=3, seed=0)
+    cfg = DynGNNConfig(model="tmgcn", num_nodes=n, num_steps=t_steps,
+                       window=3, checkpoint_blocks=nb)
+    timer = straggler.StepTimer(window=8)
+    st = dist.train_distributed_streamed(
+        cfg, ds.snapshots, ds.values, np.asarray(ds.frames),
+        np.asarray(ds.labels), mesh=make_host_mesh(data=4, model=1),
+        num_epochs=2, step_timer=timer)
+    assert st.step_timer is timer
+    assert timer.step_idx == len(st.losses) == 2 * nb
+    assert len(timer.times) == 2 * nb
+
+
 def test_backup_shard_schedule():
     sched = straggler.BackupShardSchedule(num_workers=8, num_backups=2)
     times = [0.1] * 8

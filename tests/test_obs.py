@@ -1,0 +1,316 @@
+"""repro.obs contract tests: tracer semantics (nesting, ring bounding,
+thread safety, the disabled no-op), metrics registry deltas, Perfetto
+export round-trip + schema validation, calibration against
+``round_time_model``, and the end-to-end traced streamed_mesh fit that
+the CI trace-smoke step gates on."""
+
+import json
+import threading
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro import obs
+from repro.core.models import DynGNNConfig
+from repro.obs.trace import NULL_SPAN, Tracer
+from repro.run import Engine, ExecutionPlan, RunConfig, SyntheticTrace
+
+N, T, NB = 48, 16, 2
+
+
+# --------------------------------------------------------------- tracer ----
+
+def test_span_records_timing_and_attrs():
+    trc = Tracer(enabled=True, fence=False)
+    with trc.span("outer", round=3):
+        with trc.span("inner", cat="sub"):
+            pass
+    spans = trc.spans()
+    assert [s.name for s in spans] == ["inner", "outer"]  # exit order
+    outer = spans[1]
+    assert outer.attrs == {"round": 3}
+    assert outer.dur_s >= spans[0].dur_s >= 0.0
+    # containment on one thread: inner lies inside outer on the clock
+    assert outer.start_s <= spans[0].start_s
+    assert (outer.start_s + outer.dur_s
+            >= spans[0].start_s + spans[0].dur_s)
+    assert spans[0].tid == outer.tid == threading.get_ident()
+
+
+def test_disabled_tracer_is_a_true_noop():
+    trc = Tracer(enabled=False)
+    sp = trc.span("anything", round=1)
+    assert sp is NULL_SPAN              # shared object, no allocation
+    with sp as s:
+        assert s.fence("x") == "x"      # fence is identity
+    assert trc.spans() == [] and trc.recorded == 0
+    # the module-level helper takes the same fast path
+    assert obs.span("x") is NULL_SPAN or obs.enabled()
+
+
+def test_stopwatch_measures_even_when_disabled():
+    trc = Tracer(enabled=False)
+    with trc.stopwatch("work") as sw:
+        sum(range(1000))
+    assert sw.seconds > 0.0
+    assert trc.spans() == []            # measured, but not recorded
+    trc2 = Tracer(enabled=True, fence=False)
+    with trc2.stopwatch("work", round=7) as sw2:
+        pass
+    (sp,) = trc2.spans()
+    assert sp.name == "work" and sp.attrs == {"round": 7}
+    assert sp.dur_s == sw2.seconds
+
+
+def test_ring_bounds_and_counts_drops():
+    trc = Tracer(enabled=True, capacity=8, fence=False)
+    for i in range(22):
+        with trc.span("s", i=i):
+            pass
+    assert len(trc.spans()) == 8
+    assert trc.recorded == 22 and trc.dropped == 14
+    # the ring keeps the newest spans
+    assert [s.attrs["i"] for s in trc.spans()] == list(range(14, 22))
+
+
+def test_tracer_thread_safety():
+    trc = Tracer(enabled=True, capacity=10_000, fence=False)
+
+    def worker(k):
+        for i in range(100):
+            with trc.span("t", k=k, i=i):
+                pass
+
+    threads = [threading.Thread(target=worker, args=(k,)) for k in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert trc.recorded == 800 and trc.dropped == 0
+    # all 8 workers' spans landed intact (tids may be reused by the OS)
+    by_k = {k: 0 for k in range(8)}
+    for s in trc.spans():
+        by_k[s.attrs["k"]] += 1
+    assert all(v == 100 for v in by_k.values())
+
+
+def test_spans_since_checkpoint():
+    trc = Tracer(enabled=True, fence=False)
+    with trc.span("before"):
+        pass
+    mark = trc.recorded
+    with trc.span("after"):
+        pass
+    assert [s.name for s in trc.spans_since(mark)] == ["after"]
+    assert trc.summary(trc.spans_since(mark))["after"]["count"] == 1
+
+
+# -------------------------------------------------------------- metrics ----
+
+def test_metrics_inc_gauge_snapshot_delta():
+    reg = obs.MetricsRegistry()
+    reg.inc("a.count")
+    reg.inc("a.count", 4)
+    reg.gauge("b.level", 7.5)
+    before = reg.snapshot()
+    reg.inc("a.count", 2)
+    reg.inc("c.new", 3)
+    reg.gauge("b.level", 9.0)
+    d = reg.delta(before)
+    assert d["counters"] == {"a.count": 2, "c.new": 3}
+    assert d["gauges"]["b.level"] == 9.0
+    assert reg.get("a.count") == 7
+
+
+def test_metrics_thread_safe_inc():
+    reg = obs.MetricsRegistry()
+
+    def worker():
+        for _ in range(1000):
+            reg.inc("n")
+
+    threads = [threading.Thread(target=worker) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert reg.get("n") == 8000
+
+
+def test_stream_report_mirrors_resync_counter():
+    """Ad-hoc report counters and the obs registry stay in lockstep."""
+    from repro.stream.encoder import ChurnOverflowError, StreamReport
+    before = obs.metrics_snapshot()
+    rep = StreamReport()
+    rep.note_overflow(3, ChurnOverflowError(9, 2, 4, 4))
+    d = obs.metrics().delta(before)
+    assert d["counters"]["stream.resyncs"] == 1 == rep.resyncs
+
+
+# --------------------------------------------------------------- export ----
+
+@pytest.mark.parametrize("suffix", [".json", ".jsonl"])
+def test_export_load_validate_roundtrip(tmp_path, suffix):
+    trc = Tracer(enabled=True, fence=False)
+    with trc.span("round", cat="round", round=0):
+        with trc.span("round.transfer", round=0):
+            pass
+    path = tmp_path / f"trace{suffix}"
+    obs.export_trace(path, tracer=trc,
+                     metrics={"counters": {"stream.rounds": 1},
+                              "gauges": {}})
+    events, meta = obs.load_trace(path)
+    assert obs.validate_trace(events) == []
+    assert meta["format"] == "chrome-trace"
+    assert meta["dropped_spans"] == 0
+    by_ph = {}
+    for ev in events:
+        by_ph.setdefault(ev["ph"], []).append(ev)
+    names = {ev["name"] for ev in by_ph["X"]}
+    assert names == {"round", "round.transfer"}
+    assert any(ev["name"] == "stream.rounds" for ev in by_ph["C"])
+    assert any(ev["name"] == "thread_name" for ev in by_ph["M"])
+    # timestamps are µs and the args carry the span attrs
+    rnd = next(ev for ev in by_ph["X"] if ev["name"] == "round")
+    assert rnd["args"]["round"] == 0 and rnd["dur"] >= 0
+
+
+def test_validate_trace_catches_malformed_events(tmp_path):
+    assert obs.validate_trace([]) == ["trace contains no events"]
+    bad = [
+        {"ph": "X", "ts": 0, "pid": 1, "tid": 1, "dur": 1},   # no name
+        {"name": "a", "ph": "Z", "ts": 0, "pid": 1, "tid": 1},
+        {"name": "b", "ph": "X", "ts": -5, "pid": 1, "tid": 1, "dur": 1},
+        {"name": "c", "ph": "X", "ts": 0, "pid": 1, "tid": 1},  # no dur
+        {"name": "d", "ph": "X", "ts": 0, "pid": 1, "tid": 1, "dur": 1,
+         "args": "nope"},
+    ]
+    problems = obs.validate_trace(bad)
+    assert len(problems) == 5
+    # a hand-broken file fails through the same path the CI step runs
+    p = tmp_path / "t.json"
+    p.write_text(json.dumps({"traceEvents": bad}))
+    events, _ = obs.load_trace(p)
+    assert obs.validate_trace(events)
+
+
+# ---------------------------------------------------------- calibration ----
+
+def _synthetic_round_spans(trc, r, transfer, spatial, a2a, temporal,
+                           extra=0.0):
+    t0 = float(r)
+    total = transfer + spatial + a2a + temporal + extra
+    trc.add_span("round", t0, total, cat="round", round=r)
+    off = 0.0
+    for name, dur in (("transfer", transfer), ("spatial", spatial),
+                      ("a2a", a2a), ("temporal", temporal)):
+        trc.add_span(f"round.{name}", t0 + off, dur, round=r)
+        off += dur
+
+
+def test_calibration_zero_residual_on_model_exact_rounds():
+    trc = Tracer(enabled=True, fence=False)
+    for r in range(3):
+        _synthetic_round_spans(trc, r, 0.010, 0.020, 0.008, 0.030)
+    rep = obs.calibration_report(trc.spans())
+    assert len(rep.rows) == 3 and rep.extra["skipped"] == 0
+    for row in rep.rows:
+        assert abs(row.residual_s) < 1e-9        # serial model is the sum
+        assert all(abs(v) < 1e-9
+                   for v in row.phase_residual_s.values())
+    assert rep.baseline_s["spatial"] == pytest.approx(0.020)
+    assert "3 rounds" in rep.summary()
+
+
+def test_calibration_flags_straggler_phase_and_skips_incomplete():
+    trc = Tracer(enabled=True, fence=False)
+    for r in range(4):
+        a2a = 0.008 if r != 2 else 0.020         # round 2 lost time in a2a
+        _synthetic_round_spans(trc, r, 0.010, 0.020, a2a, 0.030)
+    trc.add_span("round", 9.0, 0.1, cat="round", round=9)  # phases missing
+    rep = obs.calibration_report(trc.spans())
+    assert rep.extra["skipped"] == 1
+    row = next(r_ for r_ in rep.rows if r_.round == 2)
+    assert row.phase_residual_s["a2a"] == pytest.approx(0.012)
+    assert row.phase_residual_s["temporal"] == pytest.approx(0.0)
+
+
+def test_calibration_accepts_loaded_trace_events(tmp_path):
+    trc = Tracer(enabled=True, fence=False)
+    _synthetic_round_spans(trc, 0, 0.010, 0.020, 0.008, 0.030)
+    path = tmp_path / "t.json"
+    obs.export_trace(path, tracer=trc, metrics={})
+    events, _ = obs.load_trace(path)
+    rep = obs.calibration_report(events)
+    assert len(rep.rows) == 1
+    assert rep.rows[0].predicted_s == pytest.approx(0.068, rel=1e-6)
+
+
+# ------------------------------------------------------------------ e2e ----
+
+@pytest.mark.skipif(len(jax.devices()) < 4, reason="needs 4 host devices")
+def test_traced_streamed_mesh_fit_exports_full_phase_coverage(tmp_path):
+    """The acceptance path: a traced 4-shard fit yields all four
+    round_time_model phases for every round, prefetch thread spans,
+    RunResult.metrics, and a valid exported trace."""
+    prev = obs.get_tracer()
+    obs.configure(enabled=True)
+    try:
+        cfg = DynGNNConfig(model="tmgcn", num_nodes=N, num_steps=T,
+                           window=3, checkpoint_blocks=NB)
+        data = SyntheticTrace(num_nodes=N, num_steps=T, density=2.0,
+                              churn=0.1, smoothing_mode="mproduct",
+                              window=3)
+        plan = ExecutionPlan(mode="streamed_mesh", shards=4, num_epochs=2)
+        result = Engine(RunConfig(model=cfg, data=data, plan=plan)).fit()
+
+        trc = obs.get_tracer()
+        per_round = obs.phase_durations(trc.spans())
+        rounds = sorted(per_round)
+        assert len(rounds) == 2 * NB
+        for r in rounds:
+            missing = [p for p in obs.PHASES if p not in per_round[r]]
+            assert not missing, f"round {r} missing phases {missing}"
+            assert "round" in per_round[r]
+        names = {s.name for s in trc.spans()}
+        assert {"prefetch.stage", "prefetch.wait", "round.step"} <= names
+
+        # session-scoped metrics landed on the result
+        m = result.metrics
+        assert m["counters"]["stream.rounds"] == 2 * NB
+        assert m["counters"]["prefetch.items"] >= 2 * NB
+        assert m["counters"]["stream.payload_bytes"] > 0
+        assert m["spans"]["round"]["count"] == 2 * NB
+
+        # calibration joins every complete round against the model
+        rep = obs.calibration_report(trc.spans())
+        assert len(rep.rows) == 2 * NB
+        assert all(row.predicted_s > 0 for row in rep.rows)
+
+        # and the whole thing survives the CI export -> check path
+        path = tmp_path / "trace.json"
+        obs.export_trace(path)
+        events, _ = obs.load_trace(path)
+        assert obs.validate_trace(events) == []
+    finally:
+        obs.set_tracer(prev)
+
+
+def test_untraced_fit_records_no_spans_but_still_counts():
+    """Tracing off (the default): zero spans, async schedule untouched,
+    but counters and RunResult.metrics still work."""
+    assert not obs.enabled()
+    trc = obs.get_tracer()
+    before = trc.recorded
+    cfg = DynGNNConfig(model="cdgcn", num_nodes=N, num_steps=T,
+                       window=3, checkpoint_blocks=NB)
+    data = SyntheticTrace(num_nodes=N, num_steps=T, density=2.0,
+                          churn=0.1, smoothing_mode="none", window=3)
+    plan = ExecutionPlan(mode="streamed", shards=1, num_epochs=1)
+    result = Engine(RunConfig(model=cfg, data=data, plan=plan)).fit()
+    assert trc.recorded == before           # no span escaped the no-op
+    assert result.metrics is not None
+    assert result.metrics["spans"] == {}
+    assert np.isfinite(result.losses).all()

@@ -123,7 +123,7 @@ def test_grad_compression_trains():
     def local_step(w, res, xb, yb):
         g = jax.grad(lambda w_: jnp.mean((xb @ w_ - yb) ** 2))(w)
         red, res = compression.compressed_psum({"w": g}, "data", {"w": res})
-        return w - 0.1 * red["w"], res
+        return w - 0.1 * red["w"], res["w"]
 
     fn = jax.jit(shard_map(
         local_step, mesh=mesh,

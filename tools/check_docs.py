@@ -29,7 +29,7 @@ from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
 EXAMPLE_DOCS = ("run_api.md", "serve_api.md", "sampling.md",
-                "compression.md")
+                "compression.md", "observability.md")
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
 FENCE_RE = re.compile(r"^```python\n(.*?)^```", re.MULTILINE | re.DOTALL)

@@ -1,7 +1,7 @@
 """Pass registry.  Order is the order findings are attributed in."""
 
 from tools.dynlint.passes import (donation, interpret_mode, locks, prng,
-                                  shard_axes, static_shapes)
+                                  shard_axes, static_shapes, timing)
 
 ALL_PASSES = (
     donation,
@@ -10,6 +10,7 @@ ALL_PASSES = (
     shard_axes,
     static_shapes,
     locks,
+    timing,
 )
 
 __all__ = ["ALL_PASSES"]
